@@ -1,0 +1,54 @@
+"""Paper Fig 5c: community detection -- 80% checkSCC queries / 20%
+updates.  Queries are wait-free in the paper; here a query batch is one
+vectorized gather (strictly stronger), so we report query and update
+throughput both separately and for the mixed 80/20 stream.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import community, dynamic
+from repro.data import pipeline
+from benchmarks import common
+
+
+def run(nv=2048, batches=(64, 256, 1024, 4096), iters=3, quick=False):
+    if quick:
+        nv, batches, iters = 512, (64, 512), 2
+    cfg, state0 = common.make_engine(nv=nv)
+    rng = np.random.default_rng(0)
+    rows = []
+    for b in batches:
+        q = b * 4 // 5           # 80% checks
+        u = b - q                # 20% updates
+        qu = np.asarray(rng.integers(0, nv, q))
+        qv = np.asarray(rng.integers(0, nv, q))
+        ops = pipeline.op_stream(nv, max(u, 1), step=2, add_frac=0.5)
+
+        def mixed(state):
+            same = community.check_scc(state, qu, qv)
+            st2, ok = dynamic.apply_batch(state, ops, cfg)
+            return same, st2.ccid, ok
+
+        t, _ = common.time_fn(mixed, state0, iters=iters)
+        rows.append(("community80/20", f"smscc_b{b}", b,
+                     round(b / t, 1), round(t * 1e3, 2)))
+        # pure query throughput (wait-free analogue)
+        t, _ = common.time_fn(
+            lambda s: community.check_scc(s, qu, qv), state0, iters=iters)
+        rows.append(("checkscc_only", f"q{q}", q, round(q / t, 1),
+                     round(t * 1e3, 2)))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    rows = run(quick=ap.parse_args().quick)
+    common.emit(rows, ["workload", "algo", "ops", "ops_per_s", "ms"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Fig 5a: incremental-only SCC maintenance (100% Add V+E).
+
+SMDSCC in the paper's naming: starting from a sparse graph, stream pure
+insertion batches; repair = limited-Tarjan-analogue merge only.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import baselines, dynamic
+from repro.data import pipeline
+from benchmarks import common
+
+
+def run(nv=2048, batches=(16, 64, 256, 1024), seq_ops=64, iters=3,
+        quick=False):
+    if quick:
+        nv, batches, seq_ops, iters = 512, (16, 128), 32, 2
+    cfg, state0 = common.make_engine(nv=nv, avg_degree=2)
+    rows = []
+    for name, fn in (("seq", baselines.sequential_apply),
+                     ("coarse", baselines.coarse_apply)):
+        ops = pipeline.op_stream(nv, seq_ops, step=0, add_frac=1.0)
+        t, _ = common.time_fn(lambda o: fn(state0, o, cfg), ops,
+                              iters=iters)
+        rows.append(("incremental", name, seq_ops,
+                     round(seq_ops / t, 1), round(t * 1e3, 2)))
+    for b in batches:
+        ops = pipeline.op_stream(nv, b, step=1, add_frac=1.0)
+        t, _ = common.time_fn(
+            lambda o: dynamic.apply_batch(state0, o, cfg), ops,
+            iters=iters)
+        rows.append(("incremental", f"smscc_b{b}", b, round(b / t, 1),
+                     round(t * 1e3, 2)))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    rows = run(quick=ap.parse_args().quick)
+    common.emit(rows, ["workload", "algo", "ops", "ops_per_s", "ms"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle.
+
+Wall-times on CPU interpret mode are NOT TPU performance; the value here
+is (a) correctness at bench scale and (b) the oracle-path timing that the
+CPU examples actually use.  TPU projections live in §Roofline.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import embedding_bag as eb
+from repro.kernels import flash_attention as fa
+from repro.kernels import reach_blockmm as rb
+from benchmarks import common
+
+
+def run(quick=False):
+    rows = []
+    n = 128 if quick else 256
+    rng = np.random.default_rng(0)
+    adj = jnp.asarray(rng.random((n, n)) < 0.02)
+    f = jnp.asarray(rng.random((n, 64)) < 0.01)
+    t, _ = common.time_fn(
+        lambda a, b: rb.frontier_step(a, b, impl="xla"), adj, f)
+    rows.append(("reach_frontier_xla", n, round(t * 1e3, 3)))
+    t, _ = common.time_fn(
+        lambda a, b: rb.frontier_step(a, b, block=128,
+                                      impl="pallas_interpret"), adj, f)
+    rows.append(("reach_frontier_pallas_interp", n, round(t * 1e3, 3)))
+
+    s, d = (128, 32) if quick else (256, 64)
+    q = jnp.asarray(rng.normal(size=(1, 4, s, d)).astype(np.float32))
+    t, _ = common.time_fn(
+        lambda q: fa.mha(q, q, q, causal=True, impl="xla"), q)
+    rows.append(("flash_attn_xla", s, round(t * 1e3, 3)))
+    t, _ = common.time_fn(
+        lambda q: fa.mha(q, q, q, causal=True, bq=64, bk=64,
+                         impl="pallas_interpret"), q)
+    rows.append(("flash_attn_pallas_interp", s, round(t * 1e3, 3)))
+
+    v, dd, b, l = (1000, 32, 64, 16) if quick else (10000, 64, 256, 32)
+    table = jnp.asarray(rng.normal(size=(v, dd)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(-1, v, (b, l)), jnp.int32)
+    t, _ = common.time_fn(
+        lambda t_, i: eb.embedding_bag(t_, i, impl="xla"), table, ids)
+    rows.append(("embedding_bag_xla", b, round(t * 1e3, 3)))
+    t, _ = common.time_fn(
+        lambda t_, i: eb.embedding_bag(t_, i, bb=8, bv=128,
+                                       impl="pallas_interpret"),
+        table, ids)
+    rows.append(("embedding_bag_pallas_interp", b, round(t * 1e3, 3)))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    rows = run(quick=ap.parse_args().quick)
+    common.emit(rows, ["kernel", "size", "ms"])
+
+
+if __name__ == "__main__":
+    main()

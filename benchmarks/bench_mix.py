@@ -1,0 +1,65 @@
+"""Paper Fig 4 (a/b/c): throughput of mixed add/remove workloads.
+
+The paper reports ops/sec over 20 s for 1..60 threads; our concurrency
+unit is the batch lane, so throughput is reported vs batch size B for:
+
+  Seq     sequential_apply   -- one op at a time, localized repair
+  Coarse  coarse_apply       -- one op at a time, full recompute ("global
+                                lock" semantics: no locality exploited)
+  SMSCC   dynamic.apply_batch -- B lanes, one unified localized repair
+
+Mixes: --mix 50 (50/50 add/rem, Fig 4a), 90 (Fig 4b), 10 (Fig 4c).
+Variants: --no-vertex-ops restricts to edges (paper's `woDV` mode).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import baselines, dynamic
+from repro.data import pipeline
+from benchmarks import common
+
+
+def run(mix=50, nv=2048, batches=(16, 64, 256, 1024), seq_ops=64,
+        include_vertex_ops=True, iters=3, quick=False):
+    if quick:
+        nv, batches, seq_ops, iters = 512, (16, 128), 32, 2
+    cfg, state0 = common.make_engine(nv=nv)
+    add_frac = mix / 100.0
+    rows = []
+
+    # baselines: per-op application of a seq_ops-long stream
+    for name, fn in (("seq", baselines.sequential_apply),
+                     ("coarse", baselines.coarse_apply)):
+        ops = pipeline.op_stream(nv, seq_ops, step=0, add_frac=add_frac,
+                                 include_vertex_ops=include_vertex_ops)
+        t, _ = common.time_fn(lambda o: fn(state0, o, cfg), ops,
+                              iters=iters)
+        rows.append((f"mix{mix}", name, seq_ops, round(seq_ops / t, 1),
+                     round(t * 1e3, 2)))
+
+    # SMSCC batched
+    for b in batches:
+        ops = pipeline.op_stream(nv, b, step=1, add_frac=add_frac,
+                                 include_vertex_ops=include_vertex_ops)
+        t, _ = common.time_fn(
+            lambda o: dynamic.apply_batch(state0, o, cfg), ops,
+            iters=iters)
+        rows.append((f"mix{mix}", f"smscc_b{b}", b, round(b / t, 1),
+                     round(t * 1e3, 2)))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mix", type=int, default=50)
+    ap.add_argument("--no-vertex-ops", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    rows = run(mix=args.mix, include_vertex_ops=not args.no_vertex_ops,
+               quick=args.quick)
+    common.emit(rows, ["workload", "algo", "ops", "ops_per_s", "ms"])
+
+
+if __name__ == "__main__":
+    main()

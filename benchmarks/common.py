@@ -1,0 +1,47 @@
+"""Shared benchmark harness: deterministic graphs, timing, CSV output."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dynamic, graph_state as gs
+
+
+def make_engine(nv=2048, ec=2 ** 14, seed=0, avg_degree=4,
+                dense_capacity=0):
+    """Pre-loaded dynamic engine: random digraph, labels computed."""
+    cfg = gs.GraphConfig(n_vertices=nv, edge_capacity=ec,
+                         max_probes=128, max_outer=64, max_inner=128,
+                         dense_capacity=dense_capacity)
+    rng = np.random.default_rng(seed)
+    e = nv * avg_degree
+    src = rng.integers(0, nv, e)
+    dst = rng.integers(0, nv, e)
+    state = gs.from_arrays(cfg, src, dst)
+    state = dynamic.recompute(state, cfg)
+    jax.block_until_ready(state.ccid)
+    return cfg, state
+
+
+def time_fn(fn, *args, iters=3, warmup=1):
+    """Median wall time of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

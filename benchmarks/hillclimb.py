@@ -1,0 +1,206 @@
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> re-analyse.
+
+For each chosen cell, run the baseline plus a ladder of config overrides;
+every rung is a full dry-run (lower + compile + roofline terms) so the
+deltas are measured on the compiled artifact, not estimated.  Results are
+appended to ``hillclimb_results.jsonl``; EXPERIMENTS.md §Perf narrates
+the hypothesis/outcome per rung.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell danube_train
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell moe_train
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell smscc_update
+
+(Each rung compiles a 256-chip SPMD program; run cells one at a time.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from jax.sharding import PartitionSpec as P
+
+# cell -> (arch, shape, [(tag, overrides, hypothesis)])
+CELLS = {
+    "gnn_minibatch": ("gatedgcn", "minibatch_lg", [
+        ("baseline", {},
+         "shipped default: nodes sharded across every mesh axis, edges "
+         "on dp -- scatter-adds from dp-sharded edges into 256-way-"
+         "sharded nodes dominate the collective term"),
+        ("nodes_model", {"node_ax": "model"},
+         "shard nodes over 'model' only: scatter targets 16 shards "
+         "instead of 256 -- collective term should drop, memory term "
+         "rises 16x on node arrays (still small for a 170k-node block)"),
+        ("nodes_replicated", {"node_ax": None},
+         "replicate nodes entirely: a sampled block holds ~170k nodes x "
+         "70 features = 48 MB -- scatters become node-local partials + "
+         "one all-reduce; expect the collective term to hit its floor"),
+        ("nodes_repl_noremat", {"node_ax": None, "remat": False},
+         "with nodes replicated the activation footprint is tiny: drop "
+         "remat to cut the recompute flops/bytes"),
+    ]),
+    "danube_train": ("h2o-danube-3-4b", "train_4k", [
+        ("baseline", {"attn_impl": "xla"},
+         "paper-faithful baseline: full remat, materialized-scores "
+         "attention, Megatron SP (attn_impl pinned to 'xla'; 'chunked' "
+         "became the shipped default after this ladder confirmed it)"),
+        ("chunked_attn", {"attn_impl": "chunked"},
+         "online-softmax KV-chunked attention removes the [B,H,S,S] "
+         "score tensor: memory term drops by ~2*S/d_head per layer"),
+        ("remat_dots", {"remat": "dots"},
+         "checkpoint-dots policy keeps matmul outputs, recomputing only "
+         "cheap elementwise ops: compute term drops ~25% (8NDt -> 6NDt), "
+         "memory term rises (saved activations)"),
+        ("chunked+dots", {"attn_impl": "chunked", "remat": "dots"},
+         "compose both: memory win of chunking + compute win of dots"),
+        ("chunked+dots+nosp",
+         {"attn_impl": "chunked", "remat": "dots", "act_spec": None},
+         "ablation: drop sequence-parallel constraint -- expect collective "
+         "term down (no per-layer seq all-gathers) but memory term up"),
+    ]),
+    "moe_train": ("qwen3-moe-235b-a22b", "train_4k", [
+        ("baseline", {},
+         "paper-faithful GShard einsum dispatch: [T,E,C] one-hot matmuls "
+         "dominate the compute term (dispatch FLOPs ~ expert FLOPs)"),
+        ("sort_dispatch", {"moe.dispatch": "sort"},
+         "argsort-gather dispatch replaces the T*E*C*D dispatch einsums "
+         "with O(T*k*D) data movement: compute term drops toward the "
+         "expert-FLOP floor"),
+        ("sort+dots", {"moe.dispatch": "sort", "remat": "dots"},
+         "compose with checkpoint-dots: backward recompute no longer "
+         "replays the expert matmuls"),
+        ("sort+capacity1",
+         {"moe.dispatch": "sort", "moe.capacity_factor": 1.0},
+         "capacity 1.25->1.0 cuts expert buffer flops/bytes 20% at the "
+         "cost of more dropped tokens (quality knob, perf measurement)"),
+        ("einsum+dots", {"remat": "dots"},
+         "keep the shard-friendly grouped einsum dispatch, add "
+         "checkpoint-dots: backward keeps matmul outputs so the "
+         "dispatch einsums are not replayed -- expect the compute term "
+         "toward ~6/8 of baseline with no collective regression"),
+    ]),
+    "smscc_update": ("smscc", "update_1m", [
+        ("baseline", {},
+         "paper-faithful: labels/frontiers replicated; every fixpoint "
+         "round merges shard contributions with an NV-sized all-reduce; "
+         "FW and BW candidate sweeps run as two sequential fixpoints"),
+        ("sharded_labels", {"label_spec": P("model")},
+         "shard label/frontier arrays over 'model': per-round merge "
+         "becomes reduce-scatter-sized; collective bytes drop ~16x"),
+        ("sharded_labels_dp", {"label_spec": P("data")},
+         "shard over 'data' instead: edge shards and label shards "
+         "co-located -- tests which axis GSPMD exploits better"),
+        ("fused_fwbw", {"fuse_fwbw": True},
+         "run FW and BW sweeps in ONE fixpoint over a stacked [2,NV] "
+         "frontier: rounds drop from d_fw+d_bw to max(d_fw,d_bw) and "
+         "each round issues one 2x-wide merge instead of two -- halves "
+         "collective LAUNCH count (latency-bound at ~1MB messages) and "
+         "total rounds; static bytes unchanged, so the win shows in the "
+         "CPU round/wall measurements"),
+        ("fused+dense4k", {"fuse_fwbw": True, "dense_capacity": 4096},
+         "small affected regions repair on the dense MXU closure path "
+         "(reach_blockmm): per-round NV-array merges are replaced by one "
+         "Rxx gather + log2(R) boolean matmuls + one scatter"),
+        ("shortcut", {"shortcut": True},
+         "Shiloach-Vishkin pointer doubling in the coloring sweep: "
+         "label chains collapse in O(log d) rounds -- attacks the ROUND "
+         "multiplier (the dominant cost is rounds x per-round terms); "
+         "adds one gather per round (memory term up slightly)"),
+        ("shortcut+fused", {"shortcut": True, "fuse_fwbw": True},
+         "compose the round-count winners"),
+    ]),
+}
+
+
+def cpu_wall_time(overrides, nv=2 ** 14, ec=2 ** 16, batch=2048, iters=3,
+                  topology="random"):
+    """Measured single-device wall time per apply_batch (captures the
+    data-dependent round counts the static metering cannot).
+
+    topology='random': degree-4 random digraph (shallow, diameter ~log n);
+    topology='ring':   one nv-cycle + sparse chords (diameter ~nv/2) --
+                       the adversarial case for round-synchronous sweeps.
+    """
+    import dataclasses
+    import jax
+    import numpy as np
+    import time
+    from repro.core import dynamic, graph_state as gs
+    from repro.data import pipeline
+
+    deep = topology == "ring"
+    cfg = gs.GraphConfig(n_vertices=nv, edge_capacity=ec, max_probes=128,
+                         max_outer=64,
+                         max_inner=2 * nv if deep else 128)
+    cfg = dataclasses.replace(
+        cfg, **{k: v for k, v in overrides.items()
+                if k in ("fuse_fwbw", "dense_capacity", "shortcut")})
+    rng = np.random.default_rng(0)
+    if deep:
+        ring_src = np.arange(nv)
+        ring_dst = (ring_src + 1) % nv
+        ch_src = rng.integers(0, nv, nv // 8)
+        ch_dst = rng.integers(0, nv, nv // 8)
+        state = gs.from_arrays(cfg, np.concatenate([ring_src, ch_src]),
+                               np.concatenate([ring_dst, ch_dst]))
+    else:
+        state = gs.from_arrays(cfg, rng.integers(0, nv, nv * 4),
+                               rng.integers(0, nv, nv * 4))
+    state = dynamic.recompute(state, cfg)
+    ops = pipeline.op_stream(nv, batch, step=1, add_frac=0.5)
+    out = dynamic.apply_batch(state, ops, cfg)   # compile + warm
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = dynamic.apply_batch(state, ops, cfg)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def main():
+    import repro.launch.dryrun as dryrun  # sets XLA_FLAGS before jax init
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="hillclimb_results.jsonl")
+    ap.add_argument("--rung", default=None,
+                    help="run a single named rung instead of the ladder")
+    args = ap.parse_args()
+
+    arch, shape, ladder = CELLS[args.cell]
+    for tag, overrides, hypothesis in ladder:
+        if args.rung and tag != args.rung:
+            continue
+        print(f"[hillclimb] {args.cell}:{tag} -- {hypothesis[:70]}...",
+              flush=True)
+        try:
+            rec = dryrun.run_cell(arch, shape, args.multi_pod,
+                                  overrides=overrides, tag=tag)
+            rec["cell"] = args.cell
+            rec["hypothesis"] = hypothesis
+            if args.cell == "smscc_update":
+                # rounds are data-dependent: complement the static terms
+                # with measured single-device wall times on a shallow and
+                # a deep (high-diameter) topology
+                rec["cpu_wall_s"] = cpu_wall_time(overrides)
+                rec["cpu_wall_ring_s"] = cpu_wall_time(
+                    overrides, nv=2 ** 12, ec=2 ** 14, batch=512,
+                    topology="ring")
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            rec = {"cell": args.cell, "tag": tag, "status": "error",
+                   "error": str(e),
+                   "trace": traceback.format_exc()[-1500:]}
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        rf = rec.get("roofline", {})
+        print(f"  -> {rec['status']}: compute={rf.get('compute_s', 0):.3g}s"
+              f" memory={rf.get('memory_s', 0):.3g}s"
+              f" collective={rf.get('collective_s', 0):.3g}s"
+              f" bottleneck={rf.get('bottleneck', '-')}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

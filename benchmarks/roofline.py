@@ -1,0 +1,79 @@
+"""Roofline reporter: dryrun_results.jsonl -> markdown table + summary.
+
+Per (arch × shape × mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS useful ratio, and the roofline fraction
+
+    fraction = compute_s / max(compute_s, memory_s, collective_s)
+
+i.e. how close the cell is to being compute-bound at peak; 1.0 means the
+compute term dominates (the best any schedule can do is the FLOP roofline).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def load(path):
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fraction(r):
+    rf = r.get("roofline")
+    if not rf:
+        return None
+    mx = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+    return rf["compute_s"] / mx if mx else None
+
+
+def table(recs, mesh="16x16"):
+    rows = []
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append((arch, shape, "SKIP", "-", "-", "-", "-", "-",
+                         r.get("reason", "")[:40]))
+            continue
+        if r["status"] != "ok":
+            rows.append((arch, shape, "ERR", "-", "-", "-", "-", "-",
+                         r.get("error", "")[:40]))
+            continue
+        rf = r["roofline"]
+        rows.append((
+            arch, shape, rf["bottleneck"].replace("_s", ""),
+            f"{rf['compute_s']:.3g}", f"{rf['memory_s']:.3g}",
+            f"{rf['collective_s']:.3g}",
+            f"{fraction(r):.2f}" if fraction(r) is not None else "-",
+            f"{rf['useful_ratio']:.2f}" if rf.get("useful_ratio") else "-",
+            ""))
+    return rows
+
+
+def render(rows, mesh):
+    hdr = ["arch", "shape", "bottleneck", "compute_s", "memory_s",
+           "collective_s", "roofline_frac", "useful_ratio", "note"]
+    out = [f"### Mesh {mesh}", "",
+           "| " + " | ".join(hdr) + " |",
+           "|" + "|".join(["---"] * len(hdr)) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="dryrun_results.jsonl")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    recs = load(args.results)
+    print(render(table(recs, args.mesh), args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+``python -m benchmarks.run [--full]`` -- default is the quick profile
+(CPU-friendly); --full uses the paper-scale graph sizes.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+from benchmarks import (bench_community, bench_decremental,
+                        bench_incremental, bench_kernels, bench_mix,
+                        common)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    quick = not args.full
+    header = ["workload", "algo", "ops", "ops_per_s", "ms"]
+
+    print("# Fig 4a -- 50/50 add/rem mix")
+    common.emit(bench_mix.run(mix=50, quick=quick), header)
+    print("\n# Fig 4b -- 90/10 add/rem mix")
+    common.emit(bench_mix.run(mix=90, quick=quick), header)
+    print("\n# Fig 4c -- 10/90 add/rem mix")
+    common.emit(bench_mix.run(mix=10, quick=quick), header)
+    print("\n# Fig 4 (woDV variant) -- 50/50 edges only")
+    common.emit(bench_mix.run(mix=50, include_vertex_ops=False,
+                              quick=quick), header)
+    print("\n# Fig 5a -- incremental only (100% add)")
+    common.emit(bench_incremental.run(quick=quick), header)
+    print("\n# Fig 5b -- decremental only (100% rem)")
+    common.emit(bench_decremental.run(quick=quick), header)
+    print("\n# Fig 5c -- community detection (80% check / 20% update)")
+    common.emit(bench_community.run(quick=quick), header)
+    print("\n# Locality of repair + round-collapse (paper core + beyond)")
+    from benchmarks import bench_locality
+    common.emit(bench_locality.run(quick=quick),
+                ["graph", "measure", "n", "ms", "note"])
+    print("\n# Kernel micro-benchmarks (CPU interpret -- correctness scale)")
+    common.emit(bench_kernels.run(quick=quick), ["kernel", "size", "ms"])
+
+    if os.path.exists("dryrun_results.jsonl"):
+        from benchmarks import roofline
+        recs = roofline.load("dryrun_results.jsonl")
+        for mesh in ("16x16", "2x16x16"):
+            rows = roofline.table(recs, mesh)
+            if rows:
+                print()
+                print(roofline.render(rows, mesh))
+    else:
+        print("\n(no dryrun_results.jsonl -- run python -m "
+              "repro.launch.dryrun --all --both-meshes for §Roofline)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""h2o-danube-3-4b [arXiv:2401.16818]: 24L d_model=3840 32H (GQA kv=8)
+d_ff=10240 vocab=32000, llama+mistral mix with sliding-window attention
+(window 4096, all layers) -- the bounded KV makes long_500k decode legal.
+"""
+import jax.numpy as jnp
+
+from repro.configs.lm_shapes import lm_shapes
+from repro.models import transformer as tf
+
+FAMILY = "lm"
+SHAPES = lm_shapes(long_context_ok=True)
+
+
+def config(dtype=jnp.bfloat16, **kw):
+    return tf.LMConfig(
+        name="h2o-danube-3-4b", n_layers=24, d_model=3840, n_heads=32,
+        n_kv_heads=8, head_dim=120, d_ff=10240, vocab=32000,
+        window=4096, rope_theta=1e4, dtype=dtype, **kw)
+
+
+def smoke_config():
+    return tf.LMConfig(
+        name="danube-smoke", n_layers=2, d_model=64, n_heads=8,
+        n_kv_heads=2, head_dim=8, d_ff=128, vocab=256, window=16,
+        dtype=jnp.float32)

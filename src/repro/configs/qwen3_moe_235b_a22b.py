@@ -1,0 +1,29 @@
+"""qwen3-moe-235b-a22b [hf:Qwen/Qwen3-235B-A22B family]:
+94L d_model=4096 64H (GQA kv=4) expert d_ff=1536 vocab=151936,
+MoE 128 experts top-8, qk-norm (qwen3 family trait).
+"""
+import jax.numpy as jnp
+
+from repro.configs.lm_shapes import lm_shapes
+from repro.models import moe, transformer as tf
+
+FAMILY = "lm"
+SHAPES = lm_shapes(long_context_ok=False)
+
+
+def config(dtype=jnp.bfloat16, **kw):
+    m = moe.MoEConfig(n_experts=128, top_k=8, d_model=4096, d_ff=1536,
+                      **kw.pop("moe_kw", {}))
+    return tf.LMConfig(
+        name="qwen3-moe-235b-a22b", n_layers=94, d_model=4096, n_heads=64,
+        n_kv_heads=4, head_dim=128, d_ff=1536, vocab=151936, moe=m,
+        qk_norm=True, tie_embeddings=False, rope_theta=1e6, dtype=dtype,
+        **kw)
+
+
+def smoke_config():
+    m = moe.MoEConfig(n_experts=4, top_k=2, d_model=64, d_ff=32)
+    return tf.LMConfig(
+        name="qwen3-moe-smoke", n_layers=2, d_model=64, n_heads=8,
+        n_kv_heads=2, head_dim=8, d_ff=32, vocab=256, moe=m, qk_norm=True,
+        tie_embeddings=False, dtype=jnp.float32)

@@ -1,0 +1,32 @@
+"""The paper's own system config: SMSCC dynamic-SCC engine at fleet scale.
+
+Shapes mirror the paper's workload axes (Fig 4/5): one compiled step
+applies a batch of mixed graph updates (the thread-count analogue is the
+lane count B) and a wait-free query batch.
+"""
+from repro.core import graph_state as gs
+
+FAMILY = "smscc"
+
+SHAPES = {
+    "update_1m": dict(kind="update", n_vertices=2 ** 20,
+                      edge_capacity=2 ** 23, batch=8192),
+    "update_16m": dict(kind="update", n_vertices=2 ** 24,
+                       edge_capacity=2 ** 26, batch=65536),
+    "community_query": dict(kind="query", n_vertices=2 ** 20,
+                            edge_capacity=2 ** 23, batch=262144),
+}
+
+
+def config(n_vertices=2 ** 20, edge_capacity=2 ** 23, **kw):
+    base = dict(max_probes=64, max_outer=64, max_inner=256)
+    base.update(kw)
+    return gs.GraphConfig(n_vertices=n_vertices,
+                          edge_capacity=edge_capacity, **base)
+
+
+def smoke_config(**kw):
+    base = dict(n_vertices=64, edge_capacity=256, max_probes=256,
+                max_outer=65, max_inner=66)
+    base.update(kw)
+    return gs.GraphConfig(**base)

@@ -1,0 +1,12 @@
+# The paper's primary contribution: dynamic SCC maintenance as a batched,
+# jit/pjit-able functional engine.  See DESIGN.md §2 for the shared-memory
+# -> TPU-dataflow mapping.
+from repro.core import (  # noqa: F401
+    baselines,
+    community,
+    dynamic,
+    edge_table,
+    graph_state,
+    reach,
+    scc,
+)

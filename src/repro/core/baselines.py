@@ -1,0 +1,77 @@
+"""Baselines matching the paper's §7 comparison.
+
+paper                          here
+-----                          ----
+Sequential (1 thread, no locks)  ``sequential_apply``: one op at a time
+                                  (scan), each with its own localized repair
+                                  -- the dynamic algorithm without any
+                                  intra-batch parallelism.
+Coarse-grained (one global lock) ``coarse_apply``: one op at a time where
+                                  every op's repair is a *full* static
+                                  recompute -- global mutual exclusion means
+                                  no locality can be exploited.
+SMSCC (n threads, fine locks)    ``dynamic.apply_batch``: B lanes per step,
+                                  one unified localized repair.
+
+Throughput is reported against batch size B (our stand-in for thread
+count); see benchmarks/bench_mix.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dynamic, graph_state as gs, scc
+
+
+def _slice_ops(ops: dynamic.OpBatch, i):
+    return dynamic.OpBatch(
+        kind=jax.lax.dynamic_slice_in_dim(ops.kind, i, 1),
+        u=jax.lax.dynamic_slice_in_dim(ops.u, i, 1),
+        v=jax.lax.dynamic_slice_in_dim(ops.v, i, 1))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def sequential_apply(state: gs.GraphState, ops: dynamic.OpBatch,
+                     cfg: gs.GraphConfig):
+    """Apply ops one at a time (localized repair per op)."""
+    b = ops.kind.shape[0]
+
+    def body(carry, i):
+        st = carry
+        st, ok = dynamic.apply_batch(st, _slice_ops(ops, i), cfg)
+        return st, ok[0]
+
+    state, oks = jax.lax.scan(body, state, jnp.arange(b))
+    return state, oks
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def coarse_apply(state: gs.GraphState, ops: dynamic.OpBatch,
+                 cfg: gs.GraphConfig):
+    """Apply ops one at a time with a FULL static recompute per op."""
+    b = ops.kind.shape[0]
+
+    def body(carry, i):
+        st = carry
+        # structural change via the batch machinery (B=1)...
+        st, ok = dynamic.apply_batch(st, _slice_ops(ops, i), cfg)
+        # ...then throw the locality away: recompute everything, as a global
+        # lock + from-scratch algorithm would.
+        st = dynamic.recompute(st, cfg)
+        return st, ok[0]
+
+    state, oks = jax.lax.scan(body, state, jnp.arange(b))
+    return state, oks
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def static_per_batch_apply(state: gs.GraphState, ops: dynamic.OpBatch,
+                           cfg: gs.GraphConfig):
+    """Ablation: batched structural apply + full recompute (no locality)."""
+    state, ok = dynamic.apply_batch(state, ops, cfg)
+    # overwrite the localized labels with a from-scratch pass
+    state = dynamic.recompute(state, cfg)
+    return state, ok

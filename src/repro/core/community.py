@@ -1,0 +1,70 @@
+"""Wait-free queries & the paper's community-detection application (§5.3).
+
+The paper's ``checkSCC``/``blongsToCommunity`` are wait-free list scans; the
+TPU analogue is stronger: a query batch is one vectorized gather over the
+label array, so thousands of membership checks cost one memory sweep and
+never interfere with update steps (functional state: readers see a
+consistent snapshot by construction -- the linearization point is the state
+version ``gen`` they read).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import graph_state as gs
+
+
+@jax.jit
+def check_scc(state: gs.GraphState, u, v):
+    """Batched checkSCC(u, v): same strongly connected component?
+
+    u, v: int32[Q].  Returns bool[Q]; false when either endpoint is absent
+    (paper Alg. 23 contract).
+    """
+    nv = state.ccid.shape[0]
+    u = jnp.clip(u, 0, nv - 1)
+    v = jnp.clip(v, 0, nv - 1)
+    alive = state.v_alive[u] & state.v_alive[v]
+    return alive & (state.ccid[u] == state.ccid[v])
+
+
+@jax.jit
+def belongs_to_community(state: gs.GraphState, u):
+    """Batched blongsToCommunity(u): the community (SCC) id of u.
+
+    Returns int32[Q]; the sentinel ``n_vertices`` for absent vertices.
+    """
+    nv = state.ccid.shape[0]
+    uu = jnp.clip(u, 0, nv - 1)
+    lab = jnp.where(state.v_alive[uu], state.ccid[uu], nv)
+    return lab
+
+
+@jax.jit
+def community_sizes(state: gs.GraphState):
+    """Histogram of community sizes, indexed by representative id."""
+    nv = state.ccid.shape[0]
+    idx = jnp.where(state.v_alive, state.ccid, nv)
+    return jax.ops.segment_sum(state.v_alive.astype(jnp.int32),
+                               jnp.minimum(idx, nv), num_segments=nv + 1)[:nv]
+
+
+@jax.jit
+def largest_community(state: gs.GraphState):
+    """(representative id, size) of the largest SCC."""
+    sizes = community_sizes(state)
+    rep = jnp.argmax(sizes)
+    return rep.astype(jnp.int32), sizes[rep]
+
+
+@jax.jit
+def same_community_pairs(state: gs.GraphState, users):
+    """All-pairs community matrix for a user cohort (friend-suggestion app).
+
+    users: int32[K] -> bool[K, K]; entry (i, j) = suggest i<->j candidate.
+    """
+    lab = belongs_to_community(state, users)
+    nv = state.ccid.shape[0]
+    ok = lab < nv
+    return (lab[:, None] == lab[None, :]) & ok[:, None] & ok[None, :]

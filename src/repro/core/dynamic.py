@@ -1,0 +1,211 @@
+"""SMSCC: batched fully-dynamic SCC maintenance (the paper's contribution).
+
+The paper's concurrency unit is a POSIX thread applying one operation under
+fine-grained locks; ours is a *lane* of an operation batch applied by one
+compiled dataflow step.  ``apply_batch`` consumes a :class:`GraphState` and
+an :class:`OpBatch` and produces the state after *some* linearization of the
+batch plus per-op boolean results matching the paper's method contracts:
+
+  AddVertex(u)     true iff u was absent          (paper Alg. 20)
+  RemoveVertex(u)  true iff u was present         (paper Alg. 18)
+  AddEdge(u,v)     true iff u,v present & edge absent   (paper Alg. 15)
+  RemoveEdge(u,v)  true iff u,v present & edge present  (paper Alg. 16)
+
+The fixed linearization order inside a batch is
+``RemoveVertex -> RemoveEdge -> AddVertex -> AddEdge`` with ties broken by
+lane index (scatter-min claims), so results always equal a sequential
+history -- the batch-atomic analogue of the paper's linearizability.
+
+Repair (the paper's §5.1/§5.2, *locality of repair*):
+
+  * deletions can only split the SCCs they touched: those classes are
+    collected in ``M_del``;
+  * insertions can only merge SCCs on a ``v ⇝ u`` path: every vertex of any
+    such path lies in ``FW(new heads) ∩ BW(new tails)`` = ``C_ins``;
+  * one masked static-SCC pass over ``M = M_del ∪ C_ins`` restores the
+    partition; labels outside M are untouched.
+
+M is a union of (pre-batch) SCCs plus fully-included broken classes, and
+every post-batch SCC that changed has all its internal paths inside M, so
+the masked recomputation is exact (proof sketch in DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import edge_table as et
+from repro.core import graph_state as gs
+from repro.core import reach, scc
+
+ADD_EDGE = 0
+REM_EDGE = 1
+ADD_VERTEX = 2
+REM_VERTEX = 3
+NOP = 4
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+class OpBatch(NamedTuple):
+    kind: jax.Array  # int32[B] in {ADD_EDGE..NOP}
+    u: jax.Array     # int32[B]
+    v: jax.Array     # int32[B]  (ignored for vertex ops)
+
+
+def make_ops(kind, u, v) -> OpBatch:
+    return OpBatch(kind=jnp.asarray(kind, jnp.int32),
+                   u=jnp.asarray(u, jnp.int32),
+                   v=jnp.asarray(v, jnp.int32))
+
+
+def _first_claim(cand, target, nv, b):
+    """Lane wins iff it is the lowest-indexed candidate lane for its target
+    vertex -- the batched analogue of 'first thread to get the lock'."""
+    idx = jnp.arange(b, dtype=jnp.int32)
+    claims = jnp.full((nv + 1,), b, jnp.int32)
+    claims = claims.at[jnp.where(cand, target, nv)].min(
+        jnp.where(cand, idx, b))
+    return cand & (claims[target] == idx)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def apply_batch(state: gs.GraphState, ops: OpBatch, cfg: gs.GraphConfig):
+    """One batch-atomic SMSCC step.  Returns (new_state, ok: bool[B])."""
+    nv = cfg.n_vertices
+    b = ops.kind.shape[0]
+    vid = jnp.arange(nv, dtype=jnp.int32)
+
+    v_alive = state.v_alive
+    ccid = state.ccid  # working labels; sentinel nv for dead slots
+    edges = state.edges
+    ok = jnp.zeros((b,), jnp.bool_)
+
+    in_range = (ops.u >= 0) & (ops.u < nv) & \
+        jnp.where((ops.kind == ADD_EDGE) | (ops.kind == REM_EDGE),
+                  (ops.v >= 0) & (ops.v < nv), True)
+
+    # ---- Phase 1: RemoveVertex --------------------------------------------
+    is_remv = (ops.kind == REM_VERTEX) & in_range
+    cand = is_remv & v_alive[jnp.clip(ops.u, 0, nv - 1)]
+    win_remv = _first_claim(cand, ops.u, nv, b)
+    ok = jnp.where(win_remv, True, ok)
+    killed = jnp.zeros((nv,), jnp.bool_).at[
+        jnp.where(win_remv, ops.u, nv)].set(True, mode="drop")
+    # deletion-affected classes: the old class of every killed vertex
+    affected_rep = jnp.zeros((nv + 1,), jnp.bool_)
+    affected_rep = affected_rep.at[
+        jnp.where(killed, jnp.minimum(ccid, nv), nv)].set(True, mode="drop")
+    v_alive = v_alive & ~killed
+    # the paper's "trim after RemoveVertex": drop all incident edges at once
+    edges, _ = et.remove_incident(edges, killed)
+    ccid = jnp.where(killed, nv, ccid)
+
+    # ---- Phase 2: RemoveEdge ----------------------------------------------
+    is_reme = (ops.kind == REM_EDGE) & in_range
+    ends_ok = v_alive[jnp.clip(ops.u, 0, nv - 1)] & \
+        v_alive[jnp.clip(ops.v, 0, nv - 1)]
+    edges, removed = et.remove(edges, ops.u, ops.v, cfg.max_probes,
+                               enable=is_reme & ends_ok)
+    ok = jnp.where(removed, True, ok)
+    same_class = ccid[jnp.clip(ops.u, 0, nv - 1)] == \
+        ccid[jnp.clip(ops.v, 0, nv - 1)]
+    hit = removed & same_class
+    affected_rep = affected_rep.at[
+        jnp.where(hit, jnp.minimum(ccid[jnp.clip(ops.u, 0, nv - 1)], nv),
+                  nv)].set(True, mode="drop")
+
+    # ---- Phase 3: AddVertex (paper: new SCC at CCHead, ccCount++) ---------
+    is_addv = (ops.kind == ADD_VERTEX) & in_range
+    cand = is_addv & ~v_alive[jnp.clip(ops.u, 0, nv - 1)]
+    win_addv = _first_claim(cand, ops.u, nv, b)
+    ok = jnp.where(win_addv, True, ok)
+    born = jnp.zeros((nv,), jnp.bool_).at[
+        jnp.where(win_addv, ops.u, nv)].set(True, mode="drop")
+    v_alive = v_alive | born
+    ccid = jnp.where(born, vid, ccid)  # fresh singleton SCC
+
+    # ---- Phase 4: AddEdge --------------------------------------------------
+    is_adde = (ops.kind == ADD_EDGE) & in_range
+    ends_ok = v_alive[jnp.clip(ops.u, 0, nv - 1)] & \
+        v_alive[jnp.clip(ops.v, 0, nv - 1)]
+    enable = is_adde & ends_ok
+    edges, inserted = et.insert(edges, ops.u, ops.v, cfg.max_probes,
+                                enable=enable)
+    ok = jnp.where(inserted, True, ok)
+    # overflow accounting: an enabled key not present after insert means the
+    # probe bound was exhausted -- host must grow the table and replay.
+    found_after, _ = et.lookup(edges, ops.u, ops.v, cfg.max_probes)
+    ovf = jnp.sum(enable & ~found_after).astype(jnp.int32)
+
+    # ---- Phase 5: unified localized repair ---------------------------------
+    src, dst, live = edges.src, edges.dst, edges.state == et.LIVE
+
+    # deletion side: all members of affected classes (live labels are < nv,
+    # so the junk slot [nv] written by inactive lanes is never read here)
+    m_del = v_alive & affected_rep[jnp.minimum(ccid, nv)]
+    # insertion side: FW(inserted heads) ∩ BW(inserted tails), but only for
+    # edges that straddle two current classes (paper Alg. 15 line 226 check)
+    straddle = inserted & (ccid[jnp.clip(ops.u, 0, nv - 1)] !=
+                           ccid[jnp.clip(ops.v, 0, nv - 1)])
+    seed_f = jnp.zeros((nv,), jnp.bool_).at[
+        jnp.where(straddle, ops.v, nv)].set(True, mode="drop")
+    seed_b = jnp.zeros((nv,), jnp.bool_).at[
+        jnp.where(straddle, ops.u, nv)].set(True, mode="drop")
+    if cfg.fuse_fwbw:
+        fw, bw, _ = reach.fused_fw_bw_reach(
+            src, dst, live, seed_f, seed_b, v_alive, cfg.max_inner,
+            spec=cfg.label_spec)
+    else:
+        fw, _ = reach.forward_reach(src, dst, live, seed_f, v_alive,
+                                    cfg.max_inner, spec=cfg.label_spec)
+        bw, _ = reach.backward_reach(src, dst, live, seed_b, v_alive,
+                                     cfg.max_inner, spec=cfg.label_spec)
+    region = (m_del | (fw & bw)) & v_alive
+
+    def repair_sparse():
+        return scc.scc_static(src, dst, live, region,
+                              max_outer=cfg.max_outer,
+                              max_inner=cfg.max_inner,
+                              spec=cfg.label_spec,
+                              shortcut=cfg.shortcut)
+
+    if cfg.dense_capacity > 0:
+        fits = jnp.sum(region) <= cfg.dense_capacity
+
+        def repair_dense():
+            lab, _ = scc.scc_dense_region(src, dst, live, region,
+                                          cfg.dense_capacity)
+            return lab
+
+        new_lab = jax.lax.cond(fits, repair_dense, repair_sparse)
+    else:
+        new_lab = repair_sparse()
+
+    ccid = jnp.where(region, new_lab, ccid)
+    ccid = jnp.where(v_alive, ccid, nv)
+
+    new_state = gs.GraphState(
+        v_alive=v_alive,
+        ccid=ccid,
+        edges=edges,
+        n_ccs=state.n_ccs,  # recomputed below
+        gen=state.gen + 1,
+        overflow=state.overflow + ovf,
+    )
+    new_state = gs.recount_ccs(new_state)
+    return new_state, ok
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def recompute(state: gs.GraphState, cfg: gs.GraphConfig) -> gs.GraphState:
+    """Full static SCC of the current graph (bulk-load / oracle path)."""
+    src, dst, live = gs.edge_coo(state)
+    lab = scc.scc_static(src, dst, live, state.v_alive,
+                         max_outer=cfg.max_outer, max_inner=cfg.max_inner,
+                         spec=cfg.label_spec, shortcut=cfg.shortcut)
+    ccid = jnp.where(state.v_alive, lab, cfg.n_vertices)
+    return gs.recount_ccs(state._replace(ccid=ccid, gen=state.gen + 1))

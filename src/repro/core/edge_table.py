@@ -1,0 +1,213 @@
+"""Batched open-addressing hash set over directed edges.
+
+This is the TPU-native replacement for the paper's lock-based lazy list-set:
+
+  paper (lazy list, per-node locks)        here (linear probing, batched)
+  ---------------------------------        -------------------------------
+  locate(key) pointer walk                 bounded probe loop (vectorized)
+  lock(pred); lock(curr); validate         scatter-``min`` claim of a slot:
+                                           the lowest op index wins, losers
+                                           re-probe -- an obstruction-free
+                                           "lock" with deterministic winners
+  logical delete (marked = true)           TOMB state (kept for probe chains)
+  physical delete / GC                     :func:`compact` rebuild pass
+
+All operations take a *batch* of keys and run in O(max_probes) data-parallel
+rounds, entirely inside ``jit``.  The (src, dst, state) columns double as a
+COO edge list for the SCC sweeps, so there is no separate adjacency copy.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int8(0)
+LIVE = jnp.int8(1)
+TOMB = jnp.int8(2)
+
+
+class EdgeTable(NamedTuple):
+    src: jax.Array  # int32[C]
+    dst: jax.Array  # int32[C]
+    state: jax.Array  # int8[C]  EMPTY | LIVE | TOMB
+
+
+def empty(capacity: int) -> EdgeTable:
+    assert capacity & (capacity - 1) == 0, "capacity must be a power of two"
+    return EdgeTable(
+        src=jnp.zeros((capacity,), jnp.int32),
+        dst=jnp.zeros((capacity,), jnp.int32),
+        state=jnp.zeros((capacity,), jnp.int8),
+    )
+
+
+def _hash(u: jax.Array, v: jax.Array, capacity: int) -> jax.Array:
+    """Fibonacci-ish mixing of the (u, v) pair into [0, capacity)."""
+    u = u.astype(jnp.uint32)
+    v = v.astype(jnp.uint32)
+    h = u * jnp.uint32(0x9E3779B1) ^ (v + jnp.uint32(0x85EBCA77) + (u << 6) + (u >> 2))
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x2C1B3C6D)
+    h = h ^ (h >> 12)
+    return (h & jnp.uint32(capacity - 1)).astype(jnp.int32)
+
+
+def lookup(table: EdgeTable, u: jax.Array, v: jax.Array, max_probes: int
+           ) -> Tuple[jax.Array, jax.Array]:
+    """Batched membership probe.
+
+    Returns ``(found: bool[B], slot: int32[B])``; ``slot`` is the LIVE slot
+    of the key when found, else the first EMPTY/TOMB slot seen (insertion
+    point), else -1 when the probe bound was exhausted.
+    """
+    cap = table.src.shape[0]
+    base = _hash(u, v, cap)
+    b = u.shape[0]
+
+    def body(i, carry):
+        done, found, slot, free = carry
+        pos = (base + i) & (cap - 1)
+        st = table.state[pos]
+        s, d = table.src[pos], table.dst[pos]
+        hit = (st == LIVE) & (s == u) & (d == v)
+        is_empty = st == EMPTY
+        is_free = st != LIVE
+        # remember the first non-live slot as the insertion point
+        free = jnp.where((~done) & is_free & (free < 0), pos, free)
+        slot = jnp.where((~done) & hit, pos, slot)
+        found = found | ((~done) & hit)
+        # probing stops at a hit or at a truly EMPTY slot (chain end)
+        done = done | hit | is_empty
+        return done, found, slot, free
+
+    done = jnp.zeros((b,), jnp.bool_)
+    found = jnp.zeros((b,), jnp.bool_)
+    slot = jnp.full((b,), -1, jnp.int32)
+    free = jnp.full((b,), -1, jnp.int32)
+    done, found, slot, free = jax.lax.fori_loop(
+        0, max_probes, body, (done, found, slot, free))
+    return found, jnp.where(found, slot, free)
+
+
+def insert(table: EdgeTable, u: jax.Array, v: jax.Array, max_probes: int,
+           enable: jax.Array | None = None
+           ) -> Tuple[EdgeTable, jax.Array]:
+    """Batched insert.  Returns ``(table, inserted: bool[B])``.
+
+    ``inserted`` is False for keys already present, duplicate keys within the
+    batch (only the first wins -- matching a sequential application order),
+    disabled lanes, and probe-bound overflow.
+    """
+    cap = table.src.shape[0]
+    b = u.shape[0]
+    if enable is None:
+        enable = jnp.ones((b,), jnp.bool_)
+
+    # intra-batch dedupe: an op is a duplicate if an earlier enabled op has
+    # the same key.  B is small (<= few thousand), so O(B log B) sort is fine.
+    order = jnp.argsort(v, stable=True)
+    order = order[jnp.argsort(u[order], stable=True)]  # lexsort by (u, v)
+    su, sv, se = u[order], v[order], enable[order]
+    same_prev = jnp.concatenate([
+        jnp.zeros((1,), jnp.bool_),
+        (su[1:] == su[:-1]) & (sv[1:] == sv[:-1])])
+    # within each equal-key run, the first *enabled* op wins; later enabled
+    # ops are duplicates (== the sequential order's return values).
+    def dup_scan(carry, x):
+        same, en = x
+        run_carry = jnp.where(same, carry, False)  # reset at run start
+        is_dup = run_carry & en
+        return run_carry | en, is_dup
+    _, dup_sorted = jax.lax.scan(dup_scan, jnp.zeros((), jnp.bool_),
+                                 (same_prev, se))
+    dup = jnp.zeros((b,), jnp.bool_).at[order].set(dup_sorted)
+    enable = enable & ~dup
+
+    found, _ = lookup(table, u, v, max_probes)
+    want = enable & ~found
+
+    base = _hash(u, v, cap)
+
+    def round_body(i, carry):
+        table, placed, probe = carry
+        pending = want & ~placed
+        pos = (base + probe) & (cap - 1)
+        st = table.state[pos]
+        free = st != LIVE
+        contend = pending & free
+        # scatter-min claim: lowest op index wins the slot this round
+        claims = jnp.full((cap,), b, jnp.int32)
+        claims = claims.at[jnp.where(contend, pos, cap - 1)].min(
+            jnp.where(contend, jnp.arange(b, dtype=jnp.int32), b))
+        win = contend & (claims[pos] == jnp.arange(b, dtype=jnp.int32))
+        wpos = jnp.where(win, pos, cap)  # out-of-range scatter = drop
+        table = EdgeTable(
+            src=table.src.at[wpos].set(u, mode="drop"),
+            dst=table.dst.at[wpos].set(v, mode="drop"),
+            state=table.state.at[wpos].set(LIVE, mode="drop"),
+        )
+        placed = placed | win
+        probe = jnp.where(pending & ~win, probe + 1, probe)
+        return table, placed, probe
+
+    placed = jnp.zeros((b,), jnp.bool_)
+    probe = jnp.zeros((b,), jnp.int32)
+    table, placed, _ = jax.lax.fori_loop(
+        0, max_probes, round_body, (table, placed, probe))
+    return table, placed
+
+
+def remove(table: EdgeTable, u: jax.Array, v: jax.Array, max_probes: int,
+           enable: jax.Array | None = None
+           ) -> Tuple[EdgeTable, jax.Array]:
+    """Batched remove (logical delete -> TOMB).  Returns (table, removed[B])."""
+    b = u.shape[0]
+    if enable is None:
+        enable = jnp.ones((b,), jnp.bool_)
+    found, slot = lookup(table, u, v, max_probes)
+    hit = found & enable
+    # duplicate removals of the same key in one batch target the same slot;
+    # both see LIVE pre-state, but sequentially only the first succeeds.
+    first = jnp.zeros((b,), jnp.bool_)
+    claims = jnp.full((table.src.shape[0],), b, jnp.int32)
+    cap = table.src.shape[0]
+    claims = claims.at[jnp.where(hit, slot, cap - 1)].min(
+        jnp.where(hit, jnp.arange(b, dtype=jnp.int32), b))
+    first = hit & (claims[slot] == jnp.arange(b, dtype=jnp.int32))
+    wpos = jnp.where(first, slot, cap)
+    table = table._replace(state=table.state.at[wpos].set(TOMB, mode="drop"))
+    return table, first
+
+
+def remove_incident(table: EdgeTable, v_mask: jax.Array) -> Tuple[EdgeTable, jax.Array]:
+    """Tombstone every LIVE edge with an endpoint in ``v_mask`` (bool[NV]).
+
+    This is the paper's "trim the SCC-Graph after RemoveVertex" -- with a
+    dense table it is one masked compare over the columns instead of a walk.
+    Returns (table, was_removed mask over slots).
+    """
+    live = table.state == LIVE
+    kill = live & (v_mask[table.src] | v_mask[table.dst])
+    return table._replace(
+        state=jnp.where(kill, TOMB, table.state)), kill
+
+
+def compact(table: EdgeTable, max_probes: int) -> EdgeTable:
+    """GC pass: rebuild the table without tombstones (hazard-pointer analogue).
+
+    Rehash every LIVE entry into a fresh table.  Runs in chunks inside jit.
+    """
+    cap = table.src.shape[0]
+    live = table.state == LIVE
+    fresh = empty(cap)
+    # reinsert in slot order; disabled lanes for dead slots.
+    fresh, _ = insert(fresh, table.src, table.dst, max_probes, enable=live)
+    return fresh
+
+
+def fill_stats(table: EdgeTable):
+    live = jnp.sum(table.state == LIVE)
+    tomb = jnp.sum(table.state == TOMB)
+    return live, tomb

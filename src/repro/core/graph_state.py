@@ -1,0 +1,134 @@
+"""Dynamic SCC-Graph state: the TPU-native analogue of the paper's SCC-Graph.
+
+The paper (Sa, 2018) stores the graph as a three-level lazy linked list
+(SCC list -> vertex list -> edge list) with per-node locks and logical
+(``marked``) deletion.  On TPU there is no shared mutable heap, so the same
+information lives in fixed-capacity dense arrays:
+
+  * vertices are slots ``0..n_vertices-1`` with an ``v_alive`` mask
+    (``marked`` inverted),
+  * edges live in an open-addressing hash table (:mod:`repro.core.edge_table`)
+    whose ``(src, dst, live)`` columns double as a COO edge list for the
+    vectorized sweeps,
+  * the SCC membership ("which vertex list do I sit in") is a label array
+    ``ccid[v]`` whose canonical value is the minimum vertex id in the SCC --
+    labels form a semilattice under ``min`` which is what lets concurrent
+    (batched) updates merge without locks.
+
+Everything in this module is a pure function of pytrees; all shapes are
+static so every operation jits and pjits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import edge_table as et
+
+# Sentinel label meaning "no SCC / dead vertex".  Any value >= n_vertices works.
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphConfig:
+    """Static (non-traced) capacities of the dynamic graph."""
+
+    n_vertices: int  # vertex-slot capacity; ids in [0, n_vertices)
+    edge_capacity: int  # hash-table capacity; power of two; keep <=50% load
+    max_probes: int = 64  # linear-probing bound per batched table op
+    max_outer: int = 128  # SCC peel rounds bound
+    max_inner: int = 256  # reachability / fixpoint rounds bound (>= diameter)
+    dense_capacity: int = 0  # >0 enables dense blocked repair path (Pallas)
+    # optional PartitionSpec for the NV-sized label/frontier arrays inside
+    # the repair fixpoints (None = replicated + all-reduce merge; a
+    # 'model'-axis spec turns the merges into reduce-scatter-style
+    # exchanges -- the §Perf collective-term knob)
+    label_spec: object = None
+    # fuse the FW and BW reachability sweeps of the repair into ONE
+    # fixpoint over a stacked [2, NV] frontier: halves both the round
+    # count and the per-round collective launches (§Perf knob)
+    fuse_fwbw: bool = False
+    # Shiloach-Vishkin pointer doubling in the coloring sweep: label
+    # chains collapse in O(log diameter) rounds (§Perf knob)
+    shortcut: bool = False
+
+    def __post_init__(self):
+        assert self.edge_capacity & (self.edge_capacity - 1) == 0, (
+            "edge_capacity must be a power of two")
+
+
+class GraphState(NamedTuple):
+    """The dynamic SCC-Graph.  A pytree of arrays; capacities are static."""
+
+    v_alive: jax.Array  # bool[NV]   vertex slot is live
+    ccid: jax.Array  # int32[NV]  canonical SCC label (min id in SCC); NV if dead
+    edges: et.EdgeTable  # hash table over (src, dst)
+    n_ccs: jax.Array  # int32[]    live SCC count  (paper: ``ccCount``)
+    gen: jax.Array  # int32[]    bumped whenever the SCC partition changes
+    overflow: jax.Array  # int32[]    # of table-op failures (host must grow)
+
+
+def empty(cfg: GraphConfig) -> GraphState:
+    nv = cfg.n_vertices
+    return GraphState(
+        v_alive=jnp.zeros((nv,), jnp.bool_),
+        ccid=jnp.full((nv,), nv, jnp.int32),
+        edges=et.empty(cfg.edge_capacity),
+        n_ccs=jnp.zeros((), jnp.int32),
+        gen=jnp.zeros((), jnp.int32),
+        overflow=jnp.zeros((), jnp.int32),
+    )
+
+
+def from_arrays(cfg: GraphConfig, src, dst, n_active_vertices=None) -> GraphState:
+    """Bulk-load a static graph (host path, used by tests/benches).
+
+    ``ccid`` is *not* computed here; call :func:`repro.core.scc.recompute` on
+    the result (or go through ``dynamic.apply_batch``).
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    state = empty(cfg)
+    nv = cfg.n_vertices
+    if n_active_vertices is None:
+        n_active_vertices = nv
+    v_alive = (jnp.arange(nv) < n_active_vertices)
+    table, _ = et.insert(state.edges, src, dst, cfg.max_probes)
+    # overflow = keys genuinely absent after the bulk insert (duplicates in
+    # the input are found and therefore do not count as overflow).
+    found, _ = et.lookup(table, src, dst, cfg.max_probes)
+    state = state._replace(
+        v_alive=v_alive,
+        edges=table,
+        overflow=state.overflow + jnp.sum(~found).astype(jnp.int32),
+    )
+    return state
+
+
+def edge_coo(state: GraphState):
+    """(src, dst, live_mask) view of the edge table, for segment-op sweeps."""
+    t = state.edges
+    live = t.state == et.LIVE
+    return t.src, t.dst, live
+
+
+def live_edge_count(state: GraphState) -> jax.Array:
+    return jnp.sum(state.edges.state == et.LIVE).astype(jnp.int32)
+
+
+def live_vertex_count(state: GraphState) -> jax.Array:
+    return jnp.sum(state.v_alive).astype(jnp.int32)
+
+
+def recount_ccs(state: GraphState) -> GraphState:
+    """n_ccs = #representatives (v alive with ccid[v] == v).
+
+    Canonical labels are the min id of the SCC, which is itself a member, so
+    counting fixed points of the label map counts components exactly.
+    """
+    nv = state.ccid.shape[0]
+    reps = state.v_alive & (state.ccid == jnp.arange(nv, dtype=jnp.int32))
+    return state._replace(n_ccs=jnp.sum(reps).astype(jnp.int32))

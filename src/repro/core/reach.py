@@ -1,0 +1,213 @@
+"""Masked multi-source reachability -- the TPU analogue of the paper's DFS.
+
+The paper's ``DFSFW``/``DFSBW`` (Algorithms 10/11) walk pointers serially.
+On TPU, reachability is round-synchronous frontier propagation: each round
+is one edge-parallel gather + scatter-max over the COO edge table; rounds
+are bounded by the diameter of the *masked* region (the paper's "limited"
+property -- sweeps never leave the affected region).
+
+Two execution paths:
+  * sparse (this module): ``O(E)`` work per round on the VPU via segment ops;
+    right when the affected region is a small fraction of a large graph.
+  * dense  (:mod:`repro.kernels.reach_blockmm`): boolean-semiring blocked
+    mat-mul on the MXU; right when the region is compact enough to densify.
+
+Every function is a pure jit-able map; fixpoints are ``lax.while_loop`` with
+an explicit ``changed`` flag plus an iteration cap (static bound).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _fixpoint(body, init, max_iters: int):
+    """while any-change and iters < cap: state = body(state).
+
+    ``body`` maps state -> (state, changed: bool[]).
+    """
+
+    def cond(carry):
+        _, changed, it = carry
+        return changed & (it < max_iters)
+
+    def step(carry):
+        state, _, it = carry
+        state, changed = body(state)
+        return state, changed, it + 1
+
+    state, _, iters = jax.lax.while_loop(
+        cond, step, (init, jnp.bool_(True), jnp.int32(0)))
+    return state, iters
+
+
+def _constrain(x, spec):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def forward_reach(src, dst, live, seeds, allowed, max_iters: int,
+                  spec=None):
+    """bool[NV]: vertices reachable from ``seeds`` along live edges, staying
+    inside ``allowed`` (both endpoints).  Seeds outside ``allowed`` are
+    dropped.  Returns (reached, rounds).  ``spec`` optionally pins the
+    frontier's sharding (see GraphConfig.label_spec)."""
+    nv = seeds.shape[0]
+    reached0 = _constrain(seeds & allowed, spec)
+
+    def body(reached):
+        msg = reached[src] & live & allowed[dst]
+        new = jnp.zeros((nv,), jnp.bool_).at[dst].max(msg)
+        nxt = _constrain(reached | (new & allowed), spec)
+        return nxt, jnp.any(nxt != reached)
+
+    return _fixpoint(body, reached0, max_iters)
+
+
+def backward_reach(src, dst, live, seeds, allowed, max_iters: int,
+                   spec=None):
+    """Reachability along *reversed* edges (paper's DFSBW / incoming list)."""
+    return forward_reach(dst, src, live, seeds, allowed, max_iters,
+                         spec=spec)
+
+
+def propagate_min_labels(src, dst, live, labels, allowed, max_iters: int,
+                         spec=None, shortcut: bool = False):
+    """Forward min-label propagation to fixpoint (the 'coloring' sweep).
+
+    labels[v] converges to min(labels[u] : u ⇝ v within allowed, incl. v).
+    Vertices outside ``allowed`` keep their input label and do not relay.
+    Returns (labels, rounds).
+
+    ``shortcut=True`` adds Shiloach-Vishkin pointer doubling per round:
+    lab[v] <- min(lab[v], lab[lab[v]]).  Sound: lab[v]=u certifies u ⇝ v
+    inside ``allowed`` and lab[u]=w certifies w ⇝ u, so w ⇝ v by
+    transitivity; the fixpoint is unchanged but label chains collapse in
+    O(log diameter) rounds instead of O(diameter) -- the §Perf
+    round-count knob for the dominant coloring loop.
+    """
+    nv = labels.shape[0]
+    sentinel = jnp.iinfo(labels.dtype).max
+
+    def body(lab):
+        ok = live & allowed[src] & allowed[dst]
+        msg = jnp.where(ok, lab[src], sentinel)
+        incoming = jnp.full((nv,), sentinel, lab.dtype).at[dst].min(msg)
+        nxt = jnp.where(allowed, jnp.minimum(lab, incoming), lab)
+        if shortcut:
+            hop = nxt[jnp.clip(nxt, 0, nv - 1)]
+            nxt = jnp.where(allowed & (nxt < sentinel),
+                            jnp.minimum(nxt, hop), nxt)
+        nxt = _constrain(nxt, spec)
+        return nxt, jnp.any(nxt != lab)
+
+    return _fixpoint(body, labels, max_iters)
+
+
+def multi_forward_reach(src, dst, live, seeds, allowed, max_iters: int):
+    """Batched reachability: seeds/result are bool[B, NV].
+
+    One gather/scatter per round moves all B frontiers simultaneously --
+    this is the sparse counterpart of the dense block-matmul kernel (there
+    the B dimension feeds the MXU).
+    """
+    nv = seeds.shape[1]
+    reached0 = seeds & allowed[None, :]
+
+    def body(reached):
+        msg = reached[:, src] & (live & allowed[dst])[None, :]
+        new = jnp.zeros_like(reached).at[:, dst].max(msg)
+        nxt = reached | (new & allowed[None, :])
+        return nxt, jnp.any(nxt != reached)
+
+    return _fixpoint(body, reached0, max_iters)
+
+
+# Bijective priority hash (odd multiplier mod 2^32) + modular inverse.
+# Random-looking priorities break monotone id runs: with raw ids, a path
+# whose ids increase propagates min-labels one hop per round and pointer
+# doubling is useless (the witness pointer is a self-loop).  With hashed
+# priorities the expected run length is O(1), so doubling collapses any
+# path in O(polylog) rounds in BOTH edge directions.
+P_MUL = 0x9E3779B1
+P_INV = pow(P_MUL, -1, 2 ** 32)
+PRIO_SENT = jnp.uint32(0xFFFFFFFF)
+# the vertex whose priority equals the sentinel (guard: ids must stay
+# below it; it is ~3.9e9, far above any practical n_vertices)
+SENT_PREIMAGE = (0xFFFFFFFF * P_INV) % (2 ** 32)
+
+
+def _prio(v):
+    return v.astype(jnp.uint32) * jnp.uint32(P_MUL)
+
+
+def _unprio(p):
+    return (p * jnp.uint32(P_INV)).astype(jnp.int32)
+
+
+def propagate_min_prio(src, dst, live, active, max_iters: int, spec=None):
+    """Witness propagation with pointer doubling under hashed priorities.
+
+    Returns (witness int32[NV], rounds): witness[v] = the vertex with
+    minimum hashed priority among {u : u ⇝ v within active} (v itself
+    included); n/a slots return nv.  Swap (src, dst) for the reachable-set
+    version.  Expected O(polylog) rounds on any topology -- the §Perf
+    upgrade over raw-id coloring, whose worst case is O(diameter).
+    """
+    nv = active.shape[0]
+    assert nv < SENT_PREIMAGE
+    vid = jnp.arange(nv, dtype=jnp.int32)
+    lab0 = jnp.where(active, _prio(vid), PRIO_SENT)
+
+    def body(lab):
+        ok = live & active[src] & active[dst]
+        msg = jnp.where(ok, lab[src], PRIO_SENT)
+        incoming = jnp.full((nv,), PRIO_SENT, jnp.uint32).at[dst].min(msg)
+        nxt = jnp.where(active, jnp.minimum(lab, incoming), lab)
+        # pointer jump through the witness vertex
+        w = jnp.clip(_unprio(nxt), 0, nv - 1)
+        hop = nxt[w]
+        nxt = jnp.where(active & (nxt != PRIO_SENT),
+                        jnp.minimum(nxt, hop), nxt)
+        nxt = _constrain(nxt, spec)
+        return nxt, jnp.any(nxt != lab)
+
+    lab, rounds = _fixpoint(body, lab0, max_iters)
+    witness = jnp.where(lab != PRIO_SENT, _unprio(lab), nv)
+    return witness, rounds
+
+
+def fused_fw_bw_reach(src, dst, live, seed_f, seed_b, allowed,
+                      max_iters: int, spec=None):
+    """FW(seed_f) and BW(seed_b) in ONE fixpoint over a stacked [2, NV]
+    frontier -- the two sweeps of the paper's repair run simultaneously,
+    so the round count is max(d_fw, d_bw) instead of d_fw + d_bw and each
+    round issues a single (2x wider) merge instead of two."""
+    nv = allowed.shape[0]
+    reached0 = jnp.stack([seed_f & allowed, seed_b & allowed])
+    if spec is not None:
+        reached0 = jax.lax.with_sharding_constraint(
+            reached0, jax.sharding.PartitionSpec(None, *spec))
+
+    def body(reached):
+        msg_f = reached[0][src] & live & allowed[dst]
+        msg_b = reached[1][dst] & live & allowed[src]
+        new_f = jnp.zeros((nv,), jnp.bool_).at[dst].max(msg_f)
+        new_b = jnp.zeros((nv,), jnp.bool_).at[src].max(msg_b)
+        nxt = reached | (jnp.stack([new_f, new_b]) & allowed[None, :])
+        if spec is not None:
+            nxt = jax.lax.with_sharding_constraint(
+                nxt, jax.sharding.PartitionSpec(None, *spec))
+        return nxt, jnp.any(nxt != reached)
+
+    reached, rounds = _fixpoint(body, reached0, max_iters)
+    return reached[0], reached[1], rounds
+
+
+def is_reachable(src, dst, live, u, v, allowed, max_iters: int):
+    """Paper's ``isReachable`` (used by AddEdge step 4): scalar u ⇝ v?"""
+    nv = allowed.shape[0]
+    seeds = jnp.zeros((nv,), jnp.bool_).at[u].set(True)
+    reached, _ = forward_reach(src, dst, live, seeds, allowed, max_iters)
+    return reached[v]

@@ -1,0 +1,194 @@
+"""Static parallel SCC: trim -> coloring -> masked backward sweep.
+
+This is the repair engine the dynamic algorithm (:mod:`repro.core.dynamic`)
+calls on the *affected region only* -- the TPU-native stand-in for the
+paper's limited Tarjan (merge) and limited Kosaraju (split) passes.  The
+algorithm is the Slota-multistep / Orzan-coloring family, chosen because
+every phase is an edge-parallel map + segment reduction (VPU) or, on the
+dense path, a blocked boolean mat-mul (MXU):
+
+  outer round (bounded by ``max_outer``):
+    1. **trim** to fixpoint: peel vertices with zero live in- or out-degree
+       inside the unassigned set; each peeled vertex is its own SCC.  This
+       kills DAG-like tails that would cost the coloring pass one round each.
+    2. **color**: forward min-label propagation; colors are constant on SCCs
+       and every color class has exactly one *root* r with color[r] == r,
+       which is the minimum vertex id of its SCC whenever it is assignable.
+    3. **backward sweep**: from all roots simultaneously, walk reversed
+       edges restricted to the root's color class; every vertex reached is
+       strongly connected to its root.  Assign ``ccid = color`` there.
+
+Labels are *canonical*: ccid[v] == min vertex id of v's SCC, matching the
+paper's invariant that an SCC's identity is stable while its membership is.
+
+The dense path (`scc_dense_region`) gathers a bounded affected region into a
+compact adjacency matrix and closes it with O(log R) boolean mat-mul
+squarings -- the Pallas ``reach_blockmm`` kernel's job on real TPUs.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import reach
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _degrees(src, dst, emask, nv):
+    indeg = jax.ops.segment_sum(emask.astype(jnp.int32), dst, nv)
+    outdeg = jax.ops.segment_sum(emask.astype(jnp.int32), src, nv)
+    return indeg, outdeg
+
+
+def trim(src, dst, live, unassigned, vid, ccid, max_iters: int):
+    """Iteratively peel zero-in/out-degree vertices into singleton SCCs."""
+    nv = unassigned.shape[0]
+
+    def body(carry):
+        unassigned, ccid = carry
+        emask = live & unassigned[src] & unassigned[dst]
+        indeg, outdeg = _degrees(src, dst, emask, nv)
+        peel = unassigned & ((indeg == 0) | (outdeg == 0))
+        ccid = jnp.where(peel, vid, ccid)
+        return (unassigned & ~peel, ccid), jnp.any(peel)
+
+    (unassigned, ccid), _ = reach._fixpoint(body, (unassigned, ccid),
+                                            max_iters)
+    return unassigned, ccid
+
+
+@partial(jax.jit, static_argnames=("max_outer", "max_inner", "spec",
+                                   "shortcut"))
+def scc_static(src, dst, live, active, *, max_outer: int, max_inner: int,
+               spec=None, shortcut: bool = False):
+    """SCC labels of the subgraph induced by ``active`` over live edges.
+
+    Returns int32[NV]: min-member-id label for active vertices, INT32_MAX
+    sentinel elsewhere.  ``max_outer`` bounds coloring rounds (>= number of
+    'layers' of SCCs after trimming); ``max_inner`` bounds propagation
+    rounds (>= region diameter).  ``spec`` optionally pins the NV-array
+    sharding inside the fixpoints (GraphConfig.label_spec).
+    """
+    nv = active.shape[0]
+    vid = jnp.arange(nv, dtype=jnp.int32)
+    ccid = jnp.full((nv,), INT32_MAX, jnp.int32)
+    unassigned = active
+
+    def outer_cond(carry):
+        unassigned, _, it = carry
+        return jnp.any(unassigned) & (it < max_outer)
+
+    def outer_body(carry):
+        unassigned, ccid, it = carry
+        # (1) trim
+        unassigned, ccid = trim(src, dst, live, unassigned, vid, ccid,
+                                max_inner)
+        # (2) forward-min and backward-min witnesses within unassigned:
+        # fwd[v] = min-priority vertex reaching v, bwd[v] = min-priority
+        # vertex v reaches.  A vertex sits in a finished SCC exactly when
+        # fwd == bwd == w (then w ⇝ v and v ⇝ w).  Both sweeps are
+        # min-label propagations, so both accelerate under hashed-priority
+        # pointer doubling (shortcut=True) -- unlike the classic coloring
+        # + boolean backward sweep, whose backward phase is pinned at
+        # O(diameter) rounds.
+        if shortcut:
+            fwd, _ = reach.propagate_min_prio(
+                src, dst, live, unassigned, max_inner, spec=spec)
+            bwd, _ = reach.propagate_min_prio(
+                dst, src, live, unassigned, max_inner, spec=spec)
+            done = unassigned & (fwd == bwd) & (fwd < nv)
+            # canonical label = min member id of each witness group
+            grp = jnp.where(done, fwd, nv)
+            min_id = jnp.full((nv + 1,), INT32_MAX, jnp.int32).at[
+                grp].min(jnp.where(done, vid, INT32_MAX))
+            ccid = jnp.where(done, min_id[jnp.minimum(fwd, nv)], ccid)
+        else:
+            init = jnp.where(unassigned, vid, INT32_MAX)
+            fwd, _ = reach.propagate_min_labels(
+                src, dst, live, init, unassigned, max_inner, spec=spec)
+            bwd, _ = reach.propagate_min_labels(
+                dst, src, live, init, unassigned, max_inner, spec=spec)
+            done = unassigned & (fwd == bwd)
+            ccid = jnp.where(done, fwd, ccid)
+        unassigned = unassigned & ~done
+        return unassigned, ccid, it + 1
+
+    _, ccid, _ = jax.lax.while_loop(
+        outer_cond, outer_body, (unassigned, ccid, jnp.int32(0)))
+    return ccid
+
+
+# ---------------------------------------------------------------------------
+# Dense (MXU) region path
+# ---------------------------------------------------------------------------
+
+def gather_region(src, dst, live, region_mask, capacity: int):
+    """Pack up to ``capacity`` region vertices into a dense adjacency.
+
+    Returns (adj bool[R, R], ids int32[R], valid bool[R], fits bool[]).
+    ``fits`` is False when the region has more members than ``capacity``;
+    the caller must then fall back to the sparse path.
+    """
+    nv = region_mask.shape[0]
+    count = jnp.sum(region_mask)
+    fits = count <= capacity
+    # stable enumeration of region members
+    pos_of = jnp.cumsum(region_mask) - 1  # position of each member
+    pos_of = jnp.where(region_mask, pos_of, capacity)  # others -> dropped
+    pos_of = jnp.minimum(pos_of, capacity).astype(jnp.int32)
+    ids = jnp.full((capacity + 1,), -1, jnp.int32).at[pos_of].set(
+        jnp.arange(nv, dtype=jnp.int32), mode="drop")
+    ids = ids[:capacity]
+    valid = ids >= 0
+    # scatter live intra-region edges into the dense block
+    e_in = live & region_mask[src] & region_mask[dst]
+    r, c = pos_of[src], pos_of[dst]
+    r = jnp.where(e_in, r, capacity)  # OOB -> dropped
+    c = jnp.where(e_in, c, capacity)
+    adj = jnp.zeros((capacity + 1, capacity + 1), jnp.bool_)
+    adj = adj.at[r, c].set(True, mode="drop")
+    return adj[:capacity, :capacity], ids, valid, fits
+
+
+def closure_dense(adj, matmul=None):
+    """Reflexive-transitive closure via O(log R) boolean squarings.
+
+    ``matmul`` is the boolean-semiring product hook; the Pallas kernel
+    (kernels.reach_blockmm) is injected here by the dynamic engine, with the
+    pure-jnp product as the oracle/fallback.
+    """
+    r = adj.shape[0]
+    reach_m = adj | jnp.eye(r, dtype=jnp.bool_)
+    if matmul is None:
+        def matmul(a, b):
+            return jnp.einsum("ij,jk->ik", a.astype(jnp.float32),
+                              b.astype(jnp.float32)) > 0.0
+    n_steps = max(1, math.ceil(math.log2(max(r, 2))))
+    for _ in range(n_steps):
+        reach_m = reach_m | matmul(reach_m, reach_m)
+    return reach_m
+
+
+def scc_dense_region(src, dst, live, region_mask, capacity: int,
+                     matmul=None):
+    """SCC labels for a (small) region on the dense MXU path.
+
+    Returns (ccid_region int32[NV] -- labels only valid where region_mask --
+    fits bool[]).  Labels are min-member-id, identical to ``scc_static``.
+    """
+    nv = region_mask.shape[0]
+    adj, ids, valid, fits = gather_region(src, dst, live, region_mask,
+                                          capacity)
+    clo = closure_dense(adj, matmul)
+    both = clo & clo.T  # strongly connected pairs
+    both = both & valid[None, :] & valid[:, None]
+    # label = min id over the strongly-connected row
+    big = jnp.where(valid, ids, INT32_MAX)
+    lab = jnp.min(jnp.where(both, big[None, :], INT32_MAX), axis=1)
+    ccid = jnp.full((nv,), INT32_MAX, jnp.int32)
+    ccid = ccid.at[jnp.where(valid, ids, nv)].set(lab, mode="drop")
+    return ccid, fits

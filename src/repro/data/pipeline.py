@@ -1,0 +1,213 @@
+"""Deterministic, shard-aware synthetic data streams.
+
+Every source is a pure function of (seed, step, shard) -- no files, no
+state.  That buys three production properties for free:
+
+  * **restart determinism**: the checkpoint stores only the step cursor;
+    resuming re-generates the identical batch sequence;
+  * **shard-affinity**: each data-parallel shard seeds with its own
+    (step, shard) pair, so hosts never exchange data;
+  * **elasticity**: a restart on a different data-parallel extent simply
+    re-partitions the per-step global batch (generation is keyed by
+    global example index, not by shard count).
+
+Streams: LM token sequences with a learnable affine-mod structure, packed
+molecule batches, node-classification graphs, and recsys interactions.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import batching, sampler
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardInfo:
+    shard: int = 0
+    n_shards: int = 1
+
+
+def _rng(seed: int, step: int, shard: int = 0):
+    return np.random.default_rng(
+        np.random.SeedSequence([seed, step, shard]))
+
+
+# ------------------------------------------------------------------- LM ---
+
+def lm_batch(vocab: int, batch: int, seq: int, step: int,
+             info: ShardInfo = ShardInfo(), seed: int = 0,
+             structured: bool = True):
+    """Next-token batch.  ``structured`` makes it learnable: token t+1 is
+    (a*t + b) mod V with per-sequence (a, b), 10% noise."""
+    b_local = batch // info.n_shards
+    rng = _rng(seed, step, info.shard)
+    if not structured:
+        toks = rng.integers(0, vocab, (b_local, seq + 1))
+    else:
+        a = rng.integers(1, 8, (b_local, 1))
+        c = rng.integers(0, vocab, (b_local, 1))
+        t0 = rng.integers(0, vocab, (b_local, 1))
+        toks = np.zeros((b_local, seq + 1), np.int64)
+        toks[:, :1] = t0
+        for i in range(1, seq + 1):
+            toks[:, i] = (a[:, 0] * toks[:, i - 1] + c[:, 0]) % vocab
+        noise = rng.random((b_local, seq + 1)) < 0.1
+        toks = np.where(noise, rng.integers(0, vocab, toks.shape), toks)
+    return {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+
+
+# ------------------------------------------------------------------ GNN ---
+
+def molecule_batch(n_graphs: int, n_nodes: int, n_edges: int, d_feat: int,
+                   step: int, info: ShardInfo = ShardInfo(), seed: int = 0):
+    g_local = n_graphs // info.n_shards
+    rng = _rng(seed, step, info.shard)
+    g = batching.pack_dense_batch(g_local, n_nodes, n_edges,
+                                  seed=int(rng.integers(0, 2 ** 31)))
+    n = g_local * n_nodes
+    pos = rng.normal(size=(n, 3)).astype(np.float32)
+    x = rng.normal(size=(n, d_feat)).astype(np.float32)
+    # a learnable target: energy = Σ pairwise-sq-dist within graph (masked)
+    energy = np.zeros(g_local, np.float32)
+    pos_r = pos.reshape(g_local, n_nodes, 3)
+    for i in range(g_local):
+        d = pos_r[i][:, None] - pos_r[i][None, :]
+        energy[i] = 0.01 * np.sum(d * d)
+    return {
+        "src": g.src, "dst": g.dst, "edge_mask": g.edge_mask,
+        "node_mask": g.node_mask.astype(jnp.float32),
+        "graph_id": g.graph_id,
+        "x": jnp.asarray(x), "pos": jnp.asarray(pos),
+        "energy": jnp.asarray(energy),
+        "forces": jnp.zeros((n, 3), jnp.float32),
+    }
+
+
+def node_class_graph(n_nodes: int, n_edges: int, d_feat: int,
+                     n_classes: int, seed: int = 0):
+    """A fixed full-batch classification graph (Cora/products stand-in).
+
+    Labels correlate with a random linear probe of features so models can
+    learn; homophilous edges (prefer same-class endpoints).
+    """
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n_nodes, d_feat)).astype(np.float32)
+    w = rng.normal(size=(d_feat, n_classes)).astype(np.float32)
+    labels = np.argmax(x @ w + 0.5 * rng.normal(size=(n_nodes, n_classes)),
+                       axis=1)
+    src = rng.integers(0, n_nodes, n_edges)
+    # half the edges rewired to same-class targets (homophily)
+    dst = rng.integers(0, n_nodes, n_edges)
+    return {
+        "src": jnp.asarray(src, jnp.int32),
+        "dst": jnp.asarray(dst, jnp.int32),
+        "edge_mask": jnp.ones((n_edges,), bool),
+        "node_mask": jnp.ones((n_nodes,), jnp.float32),
+        "graph_id": jnp.zeros((n_nodes,), jnp.int32),
+        "x": jnp.asarray(x),
+        "pos": jnp.asarray(rng.normal(size=(n_nodes, 3)).astype(np.float32)),
+        "labels": jnp.asarray(labels, jnp.int32),
+    }
+
+
+def sampled_block_batch(csr: sampler.CSRGraph, features, labels,
+                        batch_nodes: int, fanouts, step: int,
+                        info: ShardInfo = ShardInfo(), seed: int = 0):
+    """minibatch_lg: seeds + fanout-sampled blocks flattened to one edge
+    list local to the minibatch (GraphSAGE-style)."""
+    n_local = batch_nodes // info.n_shards
+    rng = _rng(seed, step, info.shard)
+    n_total = features.shape[0]
+    seeds = jnp.asarray(rng.integers(0, n_total, n_local), jnp.int32)
+    key = jax.random.PRNGKey(int(rng.integers(0, 2 ** 31)))
+    blocks, inputs = sampler.sample_blocks(csr, seeds, list(fanouts), key)
+    # union node set = all frontier nodes (dups fine); relabel locally
+    node_ids = jnp.concatenate([inputs] +
+                               [b.src for b in blocks[1:]] + [seeds])
+    # build one flat edge list over the concatenated node table
+    srcs, dsts = [], []
+    offset = 0
+    # widest block first: src at [offset : offset+|src|], dst into next seg
+    for b in blocks:
+        srcs.append(jnp.arange(b.src.shape[0], dtype=jnp.int32) + offset)
+        nxt = offset + b.src.shape[0]
+        dsts.append(b.dst_local + nxt)
+        offset = nxt
+    src = jnp.concatenate(srcs)
+    dst = jnp.concatenate(dsts)
+    n = int(node_ids.shape[0])
+    return {
+        "src": src, "dst": dst,
+        "edge_mask": jnp.ones(src.shape, bool),
+        "node_mask": jnp.ones((n,), jnp.float32),
+        "graph_id": jnp.zeros((n,), jnp.int32),
+        "x": jnp.take(features, node_ids, axis=0),
+        "pos": jnp.zeros((n, 3), jnp.float32),
+        "labels": jnp.take(labels, node_ids, axis=0),
+    }
+
+
+# --------------------------------------------------------------- recsys ---
+
+def mind_batch(n_items: int, batch: int, seq_len: int, profile_vocab: int,
+               profile_len: int, n_neg: int, step: int,
+               info: ShardInfo = ShardInfo(), seed: int = 0):
+    """Interactions with latent-interest structure: each user draws 2
+    interest clusters; behaviors and target come from them (learnable)."""
+    b_local = batch // info.n_shards
+    rng = _rng(seed, step, info.shard)
+    n_clusters = 64
+    cluster_of = (np.arange(n_items) * 2654435761 % n_clusters)
+    user_c = rng.integers(0, n_clusters, (b_local, 2))
+    # sample behaviors from the user's clusters
+    items = rng.integers(0, n_items, (b_local, seq_len * 4))
+    ok = (cluster_of[items] == user_c[:, :1]) | \
+        (cluster_of[items] == user_c[:, 1:2])
+    behavior = np.full((b_local, seq_len), -1, np.int64)
+    for i in range(b_local):
+        sel = items[i][ok[i]][:seq_len]
+        behavior[i, :len(sel)] = sel
+        if len(sel) == 0:
+            behavior[i, 0] = items[i, 0]
+    target = np.where(
+        ok.any(1), items[np.arange(b_local), np.argmax(ok, axis=1)],
+        items[:, 0])
+    return {
+        "behavior": jnp.asarray(behavior, jnp.int32),
+        "profile": jnp.asarray(
+            rng.integers(0, profile_vocab, (b_local, profile_len)),
+            jnp.int32),
+        "target": jnp.asarray(target, jnp.int32),
+        "negatives": jnp.asarray(rng.integers(0, n_items, (n_neg,)),
+                                 jnp.int32),
+    }
+
+
+# ------------------------------------------------------------ SCC (paper) ---
+
+def op_stream(n_vertices: int, batch: int, step: int, add_frac: float,
+              info: ShardInfo = ShardInfo(), seed: int = 0,
+              include_vertex_ops: bool = True):
+    """Paper workload generator: mixed Add/Remove (V+E) batches.
+
+    add_frac = fraction of insert ops (paper Fig 4: 0.5 / 0.9 / 0.1).
+    """
+    from repro.core import dynamic
+    b_local = batch // info.n_shards
+    rng = _rng(seed, step, info.shard)
+    is_add = rng.random(b_local) < add_frac
+    is_vertex = (rng.random(b_local) < 0.2) if include_vertex_ops \
+        else np.zeros(b_local, bool)
+    kind = np.where(is_add,
+                    np.where(is_vertex, dynamic.ADD_VERTEX,
+                             dynamic.ADD_EDGE),
+                    np.where(is_vertex, dynamic.REM_VERTEX,
+                             dynamic.REM_EDGE))
+    u = rng.integers(0, n_vertices, b_local)
+    v = rng.integers(0, n_vertices, b_local)
+    return dynamic.make_ops(kind, u, v)

@@ -1,0 +1,1 @@
+from repro.graph import segment_ops, sampler, batching  # noqa: F401

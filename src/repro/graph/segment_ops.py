@@ -1,0 +1,140 @@
+"""Segment/scatter primitives: the message-passing substrate.
+
+JAX has no native EmbeddingBag and only BCOO sparse, so every sparse op the
+GNN / recsys / SCC stacks need is built here from ``jnp.take`` +
+``jax.ops.segment_*`` (which lower to efficient scatter/gather on TPU).
+
+All functions are shape-polymorphic, jit-able, and differentiable where that
+makes sense (segment_softmax, embedding_bag).  ``num_segments`` is always a
+*static* int so the results are fixed-shape and pjit-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(data, segment_ids, num_segments: int):
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def segment_max(data, segment_ids, num_segments: int):
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+def segment_min(data, segment_ids, num_segments: int):
+    return jax.ops.segment_min(data, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(data, segment_ids, num_segments: int, eps: float = 1e-9):
+    tot = segment_sum(data, segment_ids, num_segments)
+    cnt = segment_sum(jnp.ones(data.shape[:1], data.dtype), segment_ids,
+                      num_segments)
+    cnt = jnp.maximum(cnt, eps)
+    return tot / cnt.reshape((num_segments,) + (1,) * (data.ndim - 1))
+
+
+def segment_std(data, segment_ids, num_segments: int, eps: float = 1e-5):
+    """Per-segment standard deviation (PNA-style aggregator)."""
+    mean = segment_mean(data, segment_ids, num_segments)
+    sq = segment_mean(data * data, segment_ids, num_segments)
+    var = jnp.maximum(sq - mean * mean, 0.0)
+    return jnp.sqrt(var + eps)
+
+
+def segment_softmax(logits, segment_ids, num_segments: int):
+    """Numerically-stable softmax within each segment (GAT edge softmax)."""
+    seg_max = segment_max(logits, segment_ids, num_segments)
+    # empty segments produce -inf max; gather is safe, result unused.
+    shifted = logits - jnp.take(seg_max, segment_ids, axis=0)
+    ex = jnp.exp(shifted)
+    denom = segment_sum(ex, segment_ids, num_segments)
+    denom = jnp.take(denom, segment_ids, axis=0)
+    return ex / jnp.maximum(denom, 1e-30)
+
+
+def segment_normalize(data, segment_ids, num_segments: int, eps: float = 1e-9):
+    """L2-normalize each segment's vector sum (capsule squash helper)."""
+    s = segment_sum(data, segment_ids, num_segments)
+    n = jnp.linalg.norm(s, axis=-1, keepdims=True)
+    return s / jnp.maximum(n, eps)
+
+
+def embedding_bag(table, ids, offsets=None, *, mode: str = "sum",
+                  weights=None):
+    """EmbeddingBag: gather rows of ``table`` and reduce per bag.
+
+    JAX has no ``nn.EmbeddingBag``; this is the canonical construction
+    (``jnp.take`` + ``segment_sum``) the mandate asks for.
+
+    Args:
+      table:   [V, D] embedding matrix.
+      ids:     either int[B, L] (fixed-size bags; pad with id<0 to mask) or
+               int[N] flat ids used together with ``offsets``.
+      offsets: optional int[B] start offsets into flat ``ids`` (torch
+               EmbeddingBag semantics).  When given, ``ids`` must be 1-D.
+      mode:    'sum' | 'mean' | 'max'.
+      weights: optional per-id weights (same shape as ids) for weighted sum.
+
+    Returns [B, D].
+    """
+    if offsets is not None:
+        n = ids.shape[0]
+        b = offsets.shape[0]
+        # bag id of each flat position: count of offsets <= pos, minus 1
+        pos = jnp.arange(n)
+        bag = jnp.sum(pos[:, None] >= offsets[None, :], axis=1) - 1
+        valid = ids >= 0
+        rows = jnp.take(table, jnp.maximum(ids, 0), axis=0)
+        if weights is not None:
+            rows = rows * weights[:, None]
+        rows = jnp.where(valid[:, None], rows, 0.0)
+        if mode == "sum":
+            return segment_sum(rows, bag, b)
+        if mode == "mean":
+            cnt = segment_sum(valid.astype(table.dtype), bag, b)
+            return segment_sum(rows, bag, b) / jnp.maximum(cnt, 1.0)[:, None]
+        if mode == "max":
+            rows = jnp.where(valid[:, None], rows, -jnp.inf)
+            out = segment_max(rows, bag, b)
+            return jnp.where(jnp.isfinite(out), out, 0.0)
+        raise ValueError(mode)
+
+    # fixed-shape [B, L] bags
+    b, l = ids.shape
+    valid = ids >= 0
+    rows = jnp.take(table, jnp.maximum(ids, 0), axis=0)  # [B, L, D]
+    if weights is not None:
+        rows = rows * weights[..., None]
+    rows = jnp.where(valid[..., None], rows, 0.0)
+    if mode == "sum":
+        return jnp.sum(rows, axis=1)
+    if mode == "mean":
+        cnt = jnp.sum(valid, axis=1, keepdims=True).astype(table.dtype)
+        return jnp.sum(rows, axis=1) / jnp.maximum(cnt, 1.0)
+    if mode == "max":
+        rows = jnp.where(valid[..., None], rows, -jnp.inf)
+        out = jnp.max(rows, axis=1)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(mode)
+
+
+def scatter_or(dst_bool, index, src_bool):
+    """dst[index] |= src for boolean arrays (frontier push)."""
+    return dst_bool.at[index].max(src_bool)
+
+
+def coo_spmm(src, dst, edge_val, x, num_nodes: int):
+    """y = A @ x with A given as COO (src -> dst messages).
+
+    y[d] = sum over edges e with dst[e]=d of edge_val[e] * x[src[e]].
+    ``edge_val`` may be None (unweighted adjacency) or float[E].
+    """
+    msg = jnp.take(x, src, axis=0)
+    if edge_val is not None:
+        msg = msg * edge_val.reshape((-1,) + (1,) * (x.ndim - 1))
+    return segment_sum(msg, dst, num_nodes)
+
+
+def degree(dst, num_nodes: int, dtype=jnp.float32):
+    return segment_sum(jnp.ones(dst.shape, dtype), dst, num_nodes)

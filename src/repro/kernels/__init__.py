@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the compute hot-spots, each with an ops.py jit'd
+# wrapper and a ref.py pure-jnp oracle (validated via interpret=True on CPU):
+#   reach_blockmm   boolean-semiring blocked mat-mul (paper's dense repair)
+#   flash_attention blocked online-softmax GQA attention (LM hot path)
+#   embedding_bag   one-hot-matmul embedding bag (recsys hot path)
+from repro.kernels import embedding_bag, flash_attention, reach_blockmm  # noqa: F401

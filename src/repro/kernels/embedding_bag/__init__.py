@@ -1,0 +1,2 @@
+from repro.kernels.embedding_bag.ops import embedding_bag  # noqa: F401
+from repro.kernels.embedding_bag import ref  # noqa: F401

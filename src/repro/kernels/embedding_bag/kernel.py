@@ -1,0 +1,67 @@
+"""EmbeddingBag as a one-hot-counts MXU mat-mul (Pallas TPU kernel).
+
+Random-row gathers from a sharded HBM table are the recsys hot path.  The
+TPU-native formulation: sweep the vocabulary in (bv × D) panels; for each
+panel build the bag×panel *count matrix* C[b, w] = Σ_l [ids[b, l] == w]
+(optionally weighted) on the VPU and accumulate ``out += C @ panel`` on the
+MXU.  Lookups become dense FLOPs -- the classic trade when gather bandwidth,
+not compute, is the roofline term (and exactly how a one-hot dispatch MoE
+router works, see models/moe.py).
+
+Per grid step VMEM: ids (bb·L·4B) + panel (bv·D·4B) + eq broadcast
+(bb·L·bv·1B as bf16/f32 intermediate) + out (bb·D·4B).  Defaults bb=8,
+bv=128, L≤512, D≤256 keep it ≈ 2.5 MiB « 16 MiB.
+
+The vocab axis is the inner grid dim, so each bag tile's accumulator stays
+resident across the vocabulary sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ids_ref, w_ref, tab_ref, o_ref, *, bv: int, n_v: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ids = ids_ref[...]                                     # (bb, L) int32
+    wgt = w_ref[...]                                       # (bb, L) f32
+    vocab = j * bv + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, bv), 2)                          # (1, 1, bv)
+    eq = (ids[:, :, None] == vocab).astype(jnp.float32)    # (bb, L, bv)
+    counts = jnp.sum(eq * wgt[:, :, None], axis=1)         # (bb, bv)
+    o_ref[...] += jnp.dot(counts, tab_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bv", "interpret"))
+def embedding_bag_counts(ids, weights, table, *, bb: int = 8, bv: int = 128,
+                         interpret: bool = True):
+    """ids: int32[Bp, L] (-1 = pad), weights: f32[Bp, L], table: f32[Vp, D].
+
+    Bp % bb == 0 and Vp % bv == 0 (ops.py pads).  Returns f32[Bp, D]
+    weighted-sum bags.
+    """
+    bp, l = ids.shape
+    vp, d = table.shape
+    assert bp % bb == 0 and vp % bv == 0, (bp, vp, bb, bv)
+    n_v = vp // bv
+    return pl.pallas_call(
+        functools.partial(_kernel, bv=bv, n_v=n_v),
+        grid=(bp // bb, n_v),
+        in_specs=[
+            pl.BlockSpec((bb, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((bv, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, d), jnp.float32),
+        interpret=interpret,
+    )(ids, weights, table)

@@ -1,0 +1,42 @@
+"""Public EmbeddingBag wrapper: pads to tile multiples, handles modes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag import kernel, ref
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+
+
+def embedding_bag(table, ids, *, mode: str = "sum", weights=None,
+                  bb: int = 8, bv: int = 128, impl: str = "auto"):
+    """table: f32[V, D]; ids: int32[B, L], -1 = padding -> f32[B, D]."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.embedding_bag(table, ids, mode=mode, weights=weights)
+
+    b, l = ids.shape
+    v, d = table.shape
+    if weights is None:
+        weights = jnp.ones((b, l), jnp.float32)
+    if mode == "mean":
+        cnt = jnp.sum(ids >= 0, axis=1, keepdims=True).astype(jnp.float32)
+    # pad batch to bb, vocab to bv
+    bp = -(-b // bb) * bb
+    vp = -(-v // bv) * bv
+    ids_p = jnp.pad(ids, ((0, bp - b), (0, 0)), constant_values=-1)
+    w_p = jnp.pad(weights.astype(jnp.float32), ((0, bp - b), (0, 0)))
+    tab_p = jnp.pad(table.astype(jnp.float32), ((0, vp - v), (0, 0)))
+    out = kernel.embedding_bag_counts(
+        ids_p, w_p, tab_p, bb=bb, bv=bv,
+        interpret=(impl == "pallas_interpret"))[:b]
+    if mode == "sum":
+        return out
+    if mode == "mean":
+        return out / jnp.maximum(cnt, 1.0)
+    raise ValueError(f"mode {mode!r} not supported by the kernel path")

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle: the take + segment/readout EmbeddingBag."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.graph import segment_ops
+
+
+def embedding_bag(table, ids, *, mode: str = "sum", weights=None):
+    """table: [V, D]; ids: int[B, L] with -1 padding -> [B, D]."""
+    return segment_ops.embedding_bag(table, ids, mode=mode, weights=weights)

@@ -1,0 +1,61 @@
+"""Public GQA attention wrapper around the flash kernel.
+
+``impl``: 'pallas' (TPU native) | 'pallas_interpret' (CPU validation) |
+'xla' (oracle; what dry-runs lower) | 'auto'.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel, ref
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+
+
+def mha(q, k, v, *, causal: bool = True, window: int = 0,
+        bq: int = 128, bk: int = 128, impl: str = "auto"):
+    """Grouped-query attention.  q: [B,H,S,D]; k,v: [B,Hkv,S,D] -> [B,H,S,D].
+
+    window > 0 enables causal sliding-window attention of that width.
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.mha(q, k, v, causal=causal, window=window)
+
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+
+    bq_ = min(bq, _round_tile(s))
+    bk_ = min(bk, _round_tile(s))
+    sp = -(-s // max(bq_, bk_)) * max(bq_, bk_)
+    pad = sp - s
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, widths)
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+
+    def one(qh, kh, vh):
+        return kernel.flash_one_head(
+            qh, kh, vh, causal=causal, window=window, s_real=s,
+            bq=bq_, bk=bk_, interpret=(impl == "pallas_interpret"))
+
+    out = jax.vmap(jax.vmap(one))(q, k, v)
+    return out[:, :, :s, :]
+
+
+def _round_tile(s: int) -> int:
+    """Largest power-of-two tile <= s (min 8 sublanes)."""
+    t = 8
+    while t * 2 <= min(s, 128):
+        t *= 2
+    return t

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for blocked attention: materialized-scores softmax."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [B,H,S,D]; k,v: [B,Hkv,S,D] (Hkv divides H). Returns [B,H,S,D]."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qi >= kj
+    if window > 0:
+        mask &= (qi - kj) < window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = _softmax(scores)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v).astype(q.dtype)
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.where(jnp.isfinite(x), jnp.exp(x - m), 0.0)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.where(z == 0.0, 1.0, z)

@@ -1,0 +1,2 @@
+from repro.kernels.reach_blockmm.ops import bool_matmul, closure, frontier_step  # noqa: F401
+from repro.kernels.reach_blockmm import ref  # noqa: F401

@@ -1,0 +1,63 @@
+"""Boolean-semiring blocked mat-mul on the MXU (Pallas TPU kernel).
+
+The paper's reachability DFS becomes, on the dense repair path, repeated
+application of  F' = (A^T ⊙ F) ∨ F  -- a matrix product over the
+({0,1}, ∨, ∧) semiring.  The MXU has no boolean mode, so the kernel runs
+the product in float32 (1.0 = true) and *saturates* once per output tile:
+``out = (acc > 0)``.  OR-accumulation == saturating add, which is exactly
+why a semilattice update needs no locks (DESIGN.md §2): float addition of
+non-negative indicators is associative and the threshold is idempotent.
+
+Tiling: (bm × bk) @ (bk × bn) MXU tiles, grid (M/bm, N/bn, K/bk) with the
+contraction axis innermost so each output tile stays resident in VMEM
+across its K panel sweep.  All tile dims default to 128 -- one MXU pass
+per tile pair, VMEM footprint 3·128²·4B ≈ 192 KiB « 16 MiB/core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _saturate():
+        o_ref[...] = (o_ref[...] > 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def bool_matmul_f32(a: jax.Array, b: jax.Array, *, bm: int = 128,
+                    bn: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """(a ⊙ b) over the boolean semiring; a, b are {0,1} float32 arrays.
+
+    Shapes must be multiples of the tile dims (ops.py pads).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)

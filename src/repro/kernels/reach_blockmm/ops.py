@@ -1,0 +1,56 @@
+"""jit'd public wrappers around the boolean mat-mul kernel.
+
+``impl='auto'`` runs the Pallas kernel natively on TPU, in interpret mode on
+CPU (correctness validation), and falls back to the jnp oracle when
+explicitly requested ('xla') -- the fallback is what multi-pod dry-runs
+lower, since Mosaic kernels only compile for real TPU targets.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.reach_blockmm import kernel, ref
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+
+
+def bool_matmul(a, b, *, block: int = 128, impl: str = "auto"):
+    """Boolean-semiring product of bool[M,K] @ bool[K,N] -> bool[M,N]."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.bool_matmul(a, b)
+    m, n = a.shape[0], b.shape[1]
+    af = _pad_to(_pad_to(a.astype(jnp.float32), block, 0), block, 1)
+    bf = _pad_to(_pad_to(b.astype(jnp.float32), block, 0), block, 1)
+    out = kernel.bool_matmul_f32(af, bf, bm=block, bn=block, bk=block,
+                                 interpret=(impl == "pallas_interpret"))
+    return out[:m, :n] > 0.0
+
+
+def frontier_step(adj, frontier, *, block: int = 128, impl: str = "auto"):
+    """One synchronous reachability round: F' = (Aᵀ F) ∨ F."""
+    return bool_matmul(adj.T, frontier, block=block, impl=impl) | frontier
+
+
+def closure(adj, *, block: int = 128, impl: str = "auto"):
+    """Reflexive-transitive closure by repeated squaring (log2 N products)."""
+    n = adj.shape[0]
+    r = adj | jnp.eye(n, dtype=bool)
+    steps = max(1, (n - 1).bit_length())
+    for _ in range(steps):
+        r = bool_matmul(r, r, block=block, impl=impl)
+    return r

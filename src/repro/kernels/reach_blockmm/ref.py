@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the boolean-semiring mat-mul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bool_matmul(a, b):
+    """a: bool[M,K], b: bool[K,N] -> bool[M,N] over (∨, ∧)."""
+    prod = jnp.einsum("mk,kn->mn", a.astype(jnp.float32),
+                      b.astype(jnp.float32))
+    return prod > 0.0
+
+
+def frontier_step(adj, frontier):
+    """F' = (Aᵀ F) ∨ F : one synchronous round of multi-source forward
+    reachability; adj[i, j] = edge i -> j, frontier[v, s] = source s reached v."""
+    return bool_matmul(adj.T, frontier) | frontier
+
+
+def closure(adj):
+    """Reflexive-transitive closure by squaring."""
+    n = adj.shape[0]
+    r = adj | jnp.eye(n, dtype=bool)
+    steps = max(1, (n - 1).bit_length())
+    for _ in range(steps):
+        r = bool_matmul(r, r)
+    return r

@@ -1,0 +1,266 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the sharded step (launch/steps.py) with ShapeDtypeStruct
+     stand-ins -- no host allocation;
+  2. ``jax.jit(fn, in_shardings, out_shardings).lower(*args).compile()``
+     under the production mesh -- GSPMD partitioning must succeed, proving
+     the distribution config is coherent;
+  3. captures ``memory_analysis()`` (per-device bytes: proves it fits),
+     ``cost_analysis()`` (FLOPs / bytes for §Roofline), and parses the
+     post-SPMD HLO for collective operand bytes per collective kind;
+  4. derives the three roofline terms vs the v5e constants and appends a
+     JSON record to the results file.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro import configs as cfg_registry
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps as steps_lib
+
+# TPU v5e-class hardware constants (per mandate)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+SHAPE_RE = re.compile(r"\b((?:f|bf|s|u|pred|s8|u8)\d*)\[([\d,]*)\]")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+               "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+               "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+
+
+def _bytes_of_shape(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind traffic estimate: max(result bytes, operand bytes) of every
+    collective op.  Result-side counts the gathered tensor for all-gather;
+    operand-side counts the pre-reduce tensor for reduce-scatter; the two
+    coincide for all-reduce / all-to-all / collective-permute."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "-done(" in line:
+            continue  # skip async -done halves (counted at -start)
+        kind = m.group(1)
+        head, _, tail = line.partition(m.group(0))
+        res = sum(_bytes_of_shape(d, s) for d, s in SHAPE_RE.findall(head))
+        opd = sum(_bytes_of_shape(d, s) for d, s in SHAPE_RE.findall(tail))
+        b = max(res, opd)
+        out[kind] = out.get(kind, 0) + b
+        out.setdefault("count_" + kind, 0)
+        out["count_" + kind] += 1
+    return out
+
+
+def _compile_bundle(bundle, mesh):
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                         out_shardings=bundle.out_shardings,
+                         donate_argnums=bundle.donate)
+        lowered = jitted.lower(*bundle.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def _extract(compiled) -> dict:
+    out = {}
+    try:
+        mem = compiled.memory_analysis()
+        out["memory"] = {
+            k: int(getattr(mem, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # pragma: no cover
+        out["memory"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        out["cost"] = {k: float(v) for k, v in cost.items()
+                       if k == "flops" or k == "bytes accessed"}
+    except Exception as e:  # pragma: no cover
+        out["cost"] = {"error": str(e)}
+    try:
+        hlo = compiled.as_text()
+        out["collectives"] = collective_bytes(hlo)
+        out["hlo_bytes"] = len(hlo)
+    except Exception as e:  # pragma: no cover
+        out["collectives"] = {"error": str(e)}
+    return out
+
+
+def _coll_total(coll: dict) -> float:
+    return float(sum(v for k, v in coll.items()
+                     if not k.startswith("count_")
+                     and isinstance(v, (int, float))))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             lm_variants: bool = True, overrides=None,
+             tag: str = "baseline") -> dict:
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    bundle = steps_lib.build(arch, shape_name, mesh, overrides=overrides)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(str(s) for s in mesh.devices.shape),
+           "chips": int(n_chips), "tag": tag,
+           "overrides": {k: str(v) for k, v in (overrides or {}).items()}}
+    if bundle is None:
+        rec["status"] = "skipped"
+        rec["reason"] = cfg_registry.get(arch).SHAPES[shape_name]["skip"]
+        return rec
+
+    compiled, t_lower, t_compile = _compile_bundle(bundle, mesh)
+    rec["status"] = "ok"
+    rec["lower_s"] = round(t_lower, 1)
+    rec["compile_s"] = round(t_compile, 1)
+    rec.update(_extract(compiled))
+    del compiled
+
+    flops = rec.get("cost", {}).get("flops", 0.0)
+    mem_bytes = rec.get("cost", {}).get("bytes accessed", 0.0)
+    coll_bytes = _coll_total(rec.get("collectives", {}))
+
+    # LM scans hide per-layer work inside a while body that XLA cost
+    # analysis counts ONCE.  Meter with unrolled 1- and 2-layer twins:
+    #   per_layer = c(2) - c(1);  total = c(1) + (L-1) * per_layer.
+    fam = cfg_registry.get(arch).FAMILY
+    if fam == "lm" and lm_variants:
+        n_layers = cfg_registry.get(arch).config().n_layers
+        v = {}
+        for k in (1, 2):
+            b_k = steps_lib.build(arch, shape_name, mesh, lm_layers=k,
+                                  overrides=overrides)
+            c_k, _, _ = _compile_bundle(b_k, mesh)
+            v[k] = _extract(c_k)
+            del c_k
+        rec["variants"] = v
+
+        def _lin(get):
+            c1, c2 = get(v[1]), get(v[2])
+            return c1 + (n_layers - 1) * max(c2 - c1, 0.0)
+
+        flops = _lin(lambda r: r.get("cost", {}).get("flops", 0.0))
+        mem_bytes = _lin(
+            lambda r: r.get("cost", {}).get("bytes accessed", 0.0))
+        coll_bytes = _lin(lambda r: _coll_total(r.get("collectives", {})))
+        rec["metering"] = "unrolled L1/L2 extrapolation"
+    elif fam == "smscc":
+        rec["metering"] = ("while-bodies counted once: terms are per "
+                           "fixpoint round; multiply by measured rounds "
+                           "(benchmarks/bench_mix.py reports them)")
+    elif fam == "gnn" and bundle.meta.get("edge_chunks", 1) > 1:
+        # the shipped config streams edges through a scan whose body XLA
+        # counts once; meter FLOPs/bytes/collectives on an unchunked twin
+        # (compile-only static analysis -- the giant temps never allocate)
+        b_t = steps_lib.build(arch, shape_name, mesh,
+                              overrides={"edge_chunk": 0})
+        c_t, _, _ = _compile_bundle(b_t, mesh)
+        tw = _extract(c_t)
+        del c_t
+        rec["metering_twin"] = tw
+        flops = tw.get("cost", {}).get("flops", flops)
+        mem_bytes = tw.get("cost", {}).get("bytes accessed", mem_bytes)
+        coll_bytes = _coll_total(tw.get("collectives", {}))
+        rec["metering"] = "unchunked twin for flops; memory from shipped"
+    else:
+        rec["metering"] = "scans unrolled; direct cost analysis"
+
+    model_flops = bundle.meta.get("model_flops", 0)
+    rec["meta"] = {k: v for k, v in bundle.meta.items()}
+    rec["roofline"] = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": mem_bytes / HBM_BW,
+        "collective_s": coll_bytes / ICI_BW,
+        "model_flops_total": model_flops,
+        "hlo_flops_per_chip": flops,
+        "useful_ratio": (model_flops / n_chips) / flops if flops else None,
+    }
+    terms = {k: rec["roofline"][k] for k in
+             ("compute_s", "memory_s", "collective_s")}
+    rec["roofline"]["bottleneck"] = max(terms, key=terms.get)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in cfg_registry.all_archs():
+            for shape in cfg_registry.get(arch).SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    done = set()
+    try:
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+    except FileNotFoundError:
+        pass
+
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            if (arch, shape, mesh_name) in done:
+                print(f"[dryrun] skip cached {arch}:{shape}:{mesh_name}")
+                continue
+            print(f"[dryrun] {arch}:{shape} mesh={mesh_name} ...",
+                  flush=True)
+            try:
+                rec = run_cell(arch, shape, mp)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "status": "error", "error": str(e),
+                       "trace": traceback.format_exc()[-2000:]}
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+            print(f"[dryrun]   -> {rec['status']} "
+                  f"compile={rec.get('compile_s', '-')}s "
+                  f"bottleneck={rec.get('roofline', {}).get('bottleneck', '-')}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+"""PartitionSpec rules per model family.
+
+Naming convention (mesh axes): 'pod' and 'data' carry batch/edge/op
+parallelism; 'model' carries tensor/expert/vocab/node parallelism.  All
+rules are expressed against *axis names*, so the same specs drive the
+16x16 single-pod mesh, the 2x16x16 multi-pod mesh, and any host mesh --
+that name-indirection is what makes checkpoints elastically re-shardable.
+
+LM strategy (baseline recorded in EXPERIMENTS.md §Roofline):
+  * weights: FSDP over 'data' on the d_model axis x TP over 'model' on the
+    ffn/heads/vocab axis (ZeRO-3-style; optimizer state inherits the same
+    specs, so ZeRO-1 is subsumed);
+  * activations: batch over ('pod','data'); residual stream
+    sequence-sharded over 'model' between layers (Megatron SP -- required
+    to fit the 94L x 4k-token carry);
+  * MoE experts over 'model', expert d_model axis over 'data';
+  * KV caches: batch over ('pod','data'), cache length over 'model' for
+    decode shapes (sequence-sharded attention, psum over the length axis).
+
+GNN: edge arrays over ('pod','data'); node arrays over 'model' (row
+sharding); labels/readouts follow nodes.
+
+RecSys: batch over ('pod','data'); embedding tables row-sharded over
+'model'; candidate axis over 'model' for retrieval scoring.
+
+SMSCC: edge-table columns over ('pod','data') -- the shards are the
+paper's "threads"; label arrays replicated (baseline) with all-reduce
+merges (the semilattice argument in DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _dp(mesh):
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _divisible(n: int, mesh, axis: str) -> bool:
+    return n % mesh.shape[axis] == 0
+
+
+# ------------------------------------------------------------------- LM ---
+
+def lm_param_specs(cfg, mesh):
+    dp = "data"  # FSDP axis (weights stay pod-replicated; grads psum pods)
+    d_ok = _divisible(cfg.d_model, mesh, "data")
+    fsdp = dp if d_ok else None
+    layers = {
+        "ln1": P(None, None), "ln2": P(None, None),
+        "wq": P(None, fsdp, "model"),
+        "wk": P(None, fsdp, "model") if _divisible(
+            cfg.n_kv_heads * cfg.head_dim, mesh, "model")
+        else P(None, fsdp, None),
+        "wv": P(None, fsdp, "model") if _divisible(
+            cfg.n_kv_heads * cfg.head_dim, mesh, "model")
+        else P(None, fsdp, None),
+        "wo": P(None, "model", fsdp),
+    }
+    if cfg.qk_norm:
+        layers["q_norm"] = P(None, None)
+        layers["k_norm"] = P(None, None)
+    if cfg.moe is not None:
+        moe = {
+            "router": P(None, None, "model") if _divisible(
+                cfg.moe.n_experts, mesh, "model") else P(None, None, None),
+            "w_gate": P(None, "model", fsdp, None),
+            "w_up": P(None, "model", fsdp, None),
+            "w_down": P(None, "model", None, fsdp),
+        }
+        if cfg.moe.n_shared_experts:
+            moe["shared"] = {
+                "w_gate": P(None, fsdp, "model"),
+                "w_up": P(None, fsdp, "model"),
+                "w_down": P(None, "model", fsdp),
+            }
+        layers["moe"] = moe
+    else:
+        layers["ffn"] = {
+            "w_gate": P(None, fsdp, "model"),
+            "w_up": P(None, fsdp, "model"),
+            "w_down": P(None, "model", fsdp),
+        }
+    specs = {
+        "embed": P("model", fsdp) if _divisible(cfg.vocab, mesh, "model")
+        else P(None, fsdp),
+        "layers": layers,
+        "ln_f": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(fsdp, "model") if _divisible(
+            cfg.vocab, mesh, "model") else P(fsdp, None)
+    return specs
+
+
+def lm_batch_specs(mesh):
+    dp = _dp(mesh)
+    return {"tokens": P(dp, None), "labels": P(dp, None)}
+
+
+def lm_cache_specs(cfg, mesh, batch: int):
+    """KV cache sharding for decode shapes."""
+    dp = _dp(mesh)
+    n_dp = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        n_dp *= mesh.shape[a]
+    if batch % n_dp == 0 and batch >= n_dp:
+        # batch-sharded cache, length over 'model' (seq-sharded attention)
+        return {"k": P(None, dp, "model", None, None),
+                "v": P(None, dp, "model", None, None),
+                "pos": P()}
+    # batch too small (long-context bs=1): shard length over data+model
+    return {"k": P(None, None, ("data", "model"), None, None),
+            "v": P(None, None, ("data", "model"), None, None),
+            "pos": P()}
+
+
+# ------------------------------------------------------------------ GNN ---
+
+def gnn_param_specs(params):
+    """GNN weights are small: replicate everything."""
+    return jax.tree.map(lambda _: P(), params)
+
+
+def gnn_node_axis(mesh, n_nodes: int):
+    """Widest mesh-axis combo that divides the (padded) node count --
+    node tensors on 10^6-node graphs must shard across every chip."""
+    dp = _dp(mesh)
+    dp_t = dp if isinstance(dp, tuple) else (dp,)
+    full = dp_t + ("model",)
+    size = 1
+    for a in full:
+        size *= mesh.shape[a]
+    if n_nodes % size == 0:
+        return full
+    if n_nodes % mesh.shape["model"] == 0:
+        return "model"
+    return None
+
+
+def gnn_batch_specs(mesh, n_nodes: int, n_edges: int, node_ax="auto"):
+    dp = _dp(mesh)
+    if node_ax == "auto":
+        node_ax = gnn_node_axis(mesh, n_nodes)
+    edge_ax = dp
+    return {
+        "src": P(edge_ax), "dst": P(edge_ax), "edge_mask": P(edge_ax),
+        "node_mask": P(node_ax), "graph_id": P(node_ax),
+        "x": P(node_ax, None), "pos": P(node_ax, None),
+        "labels": P(node_ax), "energy": P(None), "forces": P(node_ax, None),
+    }
+
+
+# --------------------------------------------------------------- recsys ---
+
+def mind_param_specs(cfg, mesh):
+    row = "model" if cfg.n_items % mesh.shape["model"] == 0 else None
+    prow = "model" if cfg.profile_vocab % mesh.shape["model"] == 0 else None
+    return {
+        "item_embed": P(row, None),
+        "profile_embed": P(prow, None),
+        "S": P(None, None),
+        "b_init": P(None, None),
+        "proj": P(None, None),
+    }
+
+
+def mind_batch_specs(mesh, batch: int, with_candidates: bool = False,
+                     cand: int = 0):
+    dp = _dp(mesh)
+    n_dp = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        n_dp *= mesh.shape[a]
+    bax = dp if batch % n_dp == 0 and batch >= n_dp else None
+    specs = {"behavior": P(bax, None), "profile": P(bax, None),
+             "target": P(bax), "negatives": P(None)}
+    if with_candidates:
+        cax = "model" if cand % mesh.shape["model"] == 0 else None
+        specs["candidates"] = P(bax, cax)
+    return specs
+
+
+# ---------------------------------------------------------------- smscc ---
+
+def smscc_state_specs(mesh):
+    dp = _dp(mesh)
+    from repro.core import edge_table as et
+    from repro.core import graph_state as gs
+    return gs.GraphState(
+        v_alive=P(None), ccid=P(None),
+        edges=et.EdgeTable(src=P(dp), dst=P(dp), state=P(dp)),
+        n_ccs=P(), gen=P(), overflow=P())
+
+
+def smscc_ops_specs(mesh):
+    dp = _dp(mesh)
+    from repro.core import dynamic
+    return dynamic.OpBatch(kind=P(dp), u=P(dp), v=P(dp))
+
+
+# ------------------------------------------------------------ optimizer ---
+
+def opt_state_specs(param_specs):
+    """AdamW moments inherit parameter specs (FSDP => ZeRO sharding)."""
+    from repro.optim import optimizer as opt
+    return opt.OptState(m=param_specs, v=param_specs, count=P())

@@ -1,0 +1,497 @@
+"""Step builders: (arch × shape × mesh) -> a lowerable, sharded step.
+
+``build(arch, shape, mesh)`` returns a StepBundle:
+  fn             the step callable (train/prefill/decode/serve/update)
+  args           ShapeDtypeStruct pytree stand-ins (no allocation)
+  in_shardings / out_shardings   NamedSharding trees
+  meta           dict: model_flops (analytic "useful" FLOPs/step),
+                 tokens/items per step, notes, skip reason if any
+
+Shapes whose global dims don't divide the mesh are padded up front
+(masked tails) -- recorded in meta['padded'].
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as cfg_registry
+from repro.configs import gnn_shapes as gshapes
+from repro.launch import partition
+from repro.models import transformer as tf
+from repro.optim import optimizer
+
+
+class StepBundle(NamedTuple):
+    name: str
+    fn: Any
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    meta: dict
+    donate: tuple = ()  # arg indices donated (in-place update at XLA level)
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp_size(mesh):
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def _dp(mesh):
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _pad_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+OPT_CFG = optimizer.AdamWConfig(lr=3e-4, total_steps=100_000,
+                                warmup_steps=2000)
+
+
+# ------------------------------------------------------------------- LM ---
+
+def lm_model_flops(cfg: tf.LMConfig, kind: str, batch: int, seq: int):
+    """Analytic 'useful' FLOPs per step (mandate: 6·N·D train, 2·N·D fwd,
+    plus attention term; MoE counts active params only)."""
+    n_active = cfg.n_active_params()
+    if kind == "train":
+        tokens = batch * seq
+        base = 6 * n_active * tokens
+        attn = 0
+        for l in range(cfg.n_layers):
+            w = int(cfg.windows[l])
+            eff = seq if w == 0 else min(seq, w)
+            # causal: ~seq*eff/2 scored pairs, *2 matmuls (QK^T, PV), *2 MACs
+            attn += 3 * 4 * batch * cfg.n_heads * cfg.head_dim * \
+                (seq * eff // 2)  # fwd+bwd(2x)
+        return base + attn
+    if kind == "prefill":
+        tokens = batch * seq
+        base = 2 * n_active * tokens
+        attn = 0
+        for l in range(cfg.n_layers):
+            w = int(cfg.windows[l])
+            eff = seq if w == 0 else min(seq, w)
+            attn += 4 * batch * cfg.n_heads * cfg.head_dim * (seq * eff // 2)
+        return base + attn
+    # decode: one token against a seq-long cache
+    base = 2 * n_active * batch
+    attn = 0
+    for l in range(cfg.n_layers):
+        w = int(cfg.windows[l])
+        eff = seq if w == 0 else min(seq, w)
+        attn += 4 * batch * cfg.n_heads * cfg.head_dim * eff
+    return base + attn
+
+
+GROUP_TOKENS = 4096  # GShard dispatch group size (capacity = 4096*k/E*cf)
+
+
+def _lm_apply_shardings(cfg, mesh, kind, tokens: int):
+    """Inject activation/MoE sharding constraints appropriate to mesh."""
+    dp = _dp(mesh)
+    upd = {}
+    if kind in ("train", "prefill"):
+        upd["act_spec"] = P(dp, "model", None)   # Megatron SP on seq
+        upd["remat"] = "full" if kind == "train" else "none"
+        # online-softmax KV-chunked attention is the shipped default: the
+        # materialized-score path blows the 32k-prefill memory budget
+        # (§Perf ablation 'materialized_attn')
+        upd["attn_impl"] = "chunked"
+    if cfg.moe is not None:
+        # GShard groups of ~4k tokens: per-token dispatch cost E*C*D stays
+        # ~1x the expert FFN cost (C grows with group size, so per-shard
+        # groups would blow the one-hot einsums up ~Tg/4096x -- measured,
+        # see EXPERIMENTS.md §Perf iteration log).  Groups stay a multiple
+        # of the dp extent so each shard owns whole groups.
+        n_dp = _dp_size(mesh)
+        n_groups = max(1, tokens // GROUP_TOKENS)
+        if n_groups % n_dp != 0 or tokens % n_groups != 0:
+            n_groups = n_dp if tokens % n_dp == 0 else 1
+        if kind == "decode":
+            n_groups = 1
+        moe = dataclasses.replace(
+            cfg.moe,
+            n_groups=n_groups,
+            disp_spec=P(dp, None, "model", None),
+            expert_spec=P("model", dp, None, None))
+        upd["moe"] = moe
+    return dataclasses.replace(cfg, **upd)
+
+
+def apply_overrides(cfg, overrides):
+    """dataclasses.replace with dotted 'moe.*' routing (hillclimb knob)."""
+    if not overrides:
+        return cfg
+    moe_over = {k[4:]: v for k, v in overrides.items()
+                if k.startswith("moe.")}
+    top = {k: v for k, v in overrides.items() if "." not in k}
+    if moe_over and getattr(cfg, "moe", None) is not None:
+        top["moe"] = dataclasses.replace(cfg.moe, **moe_over)
+    return dataclasses.replace(cfg, **top)
+
+
+def build_lm(arch_mod, shape_name: str, shape: dict, mesh,
+             layers_override=None, overrides=None):
+    cfg = arch_mod.config()
+    kind = shape['kind']
+    tokens = shape["global_batch"] * (shape["seq"] if kind != "decode"
+                                      else 1)
+    cfg = _lm_apply_shardings(cfg, mesh, kind, tokens)
+    cfg = apply_overrides(cfg, overrides)
+    if layers_override is not None:
+        # FLOP-metering variant: unrolled K-layer twin of the same cell
+        # (XLA cost analysis counts a while body once; see dryrun.py)
+        cfg = dataclasses.replace(cfg, n_layers=layers_override,
+                                  scan_unroll=True)
+    seq, batch = shape["seq"], shape["global_batch"]
+
+    params_sds = jax.eval_shape(lambda: tf.init(jax.random.PRNGKey(0), cfg))
+    pspecs = partition.lm_param_specs(cfg, mesh)
+    dp = _dp(mesh)
+    meta = {"model_flops": lm_model_flops(cfg, kind, batch, seq),
+            "tokens": batch * (seq if kind != "decode" else 1),
+            "params": cfg.n_params(), "active_params": cfg.n_active_params()}
+
+    if kind == "train":
+        opt_sds = jax.eval_shape(optimizer.init, params_sds)
+        ospecs = partition.opt_state_specs(pspecs)
+        bspecs = partition.lm_batch_specs(mesh)
+        batch_sds = {"tokens": _sds((batch, seq), jnp.int32),
+                     "labels": _sds((batch, seq), jnp.int32)}
+
+        def train_step(params, opt_state, b):
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: tf.loss_fn(p, b, cfg), has_aux=True)(params)
+            params, opt_state, _ = optimizer.update(
+                grads, opt_state, params, OPT_CFG)
+            return params, opt_state, loss
+
+        return StepBundle(
+            f"{cfg.name}:{shape_name}", train_step,
+            (params_sds, opt_sds, batch_sds),
+            (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspecs)),
+            (_ns(mesh, pspecs), _ns(mesh, ospecs),
+             NamedSharding(mesh, P())),
+            meta, donate=(0, 1))
+
+    cache_specs = partition.lm_cache_specs(cfg, mesh, batch)
+    if kind == "prefill":
+        toks_sds = _sds((batch, seq), jnp.int32)
+
+        def prefill_step(params, toks):
+            return tf.prefill(params, toks, cfg, cache_len=seq)
+
+        cache_out = {"k": cache_specs["k"], "v": cache_specs["v"],
+                     "pos": P()}
+        return StepBundle(
+            f"{cfg.name}:{shape_name}", prefill_step,
+            (params_sds, toks_sds),
+            (_ns(mesh, pspecs), NamedSharding(mesh, P(dp, None))),
+            (_ns(mesh, cache_out),
+             NamedSharding(mesh, P(dp, "model"))),
+            meta)
+
+    # decode: serve_step = one new token against a seq-long KV cache
+    kv_shape = (cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.head_dim)
+    cache_sds = {"k": _sds(kv_shape, cfg.dtype),
+                 "v": _sds(kv_shape, cfg.dtype),
+                 "pos": _sds((), jnp.int32)}
+    tok_sds = _sds((batch,), jnp.int32)
+
+    def decode(params, cache, tok):
+        return tf.decode_step(params, cache, tok, cfg)
+
+    bax = dp if (batch % _dp_size(mesh) == 0 and batch >= _dp_size(mesh)) \
+        else None
+    tok_spec = P(bax)
+    logits_spec = P(bax, "model" if cfg.vocab % mesh.shape["model"] == 0
+                    else None)
+    return StepBundle(
+        f"{cfg.name}:{shape_name}", decode,
+        (params_sds, cache_sds, tok_sds),
+        (_ns(mesh, pspecs), _ns(mesh, cache_specs),
+         NamedSharding(mesh, tok_spec)),
+        (NamedSharding(mesh, logits_spec), _ns(mesh, cache_specs)),
+        meta, donate=(1,))
+
+
+# ------------------------------------------------------------------ GNN ---
+
+def gnn_model_flops(arch: str, cfg, n_nodes: int, n_edges: int) -> int:
+    """Analytic per-step useful FLOPs (fwd+bwd ~ 3x fwd), per family."""
+    c = cfg.d_hidden
+    if arch == "gatedgcn":
+        fwd = n_edges * (3 * 2 * c * c) + n_nodes * (2 * 2 * c * c)
+        fwd *= cfg.n_layers
+    elif arch == "egnn":
+        fwd = n_edges * (2 * (2 * c + 1) * c + 2 * c * c + 2 * c * c) + \
+            n_nodes * (2 * 2 * c * c)
+        fwd *= cfg.n_layers
+    else:  # nequip / mace: radial MLP + per-path TP + mixing
+        n_paths = 15 if cfg.l_max >= 2 else (4 if cfg.l_max == 1 else 1)
+        tp_cost = n_edges * n_paths * c * 18     # avg contraction cost
+        radial = n_edges * 2 * (cfg.n_rbf * 32 + 32 * n_paths * c)
+        mix = n_nodes * (cfg.l_max + 1) * 2 * c * c * 9
+        fwd = (tp_cost + radial + mix) * cfg.n_layers
+        if arch == "mace":
+            fwd += cfg.n_layers * n_nodes * 2 * n_paths * c * 18  # B-products
+    return 3 * fwd
+
+
+def build_gnn(arch: str, arch_mod, shape_name: str, shape: dict, mesh,
+              overrides=None):
+    model = arch_mod.MODULE
+    dp = _dp(mesh)
+    n_model = mesh.shape["model"]
+    n_dp = _dp_size(mesh)
+
+    if shape["kind"] == "train_mol":
+        n_graphs = shape["batch"]
+        nn, ne = shape["n_nodes"], shape["n_edges"]
+        n_nodes = n_graphs * nn
+        n_edges = n_graphs * ne
+        task, n_classes, d_feat = "energy", 2, shape["d_feat"]
+    else:
+        if shape["kind"] == "train_sampled":
+            n_nodes, n_edges = gshapes.sampled_block_dims(shape)
+        else:
+            n_nodes, n_edges = shape["n_nodes"], shape["n_edges"]
+        n_graphs = 1
+        task, n_classes, d_feat = \
+            "node_class", shape["n_classes"], shape["d_feat"]
+
+    pad_n = _pad_to(n_nodes, n_dp * n_model)  # node arrays shard all chips
+    pad_e = _pad_to(n_edges, n_dp * n_model)  # safe for either edge axis
+    # scan_unroll: GNN layer counts are small enough to unroll outright,
+    # which makes cost_analysis FLOPs exact (no while-body undercount).
+    # edge/node constraints keep the big per-edge message tensors sharded
+    # (unconstrained, GSPMD replicated them: 447 GiB/device on mace/ogb);
+    # remat bounds saved activations across layers.
+    # node-sharding default measured in §Perf (gnn_minibatch ladder):
+    # small/minibatch graphs scatter cheapest into 'model'-only shards
+    # (4x lower collective term than all-axis or replicated); only
+    # 10^6+-node full-batch graphs need every axis for residency.
+    if pad_n > 2 ** 20:
+        node_ax = partition.gnn_node_axis(mesh, pad_n)
+    else:
+        node_ax = "model" if pad_n % n_model == 0 else None
+    kw = dict(task=task, n_classes=n_classes, d_feat=d_feat,
+              n_graphs=n_graphs, scan_unroll=True,
+              edge_ax=dp, node_ax=node_ax, remat=True)
+    if arch in ("nequip", "mace") and pad_e > 2 ** 22:
+        # stream edges in 32 chunks: l<=2 message tensors never exceed
+        # chunk x C x 9 floats (ogb_products would otherwise need
+        # hundreds of GiB per device -- measured)
+        kw["edge_chunk"] = pad_e // 32
+    kw.update(overrides or {})
+    node_ax = kw["node_ax"]  # overrides steer input sharding too
+    cfg = arch_mod.config(**kw)
+
+    batch_sds = {
+        "src": _sds((pad_e,), jnp.int32), "dst": _sds((pad_e,), jnp.int32),
+        "edge_mask": _sds((pad_e,), jnp.bool_),
+        "node_mask": _sds((pad_n,), jnp.float32),
+        "graph_id": _sds((pad_n,), jnp.int32),
+        "x": _sds((pad_n, d_feat), jnp.float32),
+        "pos": _sds((pad_n, 3), jnp.float32),
+    }
+    if task == "node_class":
+        batch_sds["labels"] = _sds((pad_n,), jnp.int32)
+    else:
+        batch_sds["energy"] = _sds((n_graphs,), jnp.float32)
+        batch_sds["forces"] = _sds((pad_n, 3), jnp.float32)
+
+    params_sds = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), cfg))
+    pspecs = partition.gnn_param_specs(params_sds)
+    ospecs = partition.opt_state_specs(pspecs)
+    all_bspecs = partition.gnn_batch_specs(mesh, pad_n, pad_e,
+                                           node_ax=node_ax)
+    bspecs = {k: all_bspecs[k] for k in batch_sds}
+    opt_sds = jax.eval_shape(optimizer.init, params_sds)
+
+    def train_step(params, opt_state, b):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, b, cfg), has_aux=True)(params)
+        params, opt_state, _ = optimizer.update(
+            grads, opt_state, params, OPT_CFG)
+        return params, opt_state, loss
+
+    meta = {"model_flops": gnn_model_flops(arch, cfg, pad_n, pad_e),
+            "nodes": pad_n, "edges": pad_e,
+            "edge_chunks": (pad_e // kw["edge_chunk"])
+            if kw.get("edge_chunk") else 1,
+            "padded": (pad_n != n_nodes or pad_e != n_edges)}
+    return StepBundle(
+        f"{arch}:{shape_name}", train_step,
+        (params_sds, opt_sds, batch_sds),
+        (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspecs)),
+        (_ns(mesh, pspecs), _ns(mesh, ospecs), NamedSharding(mesh, P())),
+        meta, donate=(0, 1))
+
+
+# --------------------------------------------------------------- recsys ---
+
+def mind_model_flops(cfg, kind: str, batch: int, n_cand: int = 0) -> int:
+    d, l, k = cfg.embed_dim, cfg.seq_len, cfg.n_interests
+    routing = 2 * batch * l * d * d + \
+        cfg.capsule_iters * (2 * batch * l * k * d * 2)
+    profile = 2 * batch * cfg.profile_len * d
+    fuse = 2 * batch * k * (2 * d) * d
+    fwd = routing + profile + fuse
+    if kind == "train":
+        label_att = 2 * batch * k * d * 2
+        softmax = 2 * batch * (cfg.n_neg + 1) * d
+        return 3 * (fwd + label_att + softmax)
+    return fwd + 2 * batch * k * n_cand * d
+
+
+def build_mind(arch_mod, shape_name: str, shape: dict, mesh):
+    from repro.models.recsys import mind as model
+    cfg = arch_mod.config(scan_unroll=True)  # 3 routing iters: unroll
+    batch = shape["batch"]
+    dp = _dp(mesh)
+    b_sds = {
+        "behavior": _sds((batch, cfg.seq_len), jnp.int32),
+        "profile": _sds((batch, cfg.profile_len), jnp.int32),
+    }
+    params_sds = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), cfg))
+    pspecs = partition.mind_param_specs(cfg, mesh)
+
+    if shape["kind"] == "train":
+        b_sds["target"] = _sds((batch,), jnp.int32)
+        b_sds["negatives"] = _sds((cfg.n_neg,), jnp.int32)
+        bspecs = partition.mind_batch_specs(mesh, batch)
+        opt_sds = jax.eval_shape(optimizer.init, params_sds)
+        ospecs = partition.opt_state_specs(pspecs)
+
+        def train_step(params, opt_state, b):
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: model.loss_fn(p, b, cfg), has_aux=True)(params)
+            params, opt_state, _ = optimizer.update(
+                grads, opt_state, params, OPT_CFG)
+            return params, opt_state, loss
+
+        meta = {"model_flops": mind_model_flops(cfg, "train", batch),
+                "items": batch}
+        return StepBundle(
+            f"mind:{shape_name}", train_step,
+            (params_sds, opt_sds, b_sds),
+            (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspecs)),
+            (_ns(mesh, pspecs), _ns(mesh, ospecs),
+             NamedSharding(mesh, P())),
+            meta, donate=(0, 1))
+
+    n_cand = shape["n_cand"]
+    b_sds["candidates"] = _sds((batch, n_cand), jnp.int32)
+    bspecs = partition.mind_batch_specs(mesh, batch, with_candidates=True,
+                                        cand=n_cand)
+    bspecs = {k: bspecs[k] for k in b_sds}  # serve has no target/negatives
+
+    def serve_step(params, b):
+        return model.serve_score(params, b, cfg)
+
+    cax = "model" if n_cand % mesh.shape["model"] == 0 else None
+    out_spec = P(bspecs["behavior"][0], cax)
+    meta = {"model_flops": mind_model_flops(cfg, "serve", batch, n_cand),
+            "items": batch * max(n_cand, 1)}
+    return StepBundle(
+        f"mind:{shape_name}", serve_step,
+        (params_sds, b_sds),
+        (_ns(mesh, pspecs), _ns(mesh, bspecs)),
+        NamedSharding(mesh, out_spec),
+        meta)
+
+
+# ---------------------------------------------------------------- smscc ---
+
+def build_smscc(arch_mod, shape_name: str, shape: dict, mesh,
+                overrides=None):
+    from repro.core import dynamic, graph_state as gs, community
+    cfg = arch_mod.config(n_vertices=shape["n_vertices"],
+                          edge_capacity=shape["edge_capacity"],
+                          **(overrides or {}))
+    state_sds = jax.eval_shape(lambda: gs.empty(cfg))
+    sspecs = partition.smscc_state_specs(mesh)
+    dp = _dp(mesh)
+    b = shape["batch"]
+    # PER-ROUND useful work: one edge-parallel sweep (compare+scatter per
+    # edge slot); queries are pure gathers (one compare per query).
+    if shape["kind"] == "update":
+        meta = {"model_flops": 2 * cfg.edge_capacity, "ops": b,
+                "flops_unit": "per fixpoint round"}
+    else:
+        meta = {"model_flops": 2 * b, "ops": b}
+
+    if shape["kind"] == "update":
+        ops_sds = dynamic.OpBatch(kind=_sds((b,), jnp.int32),
+                                  u=_sds((b,), jnp.int32),
+                                  v=_sds((b,), jnp.int32))
+        ospecs = partition.smscc_ops_specs(mesh)
+
+        def update_step(state, ops):
+            return dynamic.apply_batch(state, ops, cfg)
+
+        return StepBundle(
+            f"smscc:{shape_name}", update_step,
+            (state_sds, ops_sds),
+            (_ns(mesh, sspecs), _ns(mesh, ospecs)),
+            (_ns(mesh, sspecs), NamedSharding(mesh, P(dp))),
+            meta, donate=(0,))
+
+    q_sds = (_sds((b,), jnp.int32), _sds((b,), jnp.int32))
+
+    def query_step(state, u, v):
+        return community.check_scc(state, u, v)
+
+    return StepBundle(
+        f"smscc:{shape_name}", query_step,
+        (state_sds,) + q_sds,
+        (_ns(mesh, sspecs), NamedSharding(mesh, P(dp)),
+         NamedSharding(mesh, P(dp))),
+        NamedSharding(mesh, P(dp)),
+        meta)
+
+
+# ---------------------------------------------------------------- entry ---
+
+def build(arch: str, shape_name: str, mesh, lm_layers=None,
+          overrides=None) -> Optional[StepBundle]:
+    mod = cfg_registry.get(arch)
+    shape = mod.SHAPES[shape_name]
+    if shape.get("skip"):
+        return None
+    if mod.FAMILY == "lm":
+        return build_lm(mod, shape_name, shape, mesh,
+                        layers_override=lm_layers, overrides=overrides)
+    if mod.FAMILY == "gnn":
+        return build_gnn(arch.replace("-", "_"), mod, shape_name, shape,
+                         mesh, overrides=overrides)
+    if mod.FAMILY == "recsys":
+        return build_mind(mod, shape_name, shape, mesh)
+    if mod.FAMILY == "smscc":
+        return build_smscc(mod, shape_name, shape, mesh,
+                           overrides=overrides)
+    raise ValueError(mod.FAMILY)

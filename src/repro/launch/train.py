@@ -1,0 +1,111 @@
+"""Production training driver.
+
+    python -m repro.launch.train --arch <id> [--smoke] [--steps N]
+                                 [--ckpt-dir DIR] [--mesh host|prod]
+
+With --smoke (default on CPU) the arch's reduced config trains for real;
+with the production mesh this is the same code path the dry-run lowers --
+the step function, shardings and data pipeline are shared
+(launch/steps.py), so what compiles in the dry-run is what trains here.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro import configs
+from repro.data import pipeline
+from repro.launch import mesh as mesh_lib
+from repro.optim import optimizer
+from repro.train import trainer
+
+
+def _lm_setup(mod, smoke: bool):
+    from repro.models import transformer as tf
+    cfg = mod.smoke_config() if smoke else mod.config()
+    params = tf.init(jax.random.PRNGKey(0), cfg)
+    batch, seq = (16, 64) if smoke else (256, 4096)
+
+    def loss_fn(p, b):
+        return tf.loss_fn(p, b, cfg)
+
+    def data_fn(step):
+        return pipeline.lm_batch(cfg.vocab, batch, seq, step=step)
+
+    return cfg, params, loss_fn, data_fn
+
+
+def _gnn_setup(mod, smoke: bool):
+    model = mod.MODULE
+    cfg = mod.smoke_config(task="node_class", n_classes=7) if smoke \
+        else mod.config(task="node_class", n_classes=7, d_feat=64)
+    graph = pipeline.node_class_graph(
+        200 if smoke else 4096, 1000 if smoke else 32768,
+        cfg.d_feat, cfg.n_classes, seed=0)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+
+    def loss_fn(p, b):
+        return model.loss_fn(p, b, cfg)
+
+    return cfg, params, loss_fn, lambda step: graph
+
+
+def _mind_setup(mod, smoke: bool):
+    model = mod.MODULE
+    cfg = mod.smoke_config() if smoke else mod.config()
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    batch = 64 if smoke else 65536
+
+    def loss_fn(p, b):
+        return model.loss_fn(p, b, cfg)
+
+    def data_fn(step):
+        return pipeline.mind_batch(cfg.n_items, batch, cfg.seq_len,
+                                   cfg.profile_vocab, cfg.profile_len,
+                                   cfg.n_neg, step=step)
+
+    return cfg, params, loss_fn, data_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--smoke", action="store_true", default=None)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+    smoke = args.smoke if args.smoke is not None else \
+        jax.default_backend() == "cpu"
+
+    mod = configs.get(args.arch)
+    if mod.FAMILY == "lm":
+        cfg, params, loss_fn, data_fn = _lm_setup(mod, smoke)
+    elif mod.FAMILY == "gnn":
+        cfg, params, loss_fn, data_fn = _gnn_setup(mod, smoke)
+    elif mod.FAMILY == "recsys":
+        cfg, params, loss_fn, data_fn = _mind_setup(mod, smoke)
+    else:
+        raise SystemExit("use examples/dynamic_scc_serving.py for smscc")
+
+    t = trainer.Trainer(
+        loss_fn, params,
+        optimizer.AdamWConfig(lr=1e-3, warmup_steps=10,
+                              total_steps=args.steps),
+        trainer.TrainerConfig(
+            total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+            ckpt_every=max(args.steps // 4, 1), log_every=10,
+            grad_compression=args.compress_grads),
+        data_fn)
+    log = t.run()
+    for step, m in log:
+        print(f"step {step:4d}  loss {m['loss']:.4f}")
+    print(f"done: {len(t.step_times)} steps, "
+          f"median {sorted(t.step_times)[len(t.step_times)//2]*1e3:.0f}"
+          f"ms/step, stragglers={t.straggler_events}")
+
+
+if __name__ == "__main__":
+    main()

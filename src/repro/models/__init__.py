@@ -1,0 +1,2 @@
+from repro.models import common, moe, transformer  # noqa: F401
+from repro.models import gnn, recsys  # noqa: F401

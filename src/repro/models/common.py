@@ -1,0 +1,70 @@
+"""Shared model primitives: norms, RoPE, inits.  Pure-function style --
+params are plain pytrees of jnp arrays, every module is `init` + `apply`."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding.  x: [..., S, D] with D even; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / (fan_in ** 0.5)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (shape[-1] ** -0.5)).astype(dtype)
+
+
+def split_keys(key, names):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+def mlp_init(key, sizes, dtype=jnp.float32, bias: bool = True):
+    """Plain MLP params: list of (w, b) between consecutive sizes."""
+    layers = []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for k, (a, b) in zip(keys, zip(sizes[:-1], sizes[1:])):
+        w = dense_init(k, (a, b), dtype=dtype)
+        layers.append({"w": w, "b": jnp.zeros((b,), dtype) if bias else None})
+    return layers
+
+
+def mlp_apply(layers, x, act=jax.nn.silu, final_act=None):
+    n = len(layers)
+    for i, lyr in enumerate(layers):
+        x = x @ lyr["w"]
+        if lyr["b"] is not None:
+            x = x + lyr["b"]
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params)
+               if hasattr(x, "size"))

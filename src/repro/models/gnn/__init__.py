@@ -1,0 +1,1 @@
+from repro.models.gnn import common, egnn, gatedgcn, mace, nequip  # noqa: F401

@@ -1,0 +1,108 @@
+"""EGNN (Satorras et al., arXiv:2102.09844): E(n)-equivariant GNN.
+
+Invariant messages from squared distances; positions updated along relative
+vectors -- equivariance by construction, no spherical machinery needed.
+Layers are homogeneous and scanned.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import segment_ops as so
+from repro.models import common
+from repro.models.gnn import common as gc
+from repro.models.gnn import tasks
+
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    name: str = "egnn"
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_feat: int = 16
+    task: str = "energy"       # 'energy' | 'node_class'
+    n_classes: int = 2
+    n_graphs: int = 1          # graphs per packed batch (static)
+    update_pos: bool = True
+    dtype: object = jnp.float32
+    scan_unroll: bool = False
+    edge_ax: object = None
+    node_ax: object = None
+    remat: bool = False
+
+
+def _layer_init(key, cfg: EGNNConfig):
+    d = cfg.d_hidden
+    ks = common.split_keys(key, ["e", "x", "h"])
+    return {
+        "phi_e": common.mlp_init(ks["e"], [2 * d + 1, d, d], cfg.dtype),
+        "phi_x": common.mlp_init(ks["x"], [d, d, 1], cfg.dtype),
+        "phi_h": common.mlp_init(ks["h"], [2 * d, d, d], cfg.dtype),
+    }
+
+
+def init(key, cfg: EGNNConfig):
+    k_in, k_l, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_l, cfg.n_layers)
+    d_out = cfg.n_classes if cfg.task == "node_class" else 1
+    return {
+        "embed": common.dense_init(k_in, (cfg.d_feat, cfg.d_hidden),
+                                   dtype=cfg.dtype),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys),
+        "head": common.mlp_init(k_out, [cfg.d_hidden, cfg.d_hidden, d_out],
+                                cfg.dtype),
+    }
+
+
+def _forward(params, pos, batch, cfg: EGNNConfig):
+    src, dst = batch["src"], batch["dst"]
+    emask = batch["edge_mask"].astype(cfg.dtype)[:, None]
+    n = batch["x"].shape[0]
+    h = batch["x"].astype(cfg.dtype) @ params["embed"]
+
+    def body(carry, p):
+        h, pos = carry
+        rel = pos[dst] - pos[src]                       # [E,3]
+        d2 = jnp.sum(rel * rel, -1, keepdims=True)
+        m = common.mlp_apply(
+            p["phi_e"],
+            jnp.concatenate([h[dst], h[src], d2.astype(cfg.dtype)], -1),
+            final_act=jax.nn.silu) * emask
+        if cfg.update_pos:
+            w = common.mlp_apply(p["phi_x"], m)          # [E,1]
+            # +eps inside the sqrt keeps grads finite on zero-length
+            # (padded / self-loop) edges
+            delta = rel / (jnp.sqrt(d2 + 1e-9) + 1.0) * w * emask
+            pos = pos + so.segment_mean(delta, dst, n)
+        m = gc.constrain_rows(m, cfg.edge_ax)
+        agg = so.segment_sum(m, dst, n)
+        h = h + common.mlp_apply(
+            p["phi_h"], jnp.concatenate([h, agg], -1))
+        h = gc.constrain_rows(h, cfg.node_ax)
+        return (h, pos), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (h, pos), _ = jax.lax.scan(body, (h, pos), params["layers"],
+                               unroll=bool(cfg.scan_unroll))
+    return h, pos
+
+
+def node_energy(params, pos, batch, cfg: EGNNConfig):
+    h, _ = _forward(params, pos, batch, cfg)
+    e_node = common.mlp_apply(params["head"], h)[:, 0]
+    return tasks.per_graph_sum(e_node, batch["graph_id"],
+                               batch["node_mask"], cfg.n_graphs)
+
+
+def loss_fn(params, batch, cfg: EGNNConfig):
+    if cfg.task == "node_class":
+        h, _ = _forward(params, batch["pos"], batch, cfg)
+        logits = common.mlp_apply(params["head"], h)
+        return tasks.classification_loss(logits, batch)
+    return tasks.energy_force_loss(
+        lambda p, pos, b: node_energy(p, pos, b, cfg),
+        params, batch, cfg.n_graphs)

@@ -1,0 +1,115 @@
+"""GatedGCN (Bresson & Laurent, arXiv:1711.07553 / benchmark config
+arXiv:2003.00982): edge-gated message passing, 16 scanned layers, d=70.
+
+h_i' = h_i + ReLU(Norm(A h_i + Σ_j η_ij ⊙ B h_j)),
+e_ij' = e_ij + ReLU(Norm(ê_ij)),  ê_ij = C e_ij + D h_i + E h_j,
+η_ij = σ(ê_ij) / (Σ_j' σ(ê_ij') + ε)   (degree-normalized edge gates).
+
+The benchmark uses BatchNorm; we use masked LayerNorm (functional purity;
+noted in DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import segment_ops as so
+from repro.models import common
+from repro.models.gnn import common as gc
+from repro.models.gnn import tasks
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str = "gatedgcn"
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_feat: int = 16
+    task: str = "node_class"
+    n_classes: int = 7
+    n_graphs: int = 1
+    dtype: object = jnp.float32
+    scan_unroll: bool = False
+    edge_ax: object = None
+    node_ax: object = None
+    remat: bool = False
+
+
+def _layer_init(key, cfg: GatedGCNConfig):
+    d = cfg.d_hidden
+    ks = common.split_keys(key, list("ABCDE"))
+    p = {m: common.dense_init(ks[m], (d, d), dtype=cfg.dtype)
+         for m in "ABCDE"}
+    p["ln_h"] = jnp.ones((d,), cfg.dtype)
+    p["ln_e"] = jnp.ones((d,), cfg.dtype)
+    return p
+
+
+def init(key, cfg: GatedGCNConfig):
+    k_in, k_e, k_l, k_out = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_l, cfg.n_layers)
+    d_out = cfg.n_classes if cfg.task == "node_class" else 1
+    return {
+        "embed_h": common.dense_init(k_in, (cfg.d_feat, cfg.d_hidden),
+                                     dtype=cfg.dtype),
+        "embed_e": common.dense_init(k_e, (1, cfg.d_hidden),
+                                     dtype=cfg.dtype),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys),
+        "head": common.mlp_init(k_out, [cfg.d_hidden, cfg.d_hidden, d_out],
+                                cfg.dtype),
+    }
+
+
+def _ln(x, w, eps=1e-5):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w
+
+
+def _forward(params, batch, cfg: GatedGCNConfig):
+    src, dst = batch["src"], batch["dst"]
+    emask = batch["edge_mask"].astype(cfg.dtype)[:, None]
+    n = batch["x"].shape[0]
+    h = batch["x"].astype(cfg.dtype) @ params["embed_h"]
+    e = jnp.ones((src.shape[0], 1), cfg.dtype) @ params["embed_e"]
+
+    def body(carry, p):
+        h, e = carry
+        e_hat = e @ p["C"] + h[dst] @ p["D"] + h[src] @ p["E"]
+        sig = jax.nn.sigmoid(e_hat) * emask
+        denom = so.segment_sum(sig, dst, n)[dst] + 1e-6
+        eta = sig / denom
+        agg = so.segment_sum(eta * (h[src] @ p["B"]) * emask, dst, n)
+        h = h + jax.nn.relu(_ln(h @ p["A"] + agg, p["ln_h"]))
+        e = e + jax.nn.relu(_ln(e_hat, p["ln_e"]))
+        h = gc.constrain_rows(h, cfg.node_ax)
+        e = gc.constrain_rows(e, cfg.edge_ax)
+        return (h, e), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (h, e), _ = jax.lax.scan(body, (h, e), params["layers"],
+                             unroll=bool(cfg.scan_unroll))
+    return h
+
+
+def node_energy(params, pos, batch, cfg: GatedGCNConfig):
+    del pos  # GatedGCN is not geometric; energy from features only
+    h = _forward(params, batch, cfg)
+    e_node = common.mlp_apply(params["head"], h)[:, 0]
+    return tasks.per_graph_sum(e_node, batch["graph_id"],
+                               batch["node_mask"], cfg.n_graphs)
+
+
+def loss_fn(params, batch, cfg: GatedGCNConfig):
+    if cfg.task == "node_class":
+        logits = common.mlp_apply(params["head"],
+                                  _forward(params, batch, cfg))
+        return tasks.classification_loss(logits, batch)
+    # graph-level energy regression (molecule shape); no force term since
+    # the model has no positional pathway -- MSE on energies only.
+    e = node_energy(params, batch["pos"], batch, cfg)
+    loss = jnp.mean((e - batch["energy"]) ** 2)
+    return loss, {"e_mse": loss}

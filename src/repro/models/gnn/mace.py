@@ -1,0 +1,174 @@
+"""MACE (Batatia et al., arXiv:2206.07697): higher-order equivariant
+message passing via ACE-style symmetric tensor contractions.
+
+Per layer:
+  1. **A-features**: one radial-weighted tensor-product convolution over
+     neighbors (same machinery as NequIP) -- the order-1 atomic basis.
+  2. **B-features**: symmetric products of A with itself up to
+     ``correlation`` order (here 3):  B² = Σ paths TP(A, A),
+     B³ = Σ paths TP(B², A), each path carrying a learned per-channel
+     weight -- the Cartesian analogue of MACE's contracted products.
+  3. Message = Σ_order linear_mix(B^order); update = gate(message + skip).
+  4. Per-layer invariant energy readout, summed over layers (MACE's
+     multi-readout).
+
+Because every B is built node-locally from A, one MACE layer carries
+many-body information at the cost of a single neighbor aggregation --
+the paper's key trade, preserved exactly in this formulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.gnn import common as gc
+from repro.models.gnn import nequip as nq
+from repro.models.gnn import tasks
+
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    d_hidden: int = 128
+    l_max: int = 2
+    correlation: int = 3
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_feat: int = 16
+    task: str = "energy"
+    n_classes: int = 2
+    n_graphs: int = 1
+    avg_degree: float = 8.0
+    dtype: object = jnp.float32
+    scan_unroll: bool = False
+    edge_ax: object = None
+    node_ax: object = None
+    remat: bool = False
+    edge_chunk: int = 0
+
+
+def _ls(cfg):
+    return ["l0", "l1", "l2"][: cfg.l_max + 1]
+
+
+def _node_paths(l_max: int):
+    """(l_a, l_b, l_out) products usable node-locally (both channelled)."""
+    return gc.paths_for(l_max)
+
+
+def _layer_init(key, cfg: MACEConfig):
+    c = cfg.d_hidden
+    paths = gc.paths_for(cfg.l_max)
+    npaths = len(paths)
+    ks = common.split_keys(
+        key, ["radial", "w2", "w3", "mix1", "mix2", "mix3", "skip",
+              "gate", "readout"])
+    def mixes(base):
+        return {l: common.dense_init(jax.random.fold_in(ks[base], i),
+                                     (c, c), dtype=cfg.dtype)
+                for i, l in enumerate(_ls(cfg))}
+    return {
+        "radial": common.mlp_init(
+            ks["radial"], [cfg.n_rbf, 32, npaths * c], cfg.dtype),
+        # per-path, per-channel weights of the symmetric contractions
+        "w2": common.dense_init(ks["w2"], (npaths, c), scale=0.3,
+                                dtype=cfg.dtype),
+        "w3": common.dense_init(ks["w3"], (npaths, c), scale=0.3,
+                                dtype=cfg.dtype),
+        "mix1": mixes("mix1"),
+        "mix2": mixes("mix2"),
+        "mix3": mixes("mix3"),
+        "skip": mixes("skip"),
+        "gate": {l: common.dense_init(jax.random.fold_in(ks["gate"], i),
+                                      (c, c), dtype=cfg.dtype)
+                 for i, l in enumerate(_ls(cfg)) if l != "l0"},
+        "readout": common.mlp_init(
+            ks["readout"], [c * (cfg.l_max + 1), c, 1], cfg.dtype),
+    }
+
+
+def init(key, cfg: MACEConfig):
+    k_in, k_l, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_l, cfg.n_layers)
+    d_out = cfg.n_classes if cfg.task == "node_class" else 1
+    return {
+        "embed": common.dense_init(k_in, (cfg.d_feat, cfg.d_hidden),
+                                   dtype=cfg.dtype),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys),
+        "head": common.mlp_init(
+            k_out, [cfg.d_hidden * (cfg.l_max + 1), cfg.d_hidden, d_out],
+            cfg.dtype),
+    }
+
+
+def _sym_product(a_feats, b_feats, weights, cfg: MACEConfig):
+    """Σ_paths w_path ⊙ TP(a, b), node-local (both args [N, C, ...])."""
+    paths = gc.paths_for(cfg.l_max)
+    out = {l: jnp.zeros_like(a_feats[l]) for l in _ls(cfg)}
+    for i, (la, lb, lo) in enumerate(paths):
+        prod = gc.TP_PATHS[(la, lb, lo)](a_feats[f"l{la}"],
+                                         b_feats[f"l{lb}"])
+        w = weights[i]  # [C]
+        out[f"l{lo}"] = out[f"l{lo}"] + prod * w.reshape(
+            (1, -1) + (1,) * (prod.ndim - 2))
+    return out
+
+
+def _forward(params, pos, batch, cfg: MACEConfig):
+    """Returns (final feats, per-node energy accumulated over layers)."""
+    n = batch["x"].shape[0]
+    feats = gc.zeros_feats(n, cfg.d_hidden, cfg.l_max, cfg.dtype)
+    feats["l0"] = batch["x"].astype(cfg.dtype) @ params["embed"]
+    # reuse the NequIP conv (A-features) with a cfg view
+    nq_cfg = nq.NequIPConfig(
+        n_layers=cfg.n_layers, d_hidden=cfg.d_hidden, l_max=cfg.l_max,
+        n_rbf=cfg.n_rbf, cutoff=cfg.cutoff, d_feat=cfg.d_feat,
+        avg_degree=cfg.avg_degree, dtype=cfg.dtype,
+        edge_ax=cfg.edge_ax, node_ax=cfg.node_ax,
+        edge_chunk=cfg.edge_chunk)
+
+    def body(carry, p):
+        feats, e_acc = carry
+        a = nq.conv({"radial": p["radial"]}, feats, pos, batch, nq_cfg)
+        a = gc.norm_feats(a)
+        b2 = _sym_product(a, a, p["w2"], cfg) if cfg.correlation >= 2 \
+            else None
+        b3 = _sym_product(b2, a, p["w3"], cfg) if cfg.correlation >= 3 \
+            else None
+        m = gc.linear_mix(p["mix1"], a)
+        if b2 is not None:
+            m = gc.add_feats(m, gc.linear_mix(p["mix2"], b2))
+        if b3 is not None:
+            m = gc.add_feats(m, gc.linear_mix(p["mix3"], b3))
+        skip = gc.linear_mix(p["skip"], feats)
+        feats = gc.norm_feats(gc.gate(gc.add_feats(m, skip), p["gate"]))
+        feats = gc.constrain_feats(feats, cfg.node_ax)
+        e_layer = common.mlp_apply(p["readout"], gc.invariants(feats))[:, 0]
+        return (feats, e_acc + e_layer), None
+
+    e0 = jnp.zeros((n,), cfg.dtype)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (feats, e_acc), _ = jax.lax.scan(body, (feats, e0), params["layers"],
+                                     unroll=bool(cfg.scan_unroll))
+    return feats, e_acc
+
+
+def node_energy(params, pos, batch, cfg: MACEConfig):
+    _, e_node = _forward(params, pos, batch, cfg)
+    return tasks.per_graph_sum(e_node, batch["graph_id"],
+                               batch["node_mask"], cfg.n_graphs)
+
+
+def loss_fn(params, batch, cfg: MACEConfig):
+    if cfg.task == "node_class":
+        feats, _ = _forward(params, batch["pos"], batch, cfg)
+        logits = common.mlp_apply(params["head"], gc.invariants(feats))
+        return tasks.classification_loss(logits, batch)
+    return tasks.energy_force_loss(
+        lambda p, pos, b: node_energy(p, pos, b, cfg),
+        params, batch, cfg.n_graphs)

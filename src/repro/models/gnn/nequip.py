@@ -1,0 +1,231 @@
+"""NequIP (Batzner et al., arXiv:2101.03164): E(3)-equivariant interatomic
+potential -- tensor-product convolutions over l<=2 Cartesian irreps.
+
+Per layer: messages are radial-weighted tensor products of neighbor
+features with the edge basis Y_l(r̂), summed over all (l_in, l_edge, l_out)
+paths, aggregated by scatter-sum, then self-mixed + gated.  Radial weights
+come from an MLP on the Bessel basis -- one weight per (path, channel) per
+edge, exactly the NequIP parameterization (constants folded into weights).
+
+Energy readout from invariant contractions; forces via -grad (autodiff
+through the whole message-passing stack).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import segment_ops as so
+from repro.models import common
+from repro.models.gnn import common as gc
+from repro.models.gnn import tasks
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    d_hidden: int = 32
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_feat: int = 16
+    task: str = "energy"
+    n_classes: int = 2
+    n_graphs: int = 1
+    avg_degree: float = 8.0
+    dtype: object = jnp.float32
+    scan_unroll: bool = False
+    edge_ax: object = None   # mesh axis for per-edge intermediates
+    node_ax: object = None   # mesh axis for per-node intermediates
+    remat: bool = False      # checkpoint the layer scan body
+    edge_chunk: int = 0      # >0: stream edges through scan chunks of
+                             # this size (l=2 message tensors on 10^7+
+                             # edge graphs cannot materialize whole)
+
+
+def _ls(cfg):
+    return ["l0", "l1", "l2"][: cfg.l_max + 1]
+
+
+def _layer_init(key, cfg: NequIPConfig):
+    c = cfg.d_hidden
+    paths = gc.paths_for(cfg.l_max)
+    ks = common.split_keys(key, ["radial", "mix", "gate", "skip"])
+    p = {
+        # radial MLP emits one weight per (path, channel)
+        "radial": common.mlp_init(
+            ks["radial"], [cfg.n_rbf, 32, len(paths) * c], cfg.dtype),
+        "mix": {l: common.dense_init(jax.random.fold_in(ks["mix"], i),
+                                     (c, c), dtype=cfg.dtype)
+                for i, l in enumerate(_ls(cfg))},
+        "skip": {l: common.dense_init(jax.random.fold_in(ks["skip"], i),
+                                      (c, c), dtype=cfg.dtype)
+                 for i, l in enumerate(_ls(cfg))},
+        "gate": {l: common.dense_init(jax.random.fold_in(ks["gate"], i),
+                                      (c, c), dtype=cfg.dtype)
+                 for i, l in enumerate(_ls(cfg)) if l != "l0"},
+    }
+    return p
+
+
+def init(key, cfg: NequIPConfig):
+    k_in, k_l, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_l, cfg.n_layers)
+    d_out = cfg.n_classes if cfg.task == "node_class" else 1
+    n_inv = cfg.d_hidden * (cfg.l_max + 1)
+    return {
+        "embed": common.dense_init(k_in, (cfg.d_feat, cfg.d_hidden),
+                                   dtype=cfg.dtype),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys),
+        "head": common.mlp_init(k_out, [n_inv, cfg.d_hidden, d_out],
+                                cfg.dtype),
+    }
+
+
+def _chunk_messages(p, feats, pos, s_idx, d_idx, m_mask, n,
+                    cfg: NequIPConfig):
+    """Messages for one edge set, aggregated to nodes ([N, C, ...])."""
+    c = cfg.d_hidden
+    rel = pos[d_idx] - pos[s_idx]
+    r = jnp.sqrt(jnp.sum(rel * rel, -1) + 1e-12)
+    rhat = rel / r[:, None]
+    basis = gc.edge_basis(rhat.astype(cfg.dtype), cfg.l_max)
+    rbf = gc.bessel_basis(r, cfg.n_rbf, cfg.cutoff).astype(cfg.dtype)
+    paths = gc.paths_for(cfg.l_max)
+    w = common.mlp_apply(p["radial"], rbf)  # [E, n_paths*C]
+    # zero-length (self-loop / padded) edges carry no message: rhat is
+    # singular there and its gradient is chaotic -- masking keeps grads
+    # exact and chunk-order independent
+    ok = m_mask & (r > 1e-6)
+    w = w * ok.astype(cfg.dtype)[:, None]
+    w = w.reshape(w.shape[0], len(paths), c)
+    msg = {l: None for l in _ls(cfg)}
+    gathered = {l: gc.constrain_rows(feats[l][s_idx], cfg.edge_ax)
+                for l in _ls(cfg)}                   # [E, C, ...] per l
+    for i, (la, lb, lo) in enumerate(paths):
+        fa = gathered[f"l{la}"]
+        yb = basis[f"l{lb}"]                         # [E, 1, ...]
+        yb = jnp.broadcast_to(yb, (fa.shape[0], c) + yb.shape[2:])
+        out = gc.TP_PATHS[(la, lb, lo)](fa, yb)      # [E, C, ...]
+        wi = w[:, i].reshape(w.shape[0], c)
+        out = out * wi.reshape(wi.shape + (1,) * (out.ndim - 2))
+        out = gc.constrain_rows(out, cfg.edge_ax)
+        key = f"l{lo}"
+        msg[key] = out if msg[key] is None else msg[key] + out
+    msg = {l: gc.constrain_rows(m, cfg.edge_ax) for l, m in msg.items()}
+    agg = {l: so.segment_sum(m, d_idx, n) for l, m in msg.items()}
+    return gc.constrain_feats(agg, cfg.node_ax)
+
+
+def conv(p, feats, pos, batch, cfg: NequIPConfig):
+    """One tensor-product convolution; returns aggregated messages.
+
+    With ``edge_chunk`` set, edges stream through a scan in fixed-size
+    chunks and only chunk-sized message tensors ever exist -- the l=2
+    channels of a 6x10^7-edge graph would otherwise need hundreds of GiB
+    (measured; EXPERIMENTS.md §Perf).  FLOP metering uses an unchunked
+    twin (launch/dryrun.py) because XLA counts scan bodies once.
+    """
+    src, dst = batch["src"], batch["dst"]
+    emask = batch["edge_mask"]
+    n = feats["l0"].shape[0]
+    e = src.shape[0]
+    ck = cfg.edge_chunk
+    if ck and e > ck and e % ck == 0:
+        nc = e // ck
+        sc = src.reshape(nc, ck)
+        dc = dst.reshape(nc, ck)
+        mc = emask.reshape(nc, ck)
+
+        # custom VJP: agg = Σ_chunks f(chunk); d(agg)/d(inputs) re-streams
+        # the chunks in backward instead of letting scan save 32 copies of
+        # per-chunk message tensors / node carries (measured: 470 GiB ->
+        # chunk-resident).  Valid because the cotangent of a sum is the
+        # same for every chunk contribution.  FIRST-ORDER only: force
+        # training (grad-of-grad) must run unchunked -- the big-graph
+        # shapes that need chunking are all classification cells.
+        @jax.custom_vjp
+        def _agg(p_, feats_, pos_, sc_, dc_, mc_):
+            def body(acc, xs):
+                s, d, m = xs
+                contrib = _chunk_messages(p_, feats_, pos_, s, d, m, n,
+                                          cfg)
+                return gc.constrain_feats(gc.add_feats(acc, contrib),
+                                          cfg.node_ax), None
+
+            acc0 = gc.constrain_feats(
+                gc.zeros_feats(n, cfg.d_hidden, cfg.l_max, cfg.dtype),
+                cfg.node_ax)
+            out, _ = jax.lax.scan(body, acc0, (sc_, dc_, mc_))
+            return out
+
+        def _agg_fwd(p_, feats_, pos_, sc_, dc_, mc_):
+            return (_agg(p_, feats_, pos_, sc_, dc_, mc_),
+                    (p_, feats_, pos_, sc_, dc_, mc_))
+
+        def _agg_bwd(res, g):
+            p_, feats_, pos_, sc_, dc_, mc_ = res
+
+            def body(grads, xs):
+                s, d, m = xs
+                _, vjp = jax.vjp(
+                    lambda a, b, c: _chunk_messages(a, b, c, s, d, m, n,
+                                                    cfg),
+                    p_, feats_, pos_)
+                gp, gf, gx = vjp(g)
+                return jax.tree.map(jnp.add, grads, (gp, gf, gx)), None
+
+            zeros = jax.tree.map(jnp.zeros_like, (p_, feats_, pos_))
+            (gp, gf, gx), _ = jax.lax.scan(body, zeros, (sc_, dc_, mc_))
+            f0 = lambda x: np.zeros(x.shape, jax.dtypes.float0)
+            return gp, gf, gx, f0(sc_), f0(dc_), f0(mc_)
+
+        _agg.defvjp(_agg_fwd, _agg_bwd)
+        agg = _agg(p, feats, pos, sc, dc, mc)
+    else:
+        agg = _chunk_messages(p, feats, pos, src, dst, emask, n, cfg)
+    scale = jnp.asarray(cfg.avg_degree ** 0.5, cfg.dtype)
+    return gc.constrain_feats({l: v / scale for l, v in agg.items()},
+                              cfg.node_ax)
+
+
+def _forward(params, pos, batch, cfg: NequIPConfig):
+    n = batch["x"].shape[0]
+    feats = gc.zeros_feats(n, cfg.d_hidden, cfg.l_max, cfg.dtype)
+    feats["l0"] = batch["x"].astype(cfg.dtype) @ params["embed"]
+
+    def body(feats, p):
+        m = conv(p, feats, pos, batch, cfg)
+        m = gc.linear_mix(p["mix"], m)
+        skip = gc.linear_mix(p["skip"], feats)
+        feats = gc.gate(gc.add_feats(m, skip), p["gate"])
+        feats = gc.norm_feats(feats)
+        return gc.constrain_feats(feats, cfg.node_ax), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    feats, _ = jax.lax.scan(body, feats, params["layers"],
+                            unroll=bool(cfg.scan_unroll))
+    return feats
+
+
+def node_energy(params, pos, batch, cfg: NequIPConfig):
+    feats = _forward(params, pos, batch, cfg)
+    inv = gc.invariants(feats)
+    e_node = common.mlp_apply(params["head"], inv)[:, 0]
+    return tasks.per_graph_sum(e_node, batch["graph_id"],
+                               batch["node_mask"], cfg.n_graphs)
+
+
+def loss_fn(params, batch, cfg: NequIPConfig):
+    if cfg.task == "node_class":
+        feats = _forward(params, batch["pos"], batch, cfg)
+        logits = common.mlp_apply(params["head"], gc.invariants(feats))
+        return tasks.classification_loss(logits, batch)
+    return tasks.energy_force_loss(
+        lambda p, pos, b: node_energy(p, pos, b, cfg),
+        params, batch, cfg.n_graphs)

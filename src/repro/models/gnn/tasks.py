@@ -1,0 +1,52 @@
+"""Shared GNN task heads/losses.
+
+Every assigned GNN arch must run on all four graph shapes, so each model
+supports two task heads:
+
+  * ``node_class`` -- CE over per-node logits (full_graph_sm /
+    minibatch_lg / ogb_products);
+  * ``energy``     -- per-graph energy = Σ per-node scalar readout, with
+    forces = -∂E/∂pos and a combined MSE (molecule shape).
+
+Batch dict convention (all dense, masked):
+  src, dst: int32[E]; edge_mask: bool[E]; node_mask: bool[N];
+  x: f32[N, d_feat]; pos: f32[N, 3]; graph_id: int32[N];
+  labels: int32[N] (classification) or energy: f32[G], forces: f32[N, 3].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def classification_loss(logits, batch):
+    labels = batch["labels"]
+    mask = batch["node_mask"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / \
+        jnp.maximum(jnp.sum(mask), 1)
+    return loss, {"ce": loss, "acc": acc}
+
+
+def energy_force_loss(energy_fn, params, batch, n_graphs: int,
+                      force_weight: float = 1.0):
+    """energy_fn(params, pos, batch) -> per-graph energies [G]."""
+
+    def total_e(pos):
+        return jnp.sum(energy_fn(params, pos, batch))
+
+    e = energy_fn(params, batch["pos"], batch)
+    forces = -jax.grad(total_e)(batch["pos"])
+    e_err = jnp.mean((e - batch["energy"]) ** 2)
+    mask = batch["node_mask"][:, None]
+    f_err = jnp.sum(((forces - batch["forces"]) * mask) ** 2) / \
+        jnp.maximum(jnp.sum(mask) * 3, 1)
+    loss = e_err + force_weight * f_err
+    return loss, {"e_mse": e_err, "f_mse": f_err}
+
+
+def per_graph_sum(node_scalar, graph_id, node_mask, n_graphs: int):
+    vals = node_scalar * node_mask
+    return jax.ops.segment_sum(vals, graph_id, num_segments=n_graphs)

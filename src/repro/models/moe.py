@@ -1,0 +1,167 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-bounded dispatch.
+
+Two dispatch strategies, selectable per config (both exact up to token
+dropping at the capacity bound):
+
+* ``einsum``  -- GShard-style one-hot dispatch/combine tensors
+  [T, E, C].  Shards cleanly under GSPMD (E on the 'model'/expert axis,
+  T on 'data'); the dispatch einsums lower to all-to-all-free masked
+  matmuls; the paper-standard baseline.
+* ``sort``    -- argsort tokens by expert, gather into [E, C, D]
+  buffers, scatter back.  O(T·k·D) data movement instead of O(T·E·C·D)
+  dispatch FLOPs; the beyond-baseline variant used in §Perf hillclimbs.
+
+Router: softmax-then-top-k (Switch/GShard convention), probs renormalized
+over the chosen k, with the standard load-balancing auxiliary loss
+(Switch eq. 4) returned for the trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int                  # per-expert hidden
+    n_shared_experts: int = 0  # DeepSeek/Moonlight-style always-on experts
+    capacity_factor: float = 1.25
+    dispatch: Literal["einsum", "sort"] = "einsum"
+    # GShard groups: tokens are dispatched per group of T/n_groups, with
+    # per-group capacity -- one group per data shard at scale.  A single
+    # global group would make capacity O(T_global) and blow the dispatch
+    # einsum up by the shard count (measured in EXPERIMENTS.md §Perf).
+    n_groups: int = 1
+    # optional GSPMD activation constraints (set by launch/steps.py):
+    disp_spec: object = None   # PartitionSpec for [G, Tg, E, C]
+    expert_spec: object = None  # PartitionSpec for [E, G, C, D]
+
+
+def init(key, cfg: MoEConfig, dtype=jnp.float32):
+    ks = common.split_keys(key, ["router", "gate", "up", "down", "sh"])
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": common.dense_init(ks["router"], (d, e), dtype=dtype),
+        "w_gate": common.dense_init(ks["gate"], (e, d, f), dtype=dtype),
+        "w_up": common.dense_init(ks["up"], (e, d, f), dtype=dtype),
+        "w_down": common.dense_init(ks["down"], (e, f, d), dtype=dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks["sh"], 3)
+        p["shared"] = {
+            "w_gate": common.dense_init(k1, (d, fs), dtype=dtype),
+            "w_up": common.dense_init(k2, (d, fs), dtype=dtype),
+            "w_down": common.dense_init(k3, (fs, d), dtype=dtype),
+        }
+    return p
+
+
+def _capacity(t: int, cfg: MoEConfig) -> int:
+    c = int(t * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(c, cfg.top_k)
+
+
+def _router(params, x, cfg: MoEConfig):
+    """x: [T, D] -> (probs [T,E], top idx [T,k], top weight [T,k], aux)."""
+    logits = (x.astype(jnp.float32) @
+              params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, cfg.top_k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+    # Switch aux loss: E * mean(frac_tokens_e * frac_prob_e)
+    t = x.shape[0]
+    onehot = jax.nn.one_hot(top_i, cfg.n_experts, dtype=jnp.float32)
+    frac_tok = jnp.mean(jnp.sum(onehot, axis=1), axis=0)
+    frac_prob = jnp.mean(probs, axis=0)
+    aux = cfg.n_experts * jnp.sum(frac_tok * frac_prob)
+    return probs, top_i, top_w, aux
+
+
+def _expert_ffn(params, xe):
+    """xe: [E, C, D] -> [E, C, D] (SwiGLU per expert)."""
+    g = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+
+def _apply_einsum(params, x, cfg: MoEConfig):
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    g = cfg.n_groups if cfg.n_groups > 0 and t % cfg.n_groups == 0 else 1
+    tg = t // g
+    c = _capacity(tg, cfg)
+    _, top_i, top_w, aux = _router(params, x, cfg)
+    # position of each (token, slot) within its expert queue, per group
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.int32)   # [T,k,E]
+    oh_g = onehot.reshape(g, tg, k, e)
+    flat = oh_g.reshape(g, tg * k, e)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1            # 0-based in expert
+    pos = pos.reshape(g, tg, k, e)
+    in_cap = (pos >= 0) & (pos < c)
+    pos_c = jnp.clip(pos, 0, c - 1)
+    disp = (jax.nn.one_hot(pos_c, c, dtype=x.dtype)
+            * in_cap[..., None].astype(x.dtype)
+            * oh_g[..., None].astype(x.dtype))           # [G,Tg,k,E,C]
+    combine = disp * top_w.reshape(g, tg, k, 1, 1).astype(x.dtype)
+    disp = jnp.sum(disp, axis=2)                         # [G,Tg,E,C]
+    combine = jnp.sum(combine, axis=2)                   # [G,Tg,E,C]
+    if cfg.disp_spec is not None:
+        disp = jax.lax.with_sharding_constraint(disp, cfg.disp_spec)
+        combine = jax.lax.with_sharding_constraint(combine, cfg.disp_spec)
+    xg = x.reshape(g, tg, d)
+    xe = jnp.einsum("gtec,gtd->egcd", disp, xg)          # [E,G,C,D]
+    if cfg.expert_spec is not None:
+        # the G<->E transpose is GShard's all-to-all (dp <-> expert axis)
+        xe = jax.lax.with_sharding_constraint(xe, cfg.expert_spec)
+    ye = _expert_ffn(params, xe.reshape(e, g * c, d)).reshape(e, g, c, d)
+    if cfg.expert_spec is not None:
+        ye = jax.lax.with_sharding_constraint(ye, cfg.expert_spec)
+    y = jnp.einsum("gtec,egcd->gtd", combine, ye)
+    return y.reshape(t, d), aux
+
+
+def _apply_sort(params, x, cfg: MoEConfig):
+    t, d = x.shape
+    c = _capacity(t, cfg)
+    e = cfg.n_experts
+    _, top_i, top_w, aux = _router(params, x, cfg)
+    flat_e = top_i.reshape(-1)                  # [T*k] expert of each slot
+    flat_t = jnp.repeat(jnp.arange(t), cfg.top_k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)    # group slots by expert
+    se, st_, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position within expert group
+    idx = jnp.arange(t * cfg.top_k)
+    start = jnp.searchsorted(se, jnp.arange(e), side="left")
+    pos = idx - start[se]
+    keep = pos < c
+    buf_slot = jnp.where(keep, se * c + pos, e * c)  # OOB drop slot
+    xe = jnp.zeros((e * c + 1, d), x.dtype).at[buf_slot].add(x[st_])
+    ye = _expert_ffn(params, xe[:e * c].reshape(e, c, d)).reshape(e * c, d)
+    contrib = ye[jnp.where(keep, se * c + pos, 0)] * \
+        (sw * keep.astype(sw.dtype))[:, None].astype(x.dtype)
+    y = jnp.zeros_like(x).at[st_].add(contrib)
+    return y, aux
+
+
+def apply(params, x, cfg: MoEConfig):
+    """x: [T, D] -> (y [T, D], aux_loss scalar)."""
+    if cfg.dispatch == "einsum":
+        y, aux = _apply_einsum(params, x, cfg)
+    else:
+        y, aux = _apply_sort(params, x, cfg)
+    if cfg.n_shared_experts:
+        sh = params["shared"]
+        h = jax.nn.silu(x @ sh["w_gate"]) * (x @ sh["w_up"])
+        y = y + h @ sh["w_down"]
+    return y, aux

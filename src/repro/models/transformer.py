@@ -1,0 +1,368 @@
+"""Decoder-only LM family: one scanned layer covers all five assigned archs.
+
+Features (per-arch toggles in configs/): GQA with separate n_kv_heads,
+explicit head_dim, qk-norm (qwen3), sliding-window attention (danube),
+local:global layer interleave (gemma3 5:1), RoPE, RMSNorm, SwiGLU FFN or
+MoE FFN (moonlight 64e/top-6 + shared expert, qwen3-moe 128e/top-8),
+tied or untied vocab head.
+
+Layers are homogeneous and *scanned* (params stacked on a leading [L] axis)
+so the 94-layer dry-runs compile one layer once; per-layer structure (the
+local/global pattern) rides along as a traced int32[L] window vector --
+attention masks take the window as data, so no per-layer retrace happens.
+
+Three entry points per the assigned shapes:
+  ``loss_fn``      -- teacher-forced next-token CE          (train_4k)
+  ``prefill``      -- build KV cache, return last logits    (prefill_32k)
+  ``decode_step``  -- one token with a [L]-stacked KV cache (decode_32k,
+                      long_500k for the bounded-window archs)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, moe as moe_lib
+from repro.kernels import flash_attention as fa
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    qk_norm: bool = False
+    window: int = 0          # sliding-window width for local layers; 0=full
+    local_global: int = 0    # N local layers per 1 global layer; 0=all global
+    rope_theta: float = 1e4
+    tie_embeddings: bool = True
+    moe: Optional[moe_lib.MoEConfig] = None
+    dtype: Any = jnp.float32
+    remat: str = "none"      # 'none' | 'full' | 'dots' (§Perf knob)
+    attn_impl: str = "xla"   # 'xla' | 'flash' (flash needs uniform windows)
+    aux_loss_weight: float = 0.01
+    # optional GSPMD constraint for the residual stream [B, S, D]
+    # (Megatron-style sequence parallelism when S is on 'model'):
+    act_spec: Any = None
+    # unroll the layer scan (dry-run FLOP metering: XLA cost analysis
+    # counts a while body once, ignoring trip count)
+    scan_unroll: bool = False
+
+    @property
+    def windows(self):
+        """int32[L] per-layer window (0 = full attention)."""
+        out = []
+        for l in range(self.n_layers):
+            if self.local_global > 0 and \
+                    (l + 1) % (self.local_global + 1) == 0:
+                out.append(0)            # global layer
+            else:
+                out.append(self.window)  # local (or all-layer) window
+        return jnp.asarray(out, jnp.int32)
+
+    def n_params(self) -> int:
+        d, dh = self.d_model, self.head_dim
+        attn = d * dh * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.moe is not None:
+            ffn = d * self.moe.n_experts * self.moe.d_ff * 3 + \
+                d * self.moe.n_experts + \
+                d * self.moe.d_ff * self.moe.n_shared_experts * 3
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if self.moe is None:
+            return self.n_params()
+        d = self.d_model
+        attn = d * self.head_dim * (self.n_heads * 2 + self.n_kv_heads * 2)
+        ffn = d * self.moe.top_k * self.moe.d_ff * 3 + \
+            d * self.moe.n_experts + \
+            d * self.moe.d_ff * self.moe.n_shared_experts * 3
+        per_layer = attn + ffn + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+
+# --------------------------------------------------------------- params ---
+
+def _layer_init(key, cfg: LMConfig):
+    d, dh = cfg.d_model, cfg.head_dim
+    ks = common.split_keys(
+        key, ["wq", "wk", "wv", "wo", "ffn", "ln"])
+    p = {
+        "ln1": jnp.zeros((d,), cfg.dtype),
+        "ln2": jnp.zeros((d,), cfg.dtype),
+        "wq": common.dense_init(ks["wq"], (d, cfg.n_heads * dh),
+                                dtype=cfg.dtype),
+        "wk": common.dense_init(ks["wk"], (d, cfg.n_kv_heads * dh),
+                                dtype=cfg.dtype),
+        "wv": common.dense_init(ks["wv"], (d, cfg.n_kv_heads * dh),
+                                dtype=cfg.dtype),
+        "wo": common.dense_init(ks["wo"], (cfg.n_heads * dh, d),
+                                dtype=cfg.dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), cfg.dtype)
+        p["k_norm"] = jnp.zeros((dh,), cfg.dtype)
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.init(ks["ffn"], cfg.moe, dtype=cfg.dtype)
+    else:
+        k1, k2, k3 = jax.random.split(ks["ffn"], 3)
+        p["ffn"] = {
+            "w_gate": common.dense_init(k1, (d, cfg.d_ff), dtype=cfg.dtype),
+            "w_up": common.dense_init(k2, (d, cfg.d_ff), dtype=cfg.dtype),
+            "w_down": common.dense_init(k3, (cfg.d_ff, d), dtype=cfg.dtype),
+        }
+    return p
+
+
+def init(key, cfg: LMConfig):
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    params = {
+        "embed": common.embed_init(k_emb, (cfg.vocab, cfg.d_model),
+                                   dtype=cfg.dtype),
+        "layers": layers,
+        "ln_f": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(
+            k_head, (cfg.d_model, cfg.vocab), dtype=cfg.dtype)
+    return params
+
+
+# ------------------------------------------------------------ attention ---
+
+def _heads(x, n, dh):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, dh)
+
+
+def _attn_scores_mask(pos_q, pos_k, window):
+    """bool mask [..., Sq, Sk]: causal ∧ (window==0 ∨ distance < window)."""
+    d = pos_q[..., :, None] - pos_k[..., None, :]
+    return (d >= 0) & ((window <= 0) | (d < window))
+
+
+def _attention_xla(q, k, v, pos_q, pos_k, window):
+    """q: [B,Sq,H,Dh]; k,v: [B,Sk,Hkv,Dh]; window: traced int32 scalar."""
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    qg = q.reshape(b, sq, hkv, rep, dh)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k).astype(jnp.float32)
+    scores = scores / (dh ** 0.5)
+    mask = _attn_scores_mask(pos_q, pos_k, window)  # [B,Sq,Sk] or [Sq,Sk]
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", p, v)
+    return out.reshape(b, sq, h, dh)
+
+
+def _attention_chunked(q, k, v, pos_q, pos_k, window, chunk: int = 1024):
+    """FlashAttention expressed in XLA: scan over KV chunks with an online
+    softmax, so no [B,H,Sq,Sk] score tensor ever exists in HBM -- the
+    §Perf lever for the memory-bound train/prefill cells.  Numerically
+    identical to `_attention_xla` (same mask semantics, fp32 softmax).
+    """
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    if sk % chunk != 0:
+        chunk = sk  # degenerate fallback (smoke shapes)
+    nc = sk // chunk
+    qg = (q.reshape(b, sq, hkv, rep, dh).astype(jnp.float32)
+          / (dh ** 0.5))
+    if pos_k.ndim == 1:
+        pos_k = jnp.broadcast_to(pos_k[None], (b, sk))
+    kc = k.reshape(b, nc, chunk, hkv, dh).swapaxes(0, 1)
+    vc = v.reshape(b, nc, chunk, hkv, dh).swapaxes(0, 1)
+    pc = pos_k.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kb, vb, pkb = blk
+        s = jnp.einsum("bqhrd,bkhd->bqhrk", qg, kb.astype(jnp.float32))
+        mask = _attn_scores_mask(pos_q, pkb, window)   # [B, Sq, C]
+        s = jnp.where(mask[:, :, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[:, :, None, None], p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqhrk,bkhd->bqhrd", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, sq, hkv, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, rep), jnp.float32)
+    a0 = jnp.zeros((b, sq, hkv, rep, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def _layer_fwd(cfg: LMConfig, p, x, positions, window, kv_override=None):
+    """One decoder layer.  x: [B,S,D].  Returns (y, (k, v), aux_loss)."""
+    b, s, d = x.shape
+    dh = cfg.head_dim
+    h = common.rms_norm(x, p["ln1"])
+    q = _heads(h @ p["wq"], cfg.n_heads, dh)
+    k = _heads(h @ p["wk"], cfg.n_kv_heads, dh)
+    v = _heads(h @ p["wv"], cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p["q_norm"])
+        k = common.rms_norm(k, p["k_norm"])
+    q = common.rope(q.swapaxes(1, 2), positions[:, None, :],
+                    cfg.rope_theta).swapaxes(1, 2)
+    k = common.rope(k.swapaxes(1, 2), positions[:, None, :],
+                    cfg.rope_theta).swapaxes(1, 2)
+    if kv_override is not None:
+        k_all, v_all, pos_k = kv_override(k, v)
+    else:
+        k_all, v_all, pos_k = k, v, positions
+    if cfg.attn_impl == "flash" and kv_override is None \
+            and cfg.local_global == 0:
+        out = fa.mha(q.swapaxes(1, 2), k_all.swapaxes(1, 2),
+                     v_all.swapaxes(1, 2), causal=True,
+                     window=cfg.window).swapaxes(1, 2)
+    elif cfg.attn_impl == "chunked":
+        out = _attention_chunked(q, k_all, v_all, positions, pos_k, window)
+    else:
+        out = _attention_xla(q, k_all, v_all, positions, pos_k, window)
+    x = x + out.reshape(b, s, cfg.n_heads * dh) @ p["wo"]
+    h = common.rms_norm(x, p["ln2"])
+    if cfg.moe is not None:
+        y, aux = moe_lib.apply(p["moe"], h.reshape(b * s, d), cfg.moe)
+        y = y.reshape(b, s, d)
+    else:
+        f = p["ffn"]
+        y = (jax.nn.silu(h @ f["w_gate"]) * (h @ f["w_up"])) @ f["w_down"]
+        aux = jnp.zeros((), jnp.float32)
+    return x + y, (k, v), aux
+
+
+def _scan_layers(cfg: LMConfig, params, x, positions, kv_override=None):
+    windows = cfg.windows
+
+    def body(carry, layer_in):
+        x, aux = carry
+        p, window = layer_in
+        if cfg.act_spec is not None:
+            x = jax.lax.with_sharding_constraint(x, cfg.act_spec)
+        y, (k, v), a = _layer_fwd(cfg, p, x, positions, window, kv_override)
+        if cfg.act_spec is not None:
+            y = jax.lax.with_sharding_constraint(y, cfg.act_spec)
+        return (y, aux + a), (k, v)
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots)
+    (x, aux), kv = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                (params["layers"], windows),
+                                unroll=bool(cfg.scan_unroll))
+    return x, aux, kv
+
+
+def _logits(cfg: LMConfig, params, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ head).astype(jnp.float32)
+
+
+# --------------------------------------------------------------- losses ---
+
+def loss_fn(params, batch, cfg: LMConfig):
+    """batch: {'tokens': int32[B,S], 'labels': int32[B,S] (-100 = pad)}."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, aux, _ = _scan_layers(cfg, params, x, positions)
+    x = common.rms_norm(x, params["ln_f"])
+    logits = _logits(cfg, params, x)
+    valid = labels >= 0
+    tgt = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1)
+    return loss + cfg.aux_loss_weight * aux / cfg.n_layers, {
+        "ce": loss, "aux": aux}
+
+
+# -------------------------------------------------------------- serving ---
+
+def prefill(params, tokens, cfg: LMConfig, cache_len: int):
+    """tokens: int32[B,S] -> (cache, last_logits [B,V]).
+
+    cache = {'k','v': [L,B,cache_len,Hkv,Dh], 'pos': int32}.
+    """
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _, kv = _scan_layers(cfg, params, x, positions)
+    x = common.rms_norm(x, params["ln_f"])
+    k, v = kv  # [L,B,S,Hkv,Dh]
+    pad = cache_len - s
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": k, "v": v, "pos": jnp.int32(s)}
+    return cache, _logits(cfg, params, x[:, -1])
+
+
+def decode_step(params, cache, tok, cfg: LMConfig):
+    """One-token decode.  tok: int32[B] -> (logits [B,V], cache)."""
+    b = tok.shape[0]
+    cache_len = cache["k"].shape[2]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tok[:, None], axis=0)  # [B,1,D]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    pos_k = jnp.arange(cache_len, dtype=jnp.int32)
+    valid_k = pos_k <= pos  # written entries only
+
+    windows = cfg.windows
+
+    def body(carry, layer_in):
+        x, = carry
+        p, window, kc, vc = layer_in
+
+        def kv_override(k_new, v_new):
+            # write this step's k/v at position `pos`
+            kk = jax.lax.dynamic_update_slice(
+                kc, k_new, (0, pos, 0, 0))
+            vv = jax.lax.dynamic_update_slice(
+                vc, v_new, (0, pos, 0, 0))
+            # mask out unwritten cache slots via key positions
+            pk = jnp.where(valid_k, pos_k, jnp.int32(2 ** 30))
+            return kk, vv, jnp.broadcast_to(pk[None], (b, cache_len))
+
+        y, (k1, v1), _ = _layer_fwd(cfg, p, x, positions, window,
+                                    kv_override)
+        kk = jax.lax.dynamic_update_slice(kc, k1, (0, pos, 0, 0))
+        vv = jax.lax.dynamic_update_slice(vc, v1, (0, pos, 0, 0))
+        return (y,), (kk, vv)
+
+    (x,), (k_new, v_new) = jax.lax.scan(
+        body, (x,), (params["layers"], windows, cache["k"], cache["v"]),
+        unroll=bool(cfg.scan_unroll))
+    x = common.rms_norm(x, params["ln_f"])
+    logits = _logits(cfg, params, x[:, 0])
+    return logits, {"k": k_new, "v": v_new, "pos": pos + 1}

@@ -1,0 +1,1 @@
+from repro.optim import compression, optimizer  # noqa: F401

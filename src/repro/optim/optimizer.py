@@ -1,0 +1,100 @@
+"""AdamW + schedules + global-norm clipping, pytree-native.
+
+ZeRO-1 note: optimizer state tensors inherit the parameter's sharding and
+are additionally sharded along the 'data' axis where a parameter is
+replicated over it (see launch/partition.zero1_specs) -- the classic
+optimizer-state partitioning, expressed purely through PartitionSpecs so
+pjit/GSPMD inserts the reduce-scatter/all-gather pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # 'cosine' | 'linear' | 'const'
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: object
+    v: object
+    count: jax.Array
+
+
+def init(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return OptState(m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * \
+            0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_frac) * frac
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def update(grads, state: OptState, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state.count + 1
+    lr = schedule(cfg, count)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(m, v, g, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        mhat = m / (1 - b1 ** count.astype(jnp.float32))
+        vhat = v / (1 - b2 ** count.astype(jnp.float32))
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        new_p = (p.astype(jnp.float32)
+                 - lr * (step_ + cfg.weight_decay * p.astype(jnp.float32)))
+        return m, v, new_p.astype(p.dtype)
+
+    flat_m, tdef = jax.tree.flatten(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_g = jax.tree.leaves(grads)
+    flat_p = jax.tree.leaves(params)
+    new = [upd(m, v, g, p) for m, v, g, p in
+           zip(flat_m, flat_v, flat_g, flat_p)]
+    new_m = tdef.unflatten([x[0] for x in new])
+    new_v = tdef.unflatten([x[1] for x in new])
+    new_p = tdef.unflatten([x[2] for x in new])
+    return new_p, OptState(new_m, new_v, count), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,127 @@
+"""Fault-tolerant training loop.
+
+Production behaviors implemented (and unit-tested):
+
+  * **checkpoint/restart**: the full step state -- params, AdamW moments,
+    error-feedback residuals, RNG key, data cursor (step) -- is saved
+    atomically every ``ckpt_every`` steps; on construction the trainer
+    restores the latest intact checkpoint and resumes mid-run.  Because
+    the data pipeline is a pure function of the step, a preempted-and-
+    resumed run is *bit-identical* to an uninterrupted one
+    (tests/test_trainer.py::test_preemption_resume_identical).
+  * **straggler surveillance**: per-step wall time vs a rolling median;
+    outliers beyond ``straggler_factor``× are counted and logged.  On a
+    real fleet this signal feeds the preempt-and-reshard controller; here
+    it is the hook + the bookkeeping.
+  * **gradient compression**: optional int8 error-feedback path on the
+    (pod-axis) gradient reduction (optim/compression.py).
+  * **donation**: train_step donates params/opt state buffers, so the
+    update is in-place at the XLA level.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint
+from repro.optim import compression, optimizer
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 20
+    keep_ckpts: int = 3
+    log_every: int = 10
+    grad_compression: bool = False
+    pod_axis: Optional[str] = None  # axis name for the compressed psum
+    straggler_factor: float = 3.0
+
+
+class Trainer:
+    def __init__(self, loss_fn: Callable, params, opt_cfg:
+                 optimizer.AdamWConfig, cfg: TrainerConfig,
+                 data_fn: Callable[[int], dict]):
+        """loss_fn(params, batch) -> (loss, metrics); data_fn(step) -> batch."""
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.data_fn = data_fn
+        self.loss_fn = loss_fn
+        self.state = {
+            "params": params,
+            "opt": optimizer.init(params),
+            "ef": (compression.init(params)
+                   if cfg.grad_compression else None),
+            "rng": jax.random.PRNGKey(0),
+        }
+        self.step = 0
+        self.metrics_log = []
+        self.step_times = []
+        self.straggler_events = 0
+        self._build()
+        self._maybe_restore()
+
+    def _build(self):
+        cfg, opt_cfg = self.cfg, self.opt_cfg
+
+        def train_step(state, batch):
+            def lf(p):
+                return self.loss_fn(p, batch)
+
+            (loss, metrics), grads = jax.value_and_grad(
+                lf, has_aux=True)(state["params"])
+            ef = state["ef"]
+            if ef is not None:
+                grads, ef = compression.compressed_psum(
+                    grads, ef, cfg.pod_axis)
+            params, opt, m2 = optimizer.update(
+                grads, state["opt"], state["params"], opt_cfg)
+            metrics = dict(metrics, loss=loss, **m2)
+            return {"params": params, "opt": opt, "ef": ef,
+                    "rng": jax.random.fold_in(state["rng"], 1)}, metrics
+
+        self.train_step = jax.jit(train_step, donate_argnums=(0,))
+
+    def _maybe_restore(self):
+        if self.cfg.ckpt_dir is None:
+            return
+        restored, step = checkpoint.restore(self.cfg.ckpt_dir, self.state)
+        if restored is not None:
+            self.state = restored
+            self.step = int(step)
+
+    def save(self):
+        if self.cfg.ckpt_dir is not None:
+            checkpoint.save(self.cfg.ckpt_dir, self.step, self.state,
+                            keep=self.cfg.keep_ckpts)
+
+    def _watch_straggler(self, dt: float):
+        self.step_times.append(dt)
+        hist = self.step_times[-50:]
+        if len(hist) >= 10:
+            med = sorted(hist)[len(hist) // 2]
+            if dt > self.cfg.straggler_factor * med:
+                self.straggler_events += 1
+
+    def run(self, steps: Optional[int] = None):
+        end = self.step + steps if steps is not None else \
+            self.cfg.total_steps
+        while self.step < end:
+            batch = self.data_fn(self.step)
+            t0 = time.perf_counter()
+            self.state, metrics = self.train_step(self.state, batch)
+            jax.block_until_ready(metrics["loss"])
+            self._watch_straggler(time.perf_counter() - t0)
+            self.step += 1
+            if self.step % self.cfg.log_every == 0 or self.step == end:
+                self.metrics_log.append(
+                    (self.step, {k: float(v) for k, v in metrics.items()}))
+            if self.cfg.ckpt_dir is not None and \
+                    self.step % self.cfg.ckpt_every == 0:
+                self.save()
+        return self.metrics_log

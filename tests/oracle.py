@@ -1,0 +1,122 @@
+"""Pure-python reference implementations used as test oracles.
+
+``tarjan_ccid`` returns the canonical labelling our engine uses: every
+vertex is labelled with the minimum vertex id of its SCC; absent vertices
+get the sentinel ``n_vertices``.  Iterative Tarjan (no recursion limit).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+
+def tarjan_ccid(n_vertices: int, edges, alive=None):
+    """edges: iterable of (u, v); alive: optional bool mask/list."""
+    if alive is None:
+        alive = [True] * n_vertices
+    adj = defaultdict(list)
+    for u, v in edges:
+        if alive[u] and alive[v]:
+            adj[u].append(v)
+
+    index = {}
+    low = {}
+    on_stack = set()
+    stack = []
+    sccs = []
+    counter = [0]
+
+    for root in range(n_vertices):
+        if not alive[root] or root in index:
+            continue
+        # iterative DFS: (node, iterator position)
+        work = [(root, 0)]
+        while work:
+            v, pi = work.pop()
+            if pi == 0:
+                index[v] = low[v] = counter[0]
+                counter[0] += 1
+                stack.append(v)
+                on_stack.add(v)
+            recurse = False
+            nbrs = adj[v]
+            for i in range(pi, len(nbrs)):
+                w = nbrs[i]
+                if w not in index:
+                    work.append((v, i + 1))
+                    work.append((w, 0))
+                    recurse = True
+                    break
+                elif w in on_stack:
+                    low[v] = min(low[v], index[w])
+            if recurse:
+                continue
+            if low[v] == index[v]:
+                comp = []
+                while True:
+                    w = stack.pop()
+                    on_stack.discard(w)
+                    comp.append(w)
+                    if w == v:
+                        break
+                sccs.append(comp)
+            if work:
+                parent = work[-1][0]
+                low[parent] = min(low[parent], low[v])
+
+    ccid = [n_vertices] * n_vertices
+    for comp in sccs:
+        m = min(comp)
+        for v in comp:
+            ccid[v] = m
+    return ccid
+
+
+class SeqSCC:
+    """Sequential fully-dynamic oracle: python set-of-edges + Tarjan after
+    every op.  Mirrors the paper's method contracts exactly."""
+
+    def __init__(self, n_vertices: int):
+        self.n = n_vertices
+        self.alive = [False] * n_vertices
+        self.edges = set()
+
+    def add_vertex(self, u):
+        if not (0 <= u < self.n) or self.alive[u]:
+            return False
+        self.alive[u] = True
+        return True
+
+    def remove_vertex(self, u):
+        if not (0 <= u < self.n) or not self.alive[u]:
+            return False
+        self.alive[u] = False
+        self.edges = {(a, b) for (a, b) in self.edges
+                      if a != u and b != u}
+        return True
+
+    def add_edge(self, u, v):
+        if not (0 <= u < self.n and 0 <= v < self.n):
+            return False
+        if not (self.alive[u] and self.alive[v]):
+            return False
+        if (u, v) in self.edges:
+            return False
+        self.edges.add((u, v))
+        return True
+
+    def remove_edge(self, u, v):
+        if not (0 <= u < self.n and 0 <= v < self.n):
+            return False
+        if not (self.alive[u] and self.alive[v]):
+            return False
+        if (u, v) not in self.edges:
+            return False
+        self.edges.discard((u, v))
+        return True
+
+    def ccid(self):
+        return tarjan_ccid(self.n, self.edges, self.alive)
+
+    def check_scc(self, u, v):
+        lab = self.ccid()
+        return (self.alive[u] and self.alive[v] and lab[u] == lab[v])

@@ -1,0 +1,348 @@
+"""Reduced-config smoke tests: one forward/train step per architecture
+family on CPU, asserting shapes and finiteness; plus equivariance property
+tests for the geometric GNNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graph import batching
+from repro.models import moe as moe_lib
+from repro.models import transformer as tf
+from repro.models.gnn import common as gc
+from repro.models.gnn import egnn, gatedgcn, mace, nequip
+from repro.models.recsys import mind
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny_lm(**kw):
+    base = dict(name="tiny", n_layers=2, d_model=32, n_heads=4,
+                n_kv_heads=2, head_dim=8, d_ff=64, vocab=128,
+                dtype=jnp.float32)
+    base.update(kw)
+    return tf.LMConfig(**base)
+
+
+def lm_batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, (b, s + 1))
+    return {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+
+
+# ------------------------------------------------------------------- LM ---
+
+@pytest.mark.parametrize("kw", [
+    dict(),                                        # plain GQA
+    dict(qk_norm=True),                            # qwen3-style
+    dict(window=8),                                # danube SWA
+    dict(window=8, local_global=2),                # gemma3-style mix
+    dict(tie_embeddings=False),
+])
+def test_lm_forward_variants(kw):
+    cfg = tiny_lm(**kw)
+    params = tf.init(KEY, cfg)
+    loss, metrics = tf.loss_fn(params, lm_batch(cfg), cfg)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+
+
+def test_lm_moe():
+    mcfg = moe_lib.MoEConfig(n_experts=4, top_k=2, d_model=32, d_ff=32,
+                             n_shared_experts=1)
+    cfg = tiny_lm(moe=mcfg)
+    params = tf.init(KEY, cfg)
+    loss, metrics = tf.loss_fn(params, lm_batch(cfg), cfg)
+    assert np.isfinite(float(loss))
+    assert float(metrics["aux"]) > 0
+
+
+def test_moe_dispatch_equivalence():
+    """einsum vs sort dispatch agree when capacity is not binding."""
+    d = 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (24, d))
+    cfg_e = moe_lib.MoEConfig(n_experts=4, top_k=2, d_model=d, d_ff=8,
+                              capacity_factor=4.0, dispatch="einsum")
+    cfg_s = moe_lib.MoEConfig(n_experts=4, top_k=2, d_model=d, d_ff=8,
+                              capacity_factor=4.0, dispatch="sort")
+    params = moe_lib.init(jax.random.PRNGKey(2), cfg_e)
+    y_e, aux_e = moe_lib.apply(params, x, cfg_e)
+    y_s, aux_s = moe_lib.apply(params, x, cfg_s)
+    np.testing.assert_allclose(np.asarray(y_e), np.asarray(y_s),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(aux_e), float(aux_s), rtol=1e-5)
+
+
+def test_lm_grad_step_decreases_loss():
+    cfg = tiny_lm()
+    params = tf.init(KEY, cfg)
+    batch = lm_batch(cfg)
+
+    @jax.jit
+    def step(p):
+        (l, _), g = jax.value_and_grad(
+            lambda p: tf.loss_fn(p, batch, cfg), has_aux=True)(p)
+        return l, jax.tree.map(lambda a, b: a - 0.5 * b, p, g)
+
+    l0, params = step(params)
+    for _ in range(5):
+        l1, params = step(params)
+    assert float(l1) < float(l0)
+
+
+def test_lm_prefill_decode_matches_full():
+    """Decode token-by-token == teacher-forced forward logits."""
+    cfg = tiny_lm(window=8, local_global=2)
+    params = tf.init(KEY, cfg)
+    b, s = 2, 12
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    # full forward logits at every position
+    x = jnp.take(params["embed"], toks, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h, _, _ = tf._scan_layers(cfg, params, x, positions)
+    h = tf.common.rms_norm(h, params["ln_f"])
+    full_logits = tf._logits(cfg, params, h)
+    # prefill 6, decode 6
+    cache, logits_p = tf.prefill(params, toks[:, :6], cfg, cache_len=s + 4)
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(full_logits[:, 5]),
+                               rtol=2e-4, atol=2e-4)
+    logits_d = logits_p
+    for t in range(6, s):
+        logits_d, cache = tf.decode_step(params, cache, toks[:, t], cfg)
+        np.testing.assert_allclose(np.asarray(logits_d),
+                                   np.asarray(full_logits[:, t]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------ GNN ---
+
+def graph_batch(task="energy", n_graphs=3, n_nodes=5, n_edges=10, d_feat=6,
+                n_classes=3, seed=0):
+    g = batching.pack_dense_batch(n_graphs, n_nodes, n_edges, seed=seed)
+    rng = np.random.default_rng(seed)
+    n = n_graphs * n_nodes
+    batch = {
+        "src": g.src, "dst": g.dst, "edge_mask": g.edge_mask,
+        "node_mask": g.node_mask.astype(jnp.float32),
+        "graph_id": g.graph_id,
+        "x": jnp.asarray(rng.normal(size=(n, d_feat)).astype(np.float32)),
+        "pos": jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32)),
+    }
+    if task == "energy":
+        batch["energy"] = jnp.asarray(
+            rng.normal(size=(n_graphs,)).astype(np.float32))
+        batch["forces"] = jnp.asarray(
+            rng.normal(size=(n, 3)).astype(np.float32))
+    else:
+        batch["labels"] = jnp.asarray(rng.integers(0, n_classes, n))
+    return batch
+
+
+GNN_CASES = [
+    ("egnn", egnn, egnn.EGNNConfig),
+    ("gatedgcn", gatedgcn, gatedgcn.GatedGCNConfig),
+    ("nequip", nequip, nequip.NequIPConfig),
+    ("mace", mace, mace.MACEConfig),
+]
+
+
+@pytest.mark.parametrize("name,mod,cfg_cls", GNN_CASES)
+@pytest.mark.parametrize("task", ["energy", "node_class"])
+def test_gnn_smoke(name, mod, cfg_cls, task):
+    kw = dict(n_layers=2, d_feat=6, task=task, n_classes=3, n_graphs=3)
+    if cfg_cls is not gatedgcn.GatedGCNConfig:
+        pass
+    if cfg_cls in (nequip.NequIPConfig, mace.MACEConfig):
+        kw["d_hidden"] = 8
+    elif cfg_cls is egnn.EGNNConfig:
+        kw["d_hidden"] = 16
+    else:
+        kw["d_hidden"] = 16
+    cfg = cfg_cls(**kw)
+    params = mod.init(KEY, cfg)
+    batch = graph_batch(task=task)
+    loss, metrics = mod.loss_fn(params, batch, cfg)
+    assert np.isfinite(float(loss)), (name, task, metrics)
+
+
+@pytest.mark.parametrize("name,mod,cfg_cls", GNN_CASES[2:])  # nequip, mace
+def test_equivariant_energy_invariance(name, mod, cfg_cls):
+    """Rotating all positions must not change energies (E(3) invariance)."""
+    cfg = cfg_cls(n_layers=2, d_hidden=8, d_feat=6, n_graphs=3)
+    params = mod.init(KEY, cfg)
+    batch = graph_batch()
+    e1 = mod.node_energy(params, batch["pos"], batch, cfg)
+    rot = gc.random_rotation(jax.random.PRNGKey(7))
+    e2 = mod.node_energy(params, batch["pos"] @ rot.T, batch, cfg)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                               rtol=5e-4, atol=5e-5)
+
+
+def test_egnn_pos_equivariance():
+    """EGNN updated positions rotate with the input rotation."""
+    cfg = egnn.EGNNConfig(n_layers=2, d_hidden=16, d_feat=6, n_graphs=3)
+    params = egnn.init(KEY, cfg)
+    batch = graph_batch()
+    _, pos1 = egnn._forward(params, batch["pos"], batch, cfg)
+    rot = gc.random_rotation(jax.random.PRNGKey(8))
+    _, pos2 = egnn._forward(params, batch["pos"] @ rot.T, batch, cfg)
+    np.testing.assert_allclose(np.asarray(pos1 @ rot.T), np.asarray(pos2),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_tensor_product_equivariance():
+    """Every TP path commutes with rotations."""
+    rng = np.random.default_rng(0)
+    rot = gc.random_rotation(jax.random.PRNGKey(9))
+    n, c = 4, 3
+    f = {"l0": jnp.asarray(rng.normal(size=(n, c)).astype(np.float32)),
+         "l1": jnp.asarray(rng.normal(size=(n, c, 3)).astype(np.float32)),
+         "l2": gc.sym_traceless(jnp.asarray(
+             rng.normal(size=(n, c, 3, 3)).astype(np.float32)))}
+    g = {"l0": jnp.asarray(rng.normal(size=(n, c)).astype(np.float32)),
+         "l1": jnp.asarray(rng.normal(size=(n, c, 3)).astype(np.float32)),
+         "l2": gc.sym_traceless(jnp.asarray(
+             rng.normal(size=(n, c, 3, 3)).astype(np.float32)))}
+    fr, gr = gc.rotate_feats(f, rot), gc.rotate_feats(g, rot)
+    for (la, lb, lo), fn in gc.TP_PATHS.items():
+        out = fn(f[f"l{la}"], g[f"l{lb}"])
+        out_r = fn(fr[f"l{la}"], gr[f"l{lb}"])
+        want = gc.rotate_feats({f"l{lo}": out, "l0": f["l0"] * 0}, rot)[
+            f"l{lo}"] if lo > 0 else out
+        np.testing.assert_allclose(np.asarray(out_r), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5,
+                                   err_msg=f"path {(la, lb, lo)}")
+
+
+# --------------------------------------------------------------- recsys ---
+
+def test_mind_train_and_serve():
+    cfg = mind.MINDConfig(n_items=200, embed_dim=16, seq_len=10,
+                          n_interests=3, n_neg=16, profile_vocab=32,
+                          profile_len=4)
+    params = mind.init(KEY, cfg)
+    rng = np.random.default_rng(0)
+    b = 8
+    batch = {
+        "behavior": jnp.asarray(rng.integers(-1, 200, (b, 10)), jnp.int32),
+        "profile": jnp.asarray(rng.integers(-1, 32, (b, 4)), jnp.int32),
+        "target": jnp.asarray(rng.integers(0, 200, (b,)), jnp.int32),
+        "negatives": jnp.asarray(rng.integers(0, 200, (16,)), jnp.int32),
+    }
+    loss, metrics = mind.loss_fn(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    u = mind.interests(params, batch["behavior"], batch["profile"], cfg)
+    assert u.shape == (b, 3, 16)
+    assert np.isfinite(np.asarray(u)).all()
+    batch["candidates"] = jnp.asarray(
+        rng.integers(0, 200, (b, 40)), jnp.int32)
+    scores = mind.serve_score(params, batch, cfg)
+    assert scores.shape == (b, 40)
+    vals, idx = mind.retrieve_topk(params, batch, cfg, k=5)
+    assert idx.shape == (b, 5)
+
+
+def test_mind_interests_differ():
+    """Capsules must break symmetry (distinct interests)."""
+    cfg = mind.MINDConfig(n_items=100, embed_dim=8, seq_len=6,
+                          n_interests=2, n_neg=4, profile_vocab=16,
+                          profile_len=2)
+    params = mind.init(KEY, cfg)
+    rng = np.random.default_rng(1)
+    behavior = jnp.asarray(rng.integers(0, 100, (4, 6)), jnp.int32)
+    profile = jnp.asarray(rng.integers(0, 16, (4, 2)), jnp.int32)
+    u = mind.interests(params, behavior, profile, cfg)
+    diff = np.abs(np.asarray(u[:, 0]) - np.asarray(u[:, 1])).max()
+    assert diff > 1e-3
+
+
+def test_chunked_attention_matches_xla():
+    """The §Perf online-softmax chunked path == materialized-score path."""
+    rng = np.random.default_rng(11)
+    b, s, h, hkv, dh = 2, 32, 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    for window in (0, 8):
+        ref = tf._attention_xla(q, k, v, pos, pos, jnp.int32(window))
+        got = tf._attention_chunked(q, k, v, pos, pos, jnp.int32(window),
+                                    chunk=8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attention_full_model():
+    cfg = tiny_lm(attn_impl="chunked", window=8, local_global=2)
+    params = tf.init(KEY, cfg)
+    loss, _ = tf.loss_fn(params, lm_batch(cfg), cfg)
+    cfg2 = tiny_lm(window=8, local_global=2)
+    loss2, _ = tf.loss_fn(params, lm_batch(cfg2), cfg2)
+    np.testing.assert_allclose(float(loss), float(loss2), rtol=1e-5)
+
+
+def test_smscc_label_spec_none_unchanged():
+    """label_spec plumbing must not change results (None on 1 device)."""
+    from repro.core import dynamic, graph_state as gs
+    cfg = gs.GraphConfig(n_vertices=16, edge_capacity=64, max_probes=64,
+                         max_outer=17, max_inner=18)
+    st_ = gs.empty(cfg)
+    ops = dynamic.make_ops(
+        [dynamic.ADD_VERTEX] * 4 + [dynamic.ADD_EDGE] * 3,
+        [0, 1, 2, 3, 0, 1, 2], [0, 0, 0, 0, 1, 2, 0])
+    st_, ok = dynamic.apply_batch(st_, ops, cfg)
+    assert np.asarray(st_.ccid[:4]).tolist() == [0, 0, 0, 3]
+
+
+def test_moe_grouped_dispatch_equivalence():
+    """Grouped einsum dispatch == ungrouped when capacity is ample."""
+    d = 16
+    x = jax.random.normal(jax.random.PRNGKey(4), (32, d))
+    base = dict(n_experts=4, top_k=2, d_model=d, d_ff=8,
+                capacity_factor=8.0)
+    cfg_1 = moe_lib.MoEConfig(**base, n_groups=1)
+    cfg_4 = moe_lib.MoEConfig(**base, n_groups=4)
+    params = moe_lib.init(jax.random.PRNGKey(5), cfg_1)
+    y1, a1 = moe_lib.apply(params, x, cfg_1)
+    y4, a4 = moe_lib.apply(params, x, cfg_4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_nequip_edge_chunking_equivalence():
+    """Chunked edge streaming == unchunked conv (bitwise-close)."""
+    import dataclasses
+    cfg = nequip.NequIPConfig(n_layers=2, d_hidden=8, d_feat=6, n_graphs=3)
+    cfg_c = dataclasses.replace(cfg, edge_chunk=10)  # 30 edges -> 3 chunks
+    params = nequip.init(KEY, cfg)
+    batch = graph_batch()
+    e1 = nequip.node_energy(params, batch["pos"], batch, cfg)
+    e2 = nequip.node_energy(params, batch["pos"], batch, cfg_c)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_nequip_edge_chunking_grad_equivalence():
+    """Custom-VJP chunked conv: first-order grads (params and positions)
+    match the unchunked path.  (Chunking is first-order only: the chunked
+    big-graph cells are all classification; force training -- grad of
+    grad -- runs unchunked.)"""
+    import dataclasses
+    cfg = nequip.NequIPConfig(n_layers=2, d_hidden=4, d_feat=6, n_graphs=3)
+    cfg_c = dataclasses.replace(cfg, edge_chunk=10)
+    params = nequip.init(KEY, cfg)
+    batch = graph_batch()
+
+    def e_sum(p, pos, c):
+        return jnp.sum(nequip.node_energy(p, pos, batch, c))
+
+    for argnum in (0, 1):
+        g1 = jax.grad(e_sum, argnum)(params, batch["pos"], cfg)
+        g2 = jax.grad(e_sum, argnum)(params, batch["pos"], cfg_c)
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            # fp32 accumulation order differs chunked vs unchunked
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=1e-5)

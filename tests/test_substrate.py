@@ -1,0 +1,187 @@
+"""Data pipeline / optimizer / compression / checkpoint / trainer tests,
+including the preemption-resume determinism property."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint
+from repro.data import pipeline
+from repro.optim import compression, optimizer
+from repro.train import trainer
+
+
+# ----------------------------------------------------------------- data ---
+
+def test_lm_batch_deterministic_and_sharded():
+    b1 = pipeline.lm_batch(64, 8, 12, step=3)
+    b2 = pipeline.lm_batch(64, 8, 12, step=3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = pipeline.lm_batch(64, 8, 12, step=4)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    s0 = pipeline.lm_batch(64, 8, 12, step=3,
+                           info=pipeline.ShardInfo(0, 2))
+    s1 = pipeline.lm_batch(64, 8, 12, step=3,
+                           info=pipeline.ShardInfo(1, 2))
+    assert s0["tokens"].shape == (4, 12)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+
+
+def test_op_stream_mix():
+    from repro.core import dynamic
+    ops = pipeline.op_stream(100, 4000, step=0, add_frac=0.9)
+    kinds = np.asarray(ops.kind)
+    adds = np.isin(kinds, [dynamic.ADD_EDGE, dynamic.ADD_VERTEX]).mean()
+    assert 0.85 < adds < 0.95
+
+
+def test_molecule_and_nodeclass_batches():
+    mb = pipeline.molecule_batch(4, 6, 10, 5, step=0)
+    assert mb["x"].shape == (24, 5) and mb["energy"].shape == (4,)
+    nb = pipeline.node_class_graph(50, 200, 8, 4, seed=1)
+    assert nb["labels"].shape == (50,)
+
+
+# ------------------------------------------------------------- optimizer ---
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    cfg = optimizer.AdamWConfig(lr=0.3, weight_decay=0.0, warmup_steps=0,
+                                total_steps=200, schedule="const")
+    state = optimizer.init(params)
+    for _ in range(150):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, m = optimizer.update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+    assert float(m["grad_norm"]) >= 0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = optimizer.clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(optimizer.global_norm(clipped)), 1.0,
+                               rtol=1e-5)
+
+
+def test_schedule_shapes():
+    cfg = optimizer.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lr0 = float(optimizer.schedule(cfg, jnp.int32(0)))
+    lr10 = float(optimizer.schedule(cfg, jnp.int32(10)))
+    lr100 = float(optimizer.schedule(cfg, jnp.int32(100)))
+    assert lr0 == 0.0 and abs(lr10 - 1.0) < 1e-6
+    assert abs(lr100 - cfg.min_lr_frac) < 1e-6
+
+
+# ------------------------------------------------------------ compression ---
+
+def test_error_feedback_reduces_bias():
+    """With error feedback the *accumulated* quantized sum tracks the true
+    sum much better than naive per-step quantization."""
+    rng = np.random.default_rng(0)
+    g_seq = [jnp.asarray(rng.normal(size=(64,)).astype(np.float32)) * 0.01
+             for _ in range(50)]
+    ef = compression.init({"g": g_seq[0]})
+    acc_ef, acc_naive, acc_true = (np.zeros(64) for _ in range(3))
+    for g in g_seq:
+        out, ef = compression.compressed_psum({"g": g}, ef, None)
+        acc_ef += np.asarray(out["g"])
+        q, s, _ = compression.compress(g, jnp.zeros_like(g))
+        acc_naive += np.asarray(compression.decompress(q, s))
+        acc_true += np.asarray(g)
+    err_ef = np.abs(acc_ef - acc_true).max()
+    err_naive = np.abs(acc_naive - acc_true).max()
+    assert err_ef <= err_naive * 1.5  # ef accumulates bounded error
+    assert err_ef < 0.01
+
+
+# ------------------------------------------------------------- checkpoint ---
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(5), "b": {"c": jnp.ones((2, 3)),
+                                      "d": [jnp.zeros(2), jnp.ones(1)]}}
+    checkpoint.save(str(tmp_path), 7, tree)
+    got, step = checkpoint.restore(str(tmp_path), tree)
+    assert step == 7
+    np.testing.assert_array_equal(got["b"]["d"][1], tree["b"]["d"][1])
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    tree = {"x": jnp.zeros(3)}
+    for s in (1, 2, 3, 4, 5):
+        checkpoint.save(str(tmp_path), s, tree, keep=2)
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
+    assert sorted(files) == ["ckpt_4.npz", "ckpt_5.npz"]
+    assert checkpoint.latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_torn_latest_falls_back(tmp_path):
+    tree = {"x": jnp.zeros(3)}
+    checkpoint.save(str(tmp_path), 1, tree)
+    checkpoint.save(str(tmp_path), 2, tree)
+    # corrupt LATEST's checksum target
+    os.remove(os.path.join(tmp_path, "ckpt_2.npz"))
+    assert checkpoint.latest_step(str(tmp_path)) == 1
+    got, step = checkpoint.restore(str(tmp_path), tree)
+    assert step == 1
+
+
+# ---------------------------------------------------------------- trainer ---
+
+def _toy_trainer(tmp_path=None, total=12, compress=False):
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        loss = jnp.mean((pred - batch["y"]) ** 2)
+        return loss, {}
+
+    def data_fn(step):
+        rng = np.random.default_rng(step)
+        x = jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32))
+        w_true = jnp.asarray([[1.0], [-2.0], [0.5], [3.0]])
+        return {"x": x, "y": x @ w_true}
+
+    params = {"w": jnp.zeros((4, 1))}
+    tcfg = trainer.TrainerConfig(
+        total_steps=total, ckpt_dir=str(tmp_path) if tmp_path else None,
+        ckpt_every=5, log_every=1, grad_compression=compress)
+    ocfg = optimizer.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                                 schedule="const")
+    return trainer.Trainer(loss_fn, params, ocfg, tcfg, data_fn)
+
+
+def test_trainer_learns():
+    t = _toy_trainer(total=60)
+    log = t.run()
+    assert log[-1][1]["loss"] < log[0][1]["loss"] * 0.1
+
+
+def test_preemption_resume_identical(tmp_path):
+    """Crash after step 7, resume from ckpt -> bit-identical final params."""
+    t_full = _toy_trainer(None, total=12)
+    t_full.run()
+    w_full = np.asarray(t_full.state["params"]["w"])
+
+    t_a = _toy_trainer(tmp_path, total=12)
+    t_a.run(steps=7)
+    t_a.save()
+    del t_a  # "preemption"
+    t_b = _toy_trainer(tmp_path, total=12)
+    assert t_b.step == 7  # restored cursor
+    t_b.run()
+    np.testing.assert_array_equal(np.asarray(t_b.state["params"]["w"]),
+                                  w_full)
+
+
+def test_trainer_with_compression_learns():
+    t = _toy_trainer(total=60, compress=True)
+    log = t.run()
+    assert log[-1][1]["loss"] < log[0][1]["loss"] * 0.2
+
+
+def test_straggler_counter():
+    t = _toy_trainer(total=30)
+    t.run()
+    # synthetic slow step
+    t._watch_straggler(100.0)
+    assert t.straggler_events >= 1
