@@ -1,0 +1,95 @@
+"""Streaming-service throughput: sustained ops/sec across workload mixes.
+
+The paper (Fig 4/5) measures an *on-line* system: threads apply an
+unbounded update stream while readers run SameSCC queries.  This bench
+drives :class:`repro.core.service.SCCService` -- grow-and-replay, bucketed
+batch scheduling, periodic compaction -- with the paper's mix axes:
+
+  update-heavy   90% inserts, no queries        (Fig 4b analogue)
+  balanced       50/50 add/remove + queries     (Fig 4a analogue)
+  query-heavy    mostly reader batches          (Fig 5 analogue)
+
+Reported: sustained update ops/s, query ops/s, number of compiled step
+shapes (must stay bounded by bucket-count x capacity-growth count no
+matter the stream length), table grows, compactions.
+
+    PYTHONPATH=src python -m benchmarks.bench_stream [--smoke] [--full]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro import configs
+from repro.core import graph_state as gs
+from repro.core.service import SCCService
+from repro.launch import stream
+from benchmarks import common
+
+
+def booted_service(cfg, buckets):
+    """Service over a graph with every vertex slot live (singleton SCCs):
+    edge inserts then land immediately, so an undersized table must grow."""
+    return SCCService(cfg, buckets=buckets, state=gs.all_singletons(cfg))
+
+MIXES = {
+    "update_heavy": dict(add_frac=0.9, query_frac=0.0),
+    "balanced": dict(add_frac=0.5, query_frac=0.5),
+    "query_heavy": dict(add_frac=0.5, query_frac=1.0),
+}
+
+
+def run(nv=4096, edge_capacity=4096, n_ops=16384, chunk=512,
+        buckets=(128, 512), n_queries=2048, mixes=None, seed=0):
+    """One service per mix (fresh table so growth cost is included)."""
+    smscc = configs.get("smscc")
+    rows = []
+    for name in (mixes or MIXES):
+        mix = MIXES[name]
+        cfg = smscc.config(n_vertices=nv, edge_capacity=edge_capacity,
+                           max_probes=64, max_outer=64, max_inner=128)
+        svc = booted_service(cfg, buckets)
+        rep = stream.run_stream(
+            svc, n_ops=n_ops, chunk=chunk, n_queries=n_queries,
+            seed=seed, **mix)
+        rows.append((name, rep["ops"], rep["ops_per_s"], rep["queries"],
+                     rep["queries_per_s"], rep["compile_count"],
+                     rep["grows"], rep["compactions"],
+                     rep["edge_capacity"]))
+        # grows AND capacity-escalating compactions each mint a new
+        # GraphConfig (hence up to len(buckets) fresh step shapes)
+        n_cfgs = 1 + rep["grows"] + rep["compactions"]
+        assert rep["compile_count"] <= len(buckets) * n_cfgs, (
+            "per-chunk recompilation detected: "
+            f"{rep['compile_count']} compiled shapes for "
+            f"{len(buckets)} buckets x {n_cfgs} configs")
+    return rows
+
+
+HEADER = ["mix", "ops", "ops_per_s", "queries", "queries_per_s",
+          "compiled_shapes", "grows", "compactions", "final_capacity"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CPU-friendly run (CI: exercises grow + "
+                         "replay + both mix extremes end-to-end)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale graph (slow; accelerator advised)")
+    args = ap.parse_args()
+    if args.smoke:
+        # capacity starts undersized on purpose so the smoke run also
+        # covers grow-and-replay
+        rows = run(nv=256, edge_capacity=256, n_ops=1024, chunk=128,
+                   buckets=(32, 128), n_queries=256,
+                   mixes=("update_heavy", "query_heavy"))
+    elif args.full:
+        rows = run(nv=2 ** 17, edge_capacity=2 ** 18, n_ops=2 ** 17,
+                   chunk=4096, buckets=(1024, 4096), n_queries=2 ** 15)
+    else:
+        rows = run()
+    common.emit(rows, HEADER)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,33 +1,56 @@
 """End-to-end driver: a fault-tolerant dynamic-SCC serving loop.
 
-This is the paper's system run the way it would run in production:
-  * a sustained stream of update batches + query batches (the paper's
-    mixed workload, Fig 4/5),
+This is the paper's system run the way it would run in production, now on
+top of the streaming service layer (:mod:`repro.core.service`):
+  * a sustained stream of update chunks + snapshot query batches (the
+    paper's mixed workload, Fig 4/5), cut into bucketed static batch
+    shapes so compilation count stays bounded,
+  * **grow-and-replay**: the edge table starts deliberately small; when
+    probe-bound overflow drops an insert, the service rehashes into a
+    larger capacity and replays it -- no edge is ever lost,
   * periodic atomic checkpoints of the WHOLE GraphState (the engine's
     "database") with crash-safe restore -- kill it mid-run and restart to
-    see it resume at the checkpointed batch cursor,
-  * throughput + straggler accounting per batch,
-  * periodic GC (edge-table compaction = the paper's hazard-pointer GC).
+    see it resume at the checkpointed chunk cursor.  The checkpoint
+    records the (possibly grown) edge capacity so restore rebuilds the
+    right template shapes,
+  * throughput + straggler accounting per chunk; GC (edge-table
+    compaction) happens inside the service when tombstones pile up.
 
     PYTHONPATH=src python examples/dynamic_scc_serving.py [--steps N]
 """
 import argparse
+import dataclasses
 import os
 import time
 
-import jax
 import numpy as np
 
 from repro.ckpt import checkpoint
-from repro.core import community, dynamic, edge_table as et
-from repro.core import graph_state as gs
+from repro.core import dynamic, graph_state as gs
+from repro.core.service import SCCService
 from repro.data import pipeline
 
 NV = 4096
 BATCH = 256
 QUERIES = 1024
 CKPT_DIR = "/tmp/smscc_serving_ckpt"
-GC_EVERY = 20
+CKPT_EVERY = 10
+
+
+def build_service(cfg: gs.GraphConfig):
+    """Preloaded service: random digraph loaded THROUGH the service so the
+    deliberately undersized table grows (and replays) instead of silently
+    dropping edges the way a raw bulk insert would."""
+    rng = np.random.default_rng(0)
+    svc = SCCService(cfg, buckets=(64, BATCH), state=gs.all_singletons(cfg))
+    n = 4000
+    svc.apply(np.full(n, dynamic.ADD_EDGE, np.int32),
+              rng.integers(0, NV, n), rng.integers(0, NV, n))
+    st = svc.stats()
+    print(f"[preload] {st['live_edges']} edges | capacity "
+          f"{st['edge_capacity']} (grows={st['grows']}, "
+          f"replayed={st['replayed_ops']})")
+    return svc
 
 
 def main():
@@ -39,57 +62,78 @@ def main():
         for f in os.listdir(CKPT_DIR):
             os.remove(os.path.join(CKPT_DIR, f))
 
-    cfg = gs.GraphConfig(n_vertices=NV, edge_capacity=2 ** 15,
+    cfg = gs.GraphConfig(n_vertices=NV, edge_capacity=2 ** 12,
                          max_probes=128, max_outer=64, max_inner=128)
-    rng = np.random.default_rng(0)
-    state = gs.from_arrays(cfg, rng.integers(0, NV, 8000),
-                           rng.integers(0, NV, 8000))
-    state = dynamic.recompute(state, cfg)
+    svc = None
     cursor = 0
 
-    # crash recovery: resume from the latest intact checkpoint
-    restored, step = checkpoint.restore(
-        CKPT_DIR, {"state": state, "cursor": np.int64(0)})
-    if restored is not None:
-        state, cursor = restored["state"], int(restored["cursor"])
-        print(f"[recovery] resumed at batch {cursor}")
+    # crash recovery: the meta leaves restore first (extra npz keys are
+    # ignored), telling us what edge capacity the state template needs --
+    # the table may have grown beyond the boot config before the crash.
+    try:
+        meta, _ = checkpoint.restore(
+            CKPT_DIR, {"cursor": np.int64(0),
+                       "edge_capacity": np.int64(cfg.edge_capacity)})
+    except KeyError:  # checkpoint from an older format: start fresh, and
+        # clear the stale files so a future torn-LATEST fallback cannot
+        # resurrect them over newer new-format progress
+        print("[recovery] unreadable (old-format) checkpoint removed")
+        for f in os.listdir(CKPT_DIR):
+            os.remove(os.path.join(CKPT_DIR, f))
+        meta = None
+    if meta is not None:
+        cap = int(meta["edge_capacity"])
+        ck_cfg = dataclasses.replace(cfg, edge_capacity=cap)
+        tpl = {"state": gs.empty(ck_cfg), "cursor": np.int64(0),
+               "edge_capacity": np.int64(cap)}
+        restored, _ = checkpoint.restore(CKPT_DIR, tpl)
+        svc = SCCService(ck_cfg, buckets=(64, BATCH),
+                         state=restored["state"])
+        cursor = int(restored["cursor"])
+        print(f"[recovery] resumed at chunk {cursor} (capacity {cap})")
+    if svc is None:  # no (usable) checkpoint: pay the preload only now
+        svc = build_service(cfg)
 
+    rng = np.random.default_rng(1)
     times = []
     stragglers = 0
     t_start = time.perf_counter()
     for step in range(cursor, args.steps):
-        ops = pipeline.op_stream(NV, BATCH, step=step, add_frac=0.6)
+        ops = pipeline.op_stream(NV, BATCH, step=step, add_frac=0.7)
         qu = rng.integers(0, NV, QUERIES)
         qv = rng.integers(0, NV, QUERIES)
         t0 = time.perf_counter()
-        state, ok = dynamic.apply_batch(state, ops, cfg)
-        same = community.check_scc(state, qu, qv)
-        jax.block_until_ready(same)
+        svc.apply(np.asarray(ops.kind), np.asarray(ops.u),
+                  np.asarray(ops.v))
+        same = svc.same_scc(qu, qv)
+        reach = svc.reachable(qu[:64], qv[:64])
+        assert same.gen == reach.gen  # one committed snapshot per chunk
         dt = time.perf_counter() - t0
         times.append(dt)
         med = sorted(times[-50:])[len(times[-50:]) // 2]
         if len(times) > 5 and dt > 3 * med:
             stragglers += 1
-            print(f"[straggler] batch {step}: {dt*1e3:.0f}ms vs median "
+            print(f"[straggler] chunk {step}: {dt*1e3:.0f}ms vs median "
                   f"{med*1e3:.0f}ms")
-        if (step + 1) % 10 == 0:
-            checkpoint.save(CKPT_DIR, step + 1,
-                            {"state": state, "cursor": np.int64(step + 1)})
-            print(f"[ckpt] batch {step+1} | "
+        if (step + 1) % CKPT_EVERY == 0:
+            st = svc.stats()
+            checkpoint.save(
+                CKPT_DIR, step + 1,
+                {"state": svc.state, "cursor": np.int64(step + 1),
+                 "edge_capacity": np.int64(svc.cfg.edge_capacity)})
+            print(f"[ckpt] chunk {step+1} | "
                   f"{BATCH/med:.0f} updates/s, {QUERIES/med:.0f} queries/s"
-                  f" | {int(state.n_ccs)} SCCs | overflow="
-                  f"{int(state.overflow)}")
-        if (step + 1) % GC_EVERY == 0:
-            live, tomb = et.fill_stats(state.edges)
-            state = state._replace(
-                edges=et.compact(state.edges, cfg.max_probes))
-            print(f"[gc] compacted edge table ({int(tomb)} tombstones)")
+                  f" | {st['n_ccs']} SCCs | gen={st['gen']}"
+                  f" | capacity={st['edge_capacity']}"
+                  f" (grows={st['grows']}, replayed={st['replayed_ops']},"
+                  f" compactions={st['compactions']})")
 
     total = time.perf_counter() - t_start
     done = args.steps - cursor
-    print(f"\nserved {done} batches in {total:.1f}s | "
+    print(f"\nserved {done} chunks in {total:.1f}s | "
           f"{done*BATCH/total:.0f} updates/s | "
-          f"{done*QUERIES/total:.0f} queries/s | stragglers={stragglers}")
+          f"{done*QUERIES/total:.0f} queries/s | stragglers={stragglers} | "
+          f"compiled shapes={svc.compile_count}")
 
 
 if __name__ == "__main__":

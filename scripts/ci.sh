@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI entry point: lint-light checks, tier-1 tests, stream-driver smoke.
+#
+#   scripts/ci.sh           # the whole gate
+#   scripts/ci.sh --fast    # skip the bench smoke (tests only)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS=cpu
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== compileall (syntax gate) =="
+python -m compileall -q src tests benchmarks examples scripts
+
+echo "== tier-1 tests (pytest.ini defaults to -m 'not slow') =="
+python -m pytest -x -q tests/
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo "== stream service smoke (grow-and-replay + both mix extremes) =="
+    python -m benchmarks.bench_stream --smoke
+fi
+
+echo "CI OK"

@@ -194,17 +194,27 @@ def remove_incident(table: EdgeTable, v_mask: jax.Array) -> Tuple[EdgeTable, jax
         state=jnp.where(kill, TOMB, table.state)), kill
 
 
-def compact(table: EdgeTable, max_probes: int) -> EdgeTable:
-    """GC pass: rebuild the table without tombstones (hazard-pointer analogue).
+def rehash(table: EdgeTable, new_capacity: int, max_probes: int) -> EdgeTable:
+    """Migrate every LIVE entry into a fresh table of ``new_capacity``.
 
-    Rehash every LIVE entry into a fresh table.  Runs in chunks inside jit.
+    The grow half of grow-and-replay: the host detects probe-bound overflow
+    (``GraphState.overflow`` delta), picks a geometrically larger capacity,
+    and calls this inside jit (``new_capacity`` is static, so each target
+    capacity compiles once).  Tombstones are dropped for free, so
+    ``rehash(t, cap(t))`` == :func:`compact`.
     """
-    cap = table.src.shape[0]
+    assert new_capacity & (new_capacity - 1) == 0, (
+        "new_capacity must be a power of two")
     live = table.state == LIVE
-    fresh = empty(cap)
-    # reinsert in slot order; disabled lanes for dead slots.
+    fresh = empty(new_capacity)
     fresh, _ = insert(fresh, table.src, table.dst, max_probes, enable=live)
     return fresh
+
+
+def compact(table: EdgeTable, max_probes: int) -> EdgeTable:
+    """GC pass: rebuild the table without tombstones (hazard-pointer
+    analogue) -- rehash at the current capacity."""
+    return rehash(table, table.src.shape[0], max_probes)
 
 
 def fill_stats(table: EdgeTable):

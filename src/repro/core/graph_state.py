@@ -108,6 +108,15 @@ def from_arrays(cfg: GraphConfig, src, dst, n_active_vertices=None) -> GraphStat
     return state
 
 
+def all_singletons(cfg: GraphConfig) -> GraphState:
+    """Every vertex slot live, each its own SCC, no edges -- the standard
+    boot state for stream drivers (edge ops land immediately)."""
+    nv = cfg.n_vertices
+    return recount_ccs(empty(cfg)._replace(
+        v_alive=jnp.ones((nv,), jnp.bool_),
+        ccid=jnp.arange(nv, dtype=jnp.int32)))
+
+
 def edge_coo(state: GraphState):
     """(src, dst, live_mask) view of the edge table, for segment-op sweeps."""
     t = state.edges

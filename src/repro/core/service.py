@@ -1,0 +1,319 @@
+"""Streaming SCC service: the paper's on-line system around ``apply_batch``.
+
+The paper (arXiv:1804.01276) runs SMSCC as a *service*: a fixed thread pool
+applies an unbounded stream of graph updates while readers issue wait-free
+SameSCC/reachability queries.  ``dynamic.apply_batch`` is our compiled
+analogue of one scheduling quantum; this module supplies the host-side
+machinery that turns it into a long-running service:
+
+grow-and-replay
+    ``apply_batch`` can only report probe-bound overflow (the
+    ``GraphState.overflow`` counter); it cannot grow the hash table because
+    its shapes are static.  The service watches the per-step overflow
+    *delta*, identifies exactly the AddEdge lanes whose key is missing from
+    the post-step table, rehashes the table into a geometrically larger
+    capacity (``edge_table.rehash``, jitted once per target capacity), and
+    replays the failed lanes.  Invariant: **no accepted edge is ever lost**
+    -- after ``apply()`` returns, the table contains every edge a
+    sequential unbounded-table execution would contain, and the reported
+    per-op results match that sequential history.
+
+bucketed scheduling
+    An unbounded stream has unbounded batch lengths; jit would recompile
+    per length.  The scheduler (:class:`repro.launch.stream.BucketedScheduler`)
+    cuts the stream into a small fixed set of padded shapes (NOP padding),
+    so total XLA compilations are bounded by ``len(buckets) x #capacities``
+    regardless of stream length.  ``compile_count`` tracks this bound.
+
+snapshot queries
+    States are immutable pytrees; the service keeps a pointer to the last
+    *committed* state (updated only after a chunk fully applies, including
+    any replay).  Readers therefore always see a consistent generation --
+    the batched analogue of the paper's wait-free reader guarantee -- and
+    every query result is stamped with the generation it was computed at.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import community, dynamic, edge_table as et
+from repro.core import graph_state as gs
+
+_MAX_GROW_ROUNDS = 16
+
+
+class Snapshot(NamedTuple):
+    """A query result stamped with the SCC-partition generation it saw."""
+    value: np.ndarray
+    gen: int
+
+
+@partial(jax.jit, static_argnames=("new_capacity", "max_probes"))
+def _rehash(table: et.EdgeTable, new_capacity: int, max_probes: int):
+    return et.rehash(table, new_capacity, max_probes)
+
+
+@partial(jax.jit, static_argnames=("max_inner",))
+def _reachable_batch(state: gs.GraphState, u, v, max_inner: int):
+    """bool[Q]: u[i] ⇝ v[i] over live edges (u==v and alive counts)."""
+    nv = state.ccid.shape[0]
+    uu = jnp.clip(u, 0, nv - 1)
+    vv = jnp.clip(v, 0, nv - 1)
+    src, dst, live = gs.edge_coo(state)
+    seeds = jnp.zeros((u.shape[0], nv), jnp.bool_).at[
+        jnp.arange(u.shape[0]), uu].set(True)
+    from repro.core import reach
+    reached, _ = reach.multi_forward_reach(src, dst, live, seeds,
+                                           state.v_alive, max_inner)
+    ok = state.v_alive[uu] & state.v_alive[vv]
+    return ok & reached[jnp.arange(u.shape[0]), vv]
+
+
+@jax.jit
+def _members(state: gs.GraphState, u):
+    """bool[NV]: vertices in u's SCC (empty mask when u is dead)."""
+    nv = state.ccid.shape[0]
+    uu = jnp.clip(u, 0, nv - 1)
+    lab = jnp.where(state.v_alive[uu], state.ccid[uu], nv)
+    return state.v_alive & (state.ccid == lab)
+
+
+class SCCService:
+    """Host-side streaming wrapper: grow-and-replay + bucketed scheduling +
+    generation-stamped snapshot queries over ``dynamic.apply_batch``."""
+
+    def __init__(self, cfg: gs.GraphConfig,
+                 buckets: Sequence[int] = (64, 256, 1024),
+                 state: gs.GraphState | None = None,
+                 grow_factor: int = 2,
+                 max_edge_capacity: int | None = None,
+                 compact_tomb_frac: float = 0.25):
+        from repro.launch.stream import BucketedScheduler
+        self._cfg = cfg
+        self._state = gs.empty(cfg) if state is None else state
+        self._sched = BucketedScheduler(buckets)
+        self._grow_factor = grow_factor
+        self._max_edge_capacity = max_edge_capacity
+        self._compact_tomb_frac = compact_tomb_frac
+        self._committed = self._state
+        # telemetry
+        self._compiled: set = set()
+        self.grow_count = 0
+        self.replayed_ops = 0
+        self.compaction_count = 0
+
+    # ------------------------------------------------------------ state ---
+
+    @property
+    def cfg(self) -> gs.GraphConfig:
+        return self._cfg
+
+    @property
+    def state(self) -> gs.GraphState:
+        """Latest committed state (safe to checkpoint / query)."""
+        return self._committed
+
+    @property
+    def gen(self) -> int:
+        return int(self._committed.gen)
+
+    @property
+    def compile_count(self) -> int:
+        """Distinct (batch-shape, graph-config) pairs stepped so far -- an
+        upper bound on *update-step* compiles.  Table rehashes (one per
+        target capacity) and query batches (one per query shape) have
+        their own, separately-cached jit entries not counted here."""
+        return len(self._compiled)
+
+    # ---------------------------------------------------------- updates ---
+
+    def apply(self, kind, u, v) -> np.ndarray:
+        """Apply a variable-length op stream chunk; returns ok: bool[N].
+
+        The chunk is cut into padded bucket batches; each batch goes
+        through grow-and-replay so no AddEdge is ever dropped.  Results
+        match the documented per-batch linearization applied bucket by
+        bucket.
+        """
+        kind = np.asarray(kind, np.int32)
+        u = np.asarray(u, np.int32)
+        v = np.asarray(v, np.int32)
+        ok = np.zeros(kind.shape[0], bool)
+        entry_state, entry_cfg = self._state, self._cfg
+        entry_stats = (set(self._compiled), self.grow_count,
+                       self.replayed_ops, self.compaction_count)
+        try:
+            for sl, ops in self._sched.chunks(kind, u, v):
+                n_real = sl.stop - sl.start
+                ok[sl] = self._apply_padded(ops)[:n_real]
+            self._maybe_compact()
+        except Exception:
+            # all-or-nothing chunk: never let a half-applied batch, a cfg
+            # that no longer matches the table, or telemetry for aborted
+            # work leak into the next apply()'s commit
+            self._state, self._cfg = entry_state, entry_cfg
+            (self._compiled, self.grow_count, self.replayed_ops,
+             self.compaction_count) = entry_stats
+            raise
+        self._committed = self._state
+        return ok
+
+    def _apply_padded(self, ops: dynamic.OpBatch, depth: int = 0
+                      ) -> np.ndarray:
+        if depth > _MAX_GROW_ROUNDS:
+            raise RuntimeError("grow-and-replay did not converge; "
+                               "max_edge_capacity too small for workload?")
+        self._compiled.add((int(ops.kind.shape[0]), self._cfg))
+        prev_ovf = int(self._state.overflow)
+        self._state, ok = dynamic.apply_batch(self._state, ops, self._cfg)
+        ok = np.asarray(ok).copy()
+        if int(self._state.overflow) == prev_ovf:
+            return ok
+        failed = self._failed_add_lanes(ops, ok)
+        if not failed.any():  # overflow already resolved by a later lane
+            return ok
+        self.grow()
+        idx = np.nonzero(failed)[0]
+        self.replayed_ops += len(idx)
+        for sl, sub in self._sched.chunks(
+                np.asarray(ops.kind)[idx], np.asarray(ops.u)[idx],
+                np.asarray(ops.v)[idx]):
+            n_real = sl.stop - sl.start
+            sub_ok = self._apply_padded(sub, depth + 1)[:n_real]
+            ok[idx[sl]] = sub_ok
+        return ok
+
+    def _failed_add_lanes(self, ops: dynamic.OpBatch, ok: np.ndarray
+                          ) -> np.ndarray:
+        """AddEdge lanes the table dropped on probe-bound overflow.
+
+        A lane failed iff it is an in-range AddEdge, reported False, both
+        endpoints are alive *after* the step (RemoveVertex linearizes
+        first, so dead-endpoint lanes were never enabled), and its key is
+        absent from the post-step table (present keys mean the False was a
+        legitimate duplicate/already-present result).
+        """
+        kind = np.asarray(ops.kind)
+        u = np.asarray(ops.u)
+        v = np.asarray(ops.v)
+        nv = self._cfg.n_vertices
+        in_range = (u >= 0) & (u < nv) & (v >= 0) & (v < nv)
+        cand = (kind == dynamic.ADD_EDGE) & in_range & ~ok
+        if not cand.any():
+            return cand
+        alive = np.asarray(self._state.v_alive)
+        cand &= alive[np.clip(u, 0, nv - 1)] & alive[np.clip(v, 0, nv - 1)]
+        if not cand.any():
+            return cand
+        found, _ = et.lookup(self._state.edges, ops.u, ops.v,
+                             self._cfg.max_probes)
+        return cand & ~np.asarray(found)
+
+    def grow(self, new_capacity: int | None = None):
+        """Rehash the edge table into a larger power-of-two capacity and
+        re-point ``cfg`` (subsequent steps re-jit under the new config)."""
+        cap = new_capacity or self._cfg.edge_capacity * self._grow_factor
+        table, cap = self._rehash_preserving(cap)
+        self._state = self._state._replace(edges=table)
+        self._cfg = dataclasses.replace(self._cfg, edge_capacity=cap)
+        self.grow_count += 1
+
+    def _rehash_preserving(self, cap: int):
+        """Rehash into ``cap``, doubling further until every live edge
+        survives migration.
+
+        ``insert`` can itself exhaust the probe bound at the *target*
+        capacity (different keys may collide there that did not collide at
+        the source size), and it reports that only through its discarded
+        ``placed`` mask -- so we verify by live count and retry bigger.
+        """
+        live_before, _ = et.fill_stats(self._state.edges)
+        for _ in range(_MAX_GROW_ROUNDS):
+            if self._max_edge_capacity and cap > self._max_edge_capacity:
+                raise RuntimeError(
+                    f"edge table would exceed max_edge_capacity "
+                    f"({cap} > {self._max_edge_capacity})")
+            table = _rehash(self._state.edges, cap, self._cfg.max_probes)
+            live_after, _ = et.fill_stats(table)
+            if int(live_after) == int(live_before):
+                return table, cap
+            cap *= self._grow_factor
+        raise RuntimeError("table migration kept losing edges; "
+                           "max_probes too small for workload?")
+
+    def _maybe_compact(self):
+        _, tomb = et.fill_stats(self._state.edges)
+        if int(tomb) > self._compact_tomb_frac * self._cfg.edge_capacity:
+            # rehash at the current capacity == compact, but verified: a
+            # compaction that would drop an edge escalates to a grow.
+            table, cap = self._rehash_preserving(self._cfg.edge_capacity)
+            self._state = self._state._replace(edges=table)
+            self._cfg = dataclasses.replace(self._cfg, edge_capacity=cap)
+            self.compaction_count += 1
+
+    # ---------------------------------------------------------- queries ---
+    # All queries read the last *committed* state: a consistent snapshot
+    # whose generation is returned alongside the value (the linearization
+    # point of the paper's wait-free readers).
+
+    def _in_range(self, ids) -> np.ndarray:
+        ids = np.asarray(ids)
+        return (ids >= 0) & (ids < self._cfg.n_vertices)
+
+    def same_scc(self, u, v) -> Snapshot:
+        """Batched SameSCC(u, v) (paper checkSCC, Alg. 23): absent or
+        out-of-range endpoints answer False, never alias a real vertex."""
+        st = self._committed
+        res = community.check_scc(st, jnp.asarray(u, jnp.int32),
+                                  jnp.asarray(v, jnp.int32))
+        res = np.asarray(res) & self._in_range(u) & self._in_range(v)
+        return Snapshot(res, int(st.gen))
+
+    def reachable(self, u, v) -> Snapshot:
+        """Batched reachability u[i] ⇝ v[i] on the committed snapshot."""
+        st = self._committed
+        res = _reachable_batch(st, jnp.asarray(u, jnp.int32),
+                               jnp.asarray(v, jnp.int32),
+                               self._cfg.max_inner)
+        res = np.asarray(res) & self._in_range(u) & self._in_range(v)
+        return Snapshot(res, int(st.gen))
+
+    def scc_members(self, u) -> Snapshot:
+        """bool[NV] membership mask of u's SCC on the committed snapshot."""
+        st = self._committed
+        if not self._in_range(u).all():
+            return Snapshot(np.zeros(self._cfg.n_vertices, bool),
+                            int(st.gen))
+        res = _members(st, jnp.asarray(u, jnp.int32))
+        return Snapshot(np.asarray(res), int(st.gen))
+
+    # ------------------------------------------------------------- misc ---
+
+    def edge_set(self) -> set:
+        """Host copy of the live edge set (test/debug helper)."""
+        t = self._committed.edges
+        live = np.asarray(t.state) == int(et.LIVE)
+        src = np.asarray(t.src)[live]
+        dst = np.asarray(t.dst)[live]
+        return set(zip(src.tolist(), dst.tolist()))
+
+    def stats(self) -> dict:
+        live, tomb = et.fill_stats(self._committed.edges)
+        return {
+            "gen": self.gen,
+            "n_ccs": int(self._committed.n_ccs),
+            "live_edges": int(live),
+            "tombstones": int(tomb),
+            "edge_capacity": self._cfg.edge_capacity,
+            "overflow_total": int(self._committed.overflow),
+            "grows": self.grow_count,
+            "replayed_ops": self.replayed_ops,
+            "compactions": self.compaction_count,
+            "compile_count": self.compile_count,
+        }

@@ -1,7 +1,9 @@
-"""Serving driver: batched LM decode or recsys scoring on the host mesh.
+"""Serving driver: batched LM decode, recsys scoring, or the paper's
+streaming SCC service on the host mesh.
 
     python -m repro.launch.serve --arch gemma3-12b --smoke
     python -m repro.launch.serve --arch mind --smoke
+    python -m repro.launch.serve --arch smscc --steps 64
 """
 from __future__ import annotations
 
@@ -65,6 +67,24 @@ def serve_mind(mod, steps: int):
           f"{dt:.2f}s ({steps*b*c/dt:.0f} scores/s)")
 
 
+def serve_smscc(mod, steps: int, nv: int = 2048, chunk: int = 256):
+    """The paper's on-line mode: sustained update stream + wait-free query
+    batches over the committed snapshot, via the SCC service layer."""
+    from repro.core import graph_state as gs
+    from repro.core.service import SCCService
+    from repro.launch import stream
+
+    cfg = mod.config(n_vertices=nv, edge_capacity=max(1024, nv),
+                     max_probes=64, max_outer=64, max_inner=128)
+    # boot with every vertex slot live (singleton SCCs) so the update mix
+    # lands immediately instead of bouncing off dead endpoints
+    svc = SCCService(cfg, buckets=(64, chunk),
+                     state=gs.all_singletons(cfg))
+    rep = stream.run_stream(svc, n_ops=steps * chunk, add_frac=0.7,
+                            query_frac=0.5, chunk=chunk, n_queries=1024)
+    print(rep.pretty())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-12b")
@@ -75,6 +95,8 @@ def main():
         serve_lm(mod, args.steps)
     elif mod.FAMILY == "recsys":
         serve_mind(mod, args.steps)
+    elif mod.FAMILY == "smscc":
+        serve_smscc(mod, args.steps)
     else:
         raise SystemExit(f"no serve path for family {mod.FAMILY}")
 

@@ -1,0 +1,121 @@
+"""Bucketed stream scheduling for the SCC service.
+
+An on-line service sees arbitrary-length op chunks; under jit every new
+batch length is a fresh XLA compilation.  The scheduler therefore admits
+only a small registry of static batch shapes (the ``prefill_bs{N}``
+bucket-registry pattern from production LLM serving): a chunk of length N
+is cut greedily into the largest buckets that fit, and the tail is padded
+with NOP lanes up to the smallest bucket that holds it.  Total
+compilations are bounded by ``len(buckets)`` per graph config, independent
+of stream length.
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterator, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import dynamic
+
+__all__ = ["BucketedScheduler", "run_stream", "StreamReport"]
+
+
+class BucketedScheduler:
+    """Cuts (kind, u, v) arrays into NOP-padded static-shape OpBatches."""
+
+    def __init__(self, buckets: Sequence[int] = (64, 256, 1024)):
+        assert buckets, "need at least one bucket size"
+        self.buckets: Tuple[int, ...] = tuple(sorted(set(int(b)
+                                                         for b in buckets)))
+        assert all(b > 0 for b in self.buckets)
+
+    def plan(self, n: int) -> List[Tuple[slice, int]]:
+        """[(slice into the chunk, bucket size)] covering [0, n)."""
+        out: List[Tuple[slice, int]] = []
+        pos = 0
+        while pos < n:
+            rest = n - pos
+            fits = [b for b in self.buckets if b <= rest]
+            # largest full bucket, else smallest bucket that covers the tail
+            b = fits[-1] if fits else min(
+                b for b in self.buckets if b >= rest)
+            take = min(b, rest)
+            out.append((slice(pos, pos + take), b))
+            pos += take
+        return out
+
+    def chunks(self, kind, u, v) -> Iterator[
+            Tuple[slice, dynamic.OpBatch]]:
+        """Yield (slice, padded OpBatch); lanes past the slice are NOPs."""
+        kind = np.asarray(kind, np.int32)
+        u = np.asarray(u, np.int32)
+        v = np.asarray(v, np.int32)
+        for sl, b in self.plan(kind.shape[0]):
+            pk = np.full(b, dynamic.NOP, np.int32)
+            pu = np.zeros(b, np.int32)
+            pv = np.zeros(b, np.int32)
+            n = sl.stop - sl.start
+            pk[:n] = kind[sl]
+            pu[:n] = u[sl]
+            pv[:n] = v[sl]
+            yield sl, dynamic.make_ops(pk, pu, pv)
+
+
+class StreamReport(dict):
+    """Flat metrics dict with a pretty printer."""
+
+    def pretty(self) -> str:
+        return " | ".join(f"{k}={v}" for k, v in self.items())
+
+
+def run_stream(service, n_ops: int, *, add_frac: float = 0.6,
+               query_frac: float = 0.0, chunk: int = 512,
+               n_queries: int = 256, include_vertex_ops: bool = True,
+               seed: int = 0) -> StreamReport:
+    """Drive ``service`` with a synthetic mixed workload (paper Fig 4/5).
+
+    ``query_frac`` interleaves SameSCC/reachability query batches between
+    update chunks; throughput is reported separately for updates and
+    queries.  Deterministic in ``seed``.
+    """
+    from repro.data import pipeline
+
+    nv = service.cfg.n_vertices
+    rng = np.random.default_rng(seed)
+    applied = 0
+    queries = 0
+    accepted = 0
+    t_update = 0.0
+    t_query = 0.0
+    step = 0
+    while applied < n_ops:
+        n = min(chunk, n_ops - applied)
+        ops = pipeline.op_stream(nv, n, step=step, add_frac=add_frac,
+                                 seed=seed,
+                                 include_vertex_ops=include_vertex_ops)
+        t0 = time.perf_counter()
+        ok = service.apply(np.asarray(ops.kind), np.asarray(ops.u),
+                           np.asarray(ops.v))
+        t_update += time.perf_counter() - t0
+        accepted += int(ok.sum())
+        applied += n
+        step += 1
+        if query_frac > 0 and rng.random() < query_frac:
+            qu = rng.integers(0, nv, n_queries)
+            qv = rng.integers(0, nv, n_queries)
+            n_reach = min(32, n_queries)  # reach sweeps cost O(E) per round
+            t0 = time.perf_counter()
+            same = service.same_scc(qu, qv)
+            reach_ = service.reachable(qu[:n_reach], qv[:n_reach])
+            t_query += time.perf_counter() - t0
+            assert same.gen == reach_.gen, "snapshot generation drifted"
+            queries += n_queries + n_reach
+    rep = StreamReport(
+        ops=applied, accepted=accepted, queries=queries,
+        update_s=round(t_update, 4), query_s=round(t_query, 4),
+        ops_per_s=int(applied / t_update) if t_update else 0,
+        queries_per_s=int(queries / t_query) if t_query else 0,
+    )
+    rep.update(service.stats())
+    return rep

@@ -1,0 +1,159 @@
+"""Minimal, dependency-free stand-in for the `hypothesis` API we use.
+
+The tier-1 suite must collect and run in environments without hypothesis
+(the container does not ship it).  Test modules import via:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+Semantics: `@given(...)` runs the test body `max_examples` times with
+inputs drawn from seeded `random.Random` streams -- deterministic per test
+(seed derives from the test's qualified name), no shrinking, no database.
+`@settings(max_examples=N, deadline=...)` adjusts the example count and is
+otherwise a no-op.  Only the strategy combinators used by this repo are
+implemented: integers, booleans, lists, tuples, sets, sampled_from, just,
+composite.
+
+Set HC_MAX_EXAMPLES=<n> to cap the example count globally (CI knob).
+"""
+from __future__ import annotations
+
+import os
+import random
+import types
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A strategy is just a draw function: Random -> value."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+    def map(self, f):
+        return _Strategy(lambda rnd: f(self._draw(rnd)))
+
+    def filter(self, pred, max_tries: int = 100):
+        def draw(rnd):
+            for _ in range(max_tries):
+                x = self._draw(rnd)
+                if pred(x):
+                    return x
+            raise ValueError("filter predicate too strict")
+        return _Strategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rnd: bool(rnd.getrandbits(1)))
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rnd: value)
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rnd: seq[rnd.randrange(len(seq))])
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10
+          ) -> _Strategy:
+    def draw(rnd):
+        n = rnd.randint(min_size, max_size)
+        return [elements.example(rnd) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*elements: _Strategy) -> _Strategy:
+    return _Strategy(lambda rnd: tuple(e.example(rnd) for e in elements))
+
+
+def sets(elements: _Strategy, min_size: int = 0, max_size: int = 10
+         ) -> _Strategy:
+    def draw(rnd):
+        n = rnd.randint(min_size, max_size)
+        out = set()
+        # bounded attempts so tight element domains cannot loop forever
+        for _ in range(max(50, 20 * (n + 1))):
+            if len(out) >= n:
+                break
+            out.add(elements.example(rnd))
+        if len(out) < min_size:
+            raise ValueError("set strategy: element domain too small")
+        return out
+    return _Strategy(draw)
+
+
+def composite(fn):
+    """@st.composite: fn(draw, *args) -> value, called with a draw handle."""
+    def make(*args, **kwargs):
+        def draw_value(rnd):
+            return fn(lambda strat: strat.example(rnd), *args, **kwargs)
+        return _Strategy(draw_value)
+    return make
+
+
+def _example_cap(n: int) -> int:
+    cap = os.environ.get("HC_MAX_EXAMPLES")
+    return min(n, int(cap)) if cap else n
+
+
+def given(*strategies: _Strategy):
+    def decorate(fn):
+        def runner():
+            n = _example_cap(getattr(runner, "_hc_max_examples",
+                                     _DEFAULT_MAX_EXAMPLES))
+            seed = zlib.adler32(fn.__qualname__.encode())
+            for i in range(n):
+                rnd = random.Random(seed * 1_000_003 + i)
+                args = [s.example(rnd) for s in strategies]
+                try:
+                    fn(*args)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i} for {fn.__name__}: "
+                        f"args={args!r}") from e
+        # NOTE: deliberately no functools.wraps -- pytest follows
+        # __wrapped__ for signatures and would demand fixtures named
+        # after the strategy parameters.
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.__qualname__ = fn.__qualname__
+        runner._hc_given = True
+        if hasattr(fn, "_hc_max_examples"):  # @settings applied under @given
+            runner._hc_max_examples = fn._hc_max_examples
+        return runner
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def decorate(fn):
+        if getattr(fn, "_hc_given", False):
+            fn._hc_max_examples = max_examples
+            return fn
+        # settings applied under @given: stash the count on the raw
+        # function; given() picks it up via attribute copy below.
+        fn._hc_max_examples = max_examples
+        return fn
+    return decorate
+
+
+# `strategies` submodule-style alias so `from _hypothesis_compat import
+# strategies as st` mirrors the hypothesis import shape.
+strategies = types.SimpleNamespace(
+    integers=integers, booleans=booleans, lists=lists, tuples=tuples,
+    sets=sets, sampled_from=sampled_from, just=just, composite=composite,
+)

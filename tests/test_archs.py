@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # heavyweight model/launch suite: full run only
+
 from repro import configs
 from repro.data import pipeline
 

@@ -1,13 +1,24 @@
 """Edge-table (batched open-addressing hash set) vs a python-set oracle."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 env has no hypothesis: seeded shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import edge_table as et
 
 CAP = 64
 PROBES = CAP  # full-table probe bound: no spurious overflow in tests
+
+# jitted wrappers: the oracle test applies ~1.5k single-op batches; eager
+# dispatch of the probe loops dominates wall time, the jit cache makes the
+# whole run a handful of compiles.
+_insert = jax.jit(et.insert, static_argnames=("max_probes",))
+_remove = jax.jit(et.remove, static_argnames=("max_probes",))
+_lookup = jax.jit(et.lookup, static_argnames=("max_probes",))
 
 
 def to_np(x):
@@ -62,11 +73,11 @@ def test_against_set_oracle(ops):
         uu = jnp.array([u], jnp.int32)
         vv = jnp.array([v], jnp.int32)
         if is_ins:
-            t, okj = et.insert(t, uu, vv, PROBES)
+            t, okj = _insert(t, uu, vv, max_probes=PROBES)
             ok = (u, v) not in oracle
             oracle.add((u, v))
         else:
-            t, okj = et.remove(t, uu, vv, PROBES)
+            t, okj = _remove(t, uu, vv, max_probes=PROBES)
             ok = (u, v) in oracle
             oracle.discard((u, v))
         assert bool(okj[0]) == ok
@@ -75,7 +86,7 @@ def test_against_set_oracle(ops):
                                       for y in range(16)]], jnp.int32)
     all_v = jnp.array([b for _, b in [(x, y) for x in range(16)
                                       for y in range(16)]], jnp.int32)
-    found, _ = et.lookup(t, all_u, all_v, PROBES)
+    found, _ = _lookup(t, all_u, all_v, max_probes=PROBES)
     got = {(int(a), int(b)) for a, b, f in
            zip(to_np(all_u), to_np(all_v), to_np(found)) if f}
     assert got == oracle

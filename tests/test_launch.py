@@ -9,6 +9,7 @@ import textwrap
 import jax
 import pytest
 
+
 from repro import configs
 from repro.launch import partition
 from jax.sharding import PartitionSpec as P
@@ -74,7 +75,10 @@ def test_production_mesh_and_lowering_subprocess():
     r = subprocess.run([sys.executable, "-c", PROD_MESH_TEST],
                        capture_output=True, text=True, timeout=540,
                        env={"PYTHONPATH": "src",
-                            "PATH": "/usr/bin:/bin"},
+                            "PATH": "/usr/bin:/bin",
+                            # skip accelerator-plugin probing: backend
+                            # discovery hangs ~7 min in a stripped env
+                            "JAX_PLATFORMS": "cpu"},
                        cwd="/root/repo")
     assert "MESH_OK" in r.stdout, r.stderr[-2000:]
 
@@ -136,6 +140,7 @@ def test_elastic_restore_different_mesh(tmp_path):
     r = subprocess.run(
         [sys.executable, "-c", ELASTIC_TEST, str(tmp_path)],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},
         cwd="/root/repo")
     assert "ELASTIC_OK" in r.stdout, r.stderr[-1500:]

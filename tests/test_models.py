@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # heavyweight model/launch suite: full run only
+
 from repro.graph import batching
 from repro.models import moe as moe_lib
 from repro.models import transformer as tf

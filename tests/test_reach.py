@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 env has no hypothesis: seeded shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import reach
 

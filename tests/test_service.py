@@ -1,0 +1,354 @@
+"""Streaming SCC service: grow-and-replay, bucketed scheduling, snapshots.
+
+Differential tests drive :class:`repro.core.service.SCCService` past its
+edge-table capacity and check labels, live edge set, and per-op results
+against the sequential python oracle after every chunk.  The per-op
+comparison replays the oracle in the documented per-bucket linearization
+(REM_VERTEX -> REM_EDGE -> ADD_VERTEX -> ADD_EDGE, lane order in a phase)
+-- the same contract `test_dynamic.test_batch_atomicity` pins for one
+batch, extended across the scheduler's bucket cuts.
+"""
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import dynamic, edge_table as et, graph_state as gs
+from repro.core.service import SCCService
+from repro.launch.stream import BucketedScheduler
+from oracle import SeqSCC
+
+NV = 24
+PHASE = {dynamic.REM_VERTEX: 0, dynamic.REM_EDGE: 1,
+         dynamic.ADD_VERTEX: 2, dynamic.ADD_EDGE: 3}
+
+
+def tiny_cfg(edge_capacity=32, max_probes=4, nv=NV):
+    return gs.GraphConfig(n_vertices=nv, edge_capacity=edge_capacity,
+                          max_probes=max_probes, max_outer=nv + 1,
+                          max_inner=nv + 2)
+
+
+def boot(svc: SCCService, oracle: SeqSCC, n=NV):
+    ok = svc.apply([dynamic.ADD_VERTEX] * n, list(range(n)), [0] * n)
+    assert ok.all()
+    for i in range(n):
+        assert oracle.add_vertex(i)
+
+
+def oracle_replay(oracle: SeqSCC, sched: BucketedScheduler, kind, u, v):
+    """Sequential oracle results under the per-bucket phase linearization."""
+    want = np.zeros(len(kind), bool)
+    for sl, _ in sched.plan(len(kind)):
+        order = sorted(range(sl.start, sl.stop),
+                       key=lambda i: (PHASE[int(kind[i])], i))
+        for i in order:
+            k, uu, vv = int(kind[i]), int(u[i]), int(v[i])
+            if k == dynamic.ADD_EDGE:
+                want[i] = oracle.add_edge(uu, vv)
+            elif k == dynamic.REM_EDGE:
+                want[i] = oracle.remove_edge(uu, vv)
+            elif k == dynamic.ADD_VERTEX:
+                want[i] = oracle.add_vertex(uu)
+            else:
+                want[i] = oracle.remove_vertex(uu)
+    return want
+
+
+def check_against_oracle(svc, oracle, kind, u, v):
+    ok = svc.apply(kind, u, v)
+    want = oracle_replay(oracle, svc._sched, kind, u, v)
+    assert ok.tolist() == want.tolist()
+    assert np.asarray(svc.state.ccid).tolist() == oracle.ccid()
+    assert svc.edge_set() == oracle.edges
+
+
+def collide(cfg, base_u, base_v, avoid=()):
+    """A key hashing to the same slot as (base_u, base_v) (max_probes=1
+    collision constructor)."""
+    cap = cfg.edge_capacity
+    target = int(et._hash(np.int32(base_u), np.int32(base_v), cap))
+    for uu in range(cfg.n_vertices):
+        for vv in range(cfg.n_vertices):
+            if (uu, vv) in avoid or (uu, vv) == (base_u, base_v):
+                continue
+            if int(et._hash(np.int32(uu), np.int32(vv), cap)) == target:
+                return uu, vv
+    raise AssertionError("no colliding key in the id range")
+
+
+# ------------------------------------------------------------ rehash ------
+
+
+def test_rehash_preserves_live_set_and_drops_tombs():
+    rng = np.random.default_rng(3)
+    table = et.empty(256)
+    u = rng.integers(0, 64, 120).astype(np.int32)
+    v = rng.integers(0, 64, 120).astype(np.int32)
+    table, _ = et.insert(table, u, v, 32)
+    table, _ = et.remove(table, u[:40], v[:40], 32)
+    live_before = {(int(s), int(d)) for s, d, st in
+                   zip(np.asarray(table.src), np.asarray(table.dst),
+                       np.asarray(table.state)) if st == int(et.LIVE)}
+    bigger = et.rehash(table, 512, 32)
+    assert bigger.src.shape[0] == 512
+    live_after = {(int(s), int(d)) for s, d, st in
+                  zip(np.asarray(bigger.src), np.asarray(bigger.dst),
+                      np.asarray(bigger.state)) if st == int(et.LIVE)}
+    assert live_after == live_before
+    assert int(np.sum(np.asarray(bigger.state) == int(et.TOMB))) == 0
+    found, _ = et.lookup(bigger, u, v, 32)
+    live, _ = et.fill_stats(bigger)
+    assert int(live) == len(live_before)
+    # every surviving key is findable at the new capacity (lanes may repeat
+    # keys, so compare per-lane membership, not counts)
+    assert np.asarray(found).tolist() == [
+        (int(a), int(b)) in live_before for a, b in zip(u, v)]
+
+
+# -------------------------------------------------- grow-and-replay -------
+
+
+def test_grow_and_replay_differential():
+    """Randomized stream past table capacity: labels + edge set + per-op
+    results must match the oracle after every chunk; zero lost edges."""
+    svc = SCCService(tiny_cfg(), buckets=(8, 16))
+    oracle = SeqSCC(NV)
+    boot(svc, oracle)
+    rng = np.random.default_rng(7)
+    for step in range(18):
+        n = int(rng.integers(1, 20))
+        kind = rng.choice([dynamic.ADD_EDGE] * 3 + [dynamic.REM_EDGE], n)
+        u = rng.integers(0, NV, n)
+        v = rng.integers(0, NV, n)
+        check_against_oracle(svc, oracle, kind, u, v)
+    # the point of the test: the initial 32-slot table must have overflowed
+    assert svc.grow_count > 0 and svc.replayed_ops > 0
+    assert int(svc.state.overflow) > 0  # counter kept its audit trail
+    assert svc.cfg.edge_capacity > 32
+    # no lost edges: every oracle edge is in the table
+    assert svc.edge_set() == oracle.edges
+
+
+def test_grow_and_replay_min_probes_migration():
+    """max_probes=1 stresses the migration path itself: keys that fit at
+    one capacity may collide at the rehash target, so grow() must keep
+    escalating until every live edge survives -- no silent drops."""
+    svc = SCCService(tiny_cfg(edge_capacity=8, max_probes=1), buckets=(8,))
+    oracle = SeqSCC(NV)
+    boot(svc, oracle)
+    rng = np.random.default_rng(13)
+    for step in range(8):
+        n = int(rng.integers(1, 9))
+        kind = rng.choice([dynamic.ADD_EDGE] * 3 + [dynamic.REM_EDGE], n)
+        u = rng.integers(0, NV, n)
+        v = rng.integers(0, NV, n)
+        check_against_oracle(svc, oracle, kind, u, v)
+    assert svc.grow_count > 0
+    assert svc.edge_set() == oracle.edges
+
+
+def test_duplicate_insert_overflow():
+    """Two lanes insert the same overflowing key: after grow-and-replay the
+    first lane wins, the duplicate still reports False, one copy stored."""
+    cfg = tiny_cfg(edge_capacity=32, max_probes=1)
+    svc = SCCService(cfg, buckets=(8,))
+    oracle = SeqSCC(NV)
+    boot(svc, oracle)
+    ok = svc.apply([dynamic.ADD_EDGE], [0], [1])
+    assert ok.all() and oracle.add_edge(0, 1)
+    cu, cv = collide(cfg, 0, 1)
+    ok = svc.apply([dynamic.ADD_EDGE] * 2, [cu, cu], [cv, cv])
+    assert oracle.add_edge(cu, cv) and not oracle.add_edge(cu, cv)
+    assert ok.tolist() == [True, False]
+    assert svc.grow_count >= 1
+    assert svc.edge_set() == oracle.edges
+    assert np.asarray(svc.state.ccid).tolist() == oracle.ccid()
+
+
+def test_remove_then_readd_overflow():
+    """Key removed (tombstoned), slot reused by a colliding key, then the
+    original key re-added: probe bound overflows, grow-and-replay restores
+    both keys exactly once."""
+    cfg = tiny_cfg(edge_capacity=32, max_probes=1)
+    svc = SCCService(cfg, buckets=(8,))
+    oracle = SeqSCC(NV)
+    boot(svc, oracle)
+    assert svc.apply([dynamic.ADD_EDGE], [0], [1]).all()
+    oracle.add_edge(0, 1)
+    assert svc.apply([dynamic.REM_EDGE], [0], [1]).all()
+    oracle.remove_edge(0, 1)
+    cu, cv = collide(cfg, 0, 1)
+    assert svc.apply([dynamic.ADD_EDGE], [cu], [cv]).all()  # reuses tomb
+    oracle.add_edge(cu, cv)
+    assert svc.grow_count == 0  # tombstone reuse: no growth yet
+    ok = svc.apply([dynamic.ADD_EDGE], [0], [1])  # now the slot is taken
+    oracle.add_edge(0, 1)
+    assert ok.all()
+    assert svc.grow_count >= 1 and svc.replayed_ops >= 1
+    assert svc.edge_set() == oracle.edges
+    assert np.asarray(svc.state.ccid).tolist() == oracle.ccid()
+
+
+# ------------------------------------------------ scheduler equivalence ---
+
+
+MIXES = {
+    "add_heavy": dict(p_add=0.85, p_vertex=0.0),
+    "remove_heavy": dict(p_add=0.3, p_vertex=0.0),
+    "vertex_churn": dict(p_add=0.6, p_vertex=0.45),
+}
+
+
+@pytest.mark.parametrize("mix", sorted(MIXES))
+def test_scheduler_equivalence(mix):
+    """A stream chunked through bucketed padded batches == one sequential
+    oracle replay: same per-op results, same final SCC partition."""
+    p = MIXES[mix]
+    svc = SCCService(tiny_cfg(edge_capacity=256, max_probes=16),
+                     buckets=(8, 32))
+    oracle = SeqSCC(NV)
+    boot(svc, oracle)
+    rng = np.random.default_rng(zlib.adler32(mix.encode()))
+    for step in range(10):
+        n = int(rng.integers(1, 40))
+        is_add = rng.random(n) < p["p_add"]
+        is_vertex = rng.random(n) < p["p_vertex"]
+        kind = np.where(is_add,
+                        np.where(is_vertex, dynamic.ADD_VERTEX,
+                                 dynamic.ADD_EDGE),
+                        np.where(is_vertex, dynamic.REM_VERTEX,
+                                 dynamic.REM_EDGE))
+        u = rng.integers(0, NV, n)
+        v = rng.integers(0, NV, n)
+        check_against_oracle(svc, oracle, kind, u, v)
+    assert int(svc.state.n_ccs) == len(
+        {c for c in oracle.ccid() if c < NV})
+
+
+def test_bucket_plan_covers_and_bounds_shapes():
+    sched = BucketedScheduler((8, 32, 128))
+    for n in (1, 7, 8, 9, 40, 128, 129, 300, 1000):
+        plan = sched.plan(n)
+        # contiguous cover of [0, n)
+        assert plan[0][0].start == 0 and plan[-1][0].stop == n
+        for (a, _), (b, _) in zip(plan, plan[1:]):
+            assert a.stop == b.start
+        # only registered shapes; padding only in the final bucket
+        for sl, b in plan[:-1]:
+            assert b in sched.buckets and sl.stop - sl.start == b
+        sl, b = plan[-1]
+        assert b in sched.buckets and sl.stop - sl.start <= b
+
+
+def test_compile_count_bounded_by_buckets():
+    """Arbitrary chunk lengths never add step shapes beyond the bucket
+    registry (per graph config) -- the no-per-chunk-recompile guarantee."""
+    svc = SCCService(tiny_cfg(edge_capacity=256, max_probes=16),
+                     buckets=(8, 16))
+    oracle = SeqSCC(NV)
+    boot(svc, oracle)
+    rng = np.random.default_rng(11)
+    for n in (1, 3, 8, 11, 16, 23, 31, 5, 17, 29):
+        kind = rng.choice([dynamic.ADD_EDGE] * 2 + [dynamic.REM_EDGE],
+                          int(n))
+        u = rng.integers(0, NV, int(n))
+        v = rng.integers(0, NV, int(n))
+        check_against_oracle(svc, oracle, kind, u, v)
+    assert svc.grow_count == 0  # capacity was generous
+    assert svc.compile_count <= 2  # == len(buckets)
+
+
+# --------------------------------------------------------- snapshots ------
+
+
+def test_snapshot_queries_generation_stamped():
+    svc = SCCService(tiny_cfg(edge_capacity=256, max_probes=16),
+                     buckets=(8,))
+    oracle = SeqSCC(NV)
+    boot(svc, oracle)
+    edges = [(0, 1), (1, 2), (2, 0), (3, 4), (4, 3), (2, 3)]
+    ok = svc.apply([dynamic.ADD_EDGE] * len(edges),
+                   [e[0] for e in edges], [e[1] for e in edges])
+    assert ok.all()
+
+    same = svc.same_scc([0, 0, 3, 0], [2, 3, 4, 23])
+    assert same.value.tolist() == [True, False, True, False]
+
+    reach = svc.reachable([0, 4, 0, 5], [4, 0, 0, 0])
+    assert reach.value.tolist() == [True, False, True, False]
+
+    members = svc.scc_members(1)
+    want = np.zeros(NV, bool)
+    want[[0, 1, 2]] = True
+    assert members.value.tolist() == want.tolist()
+
+    # all three saw the same committed snapshot
+    assert same.gen == reach.gen == members.gen == svc.gen
+    g0 = svc.gen
+    svc.apply([dynamic.ADD_EDGE], [4], [0])  # merges everything
+    same2 = svc.same_scc([0], [4])
+    assert same2.value.tolist() == [True]
+    assert same2.gen > g0  # new generation observed after commit
+
+    # dead-vertex contracts
+    svc.apply([dynamic.REM_VERTEX], [4], [0])
+    assert not svc.same_scc([4], [4]).value.item()
+    assert not svc.reachable([4], [4]).value.item()
+    assert not svc.scc_members(4).value.any()
+
+    # out-of-range ids answer False/empty, never alias a clipped vertex
+    assert svc.same_scc([NV + 76, -1], [0, 0]).value.tolist() == [False] * 2
+    assert svc.reachable([NV + 76, -1], [0, 0]).value.tolist() == [False] * 2
+    assert not svc.scc_members(NV + 76).value.any()
+    assert not svc.scc_members(-1).value.any()
+
+
+def test_apply_rolls_back_on_unrecoverable_overflow():
+    """If growth is capped and a chunk cannot replay, apply() must leave
+    the service exactly at the last committed snapshot (all-or-nothing)."""
+    svc = SCCService(tiny_cfg(edge_capacity=8, max_probes=1), buckets=(8,),
+                     max_edge_capacity=8)
+    oracle = SeqSCC(NV)
+    boot(svc, oracle)
+    edges_before = None
+    with pytest.raises(RuntimeError):
+        rng = np.random.default_rng(2)
+        for _ in range(40):  # max_probes=1 at capacity 8 overflows fast
+            u = rng.integers(0, NV, 8)
+            v = rng.integers(0, NV, 8)
+            edges_before = svc.edge_set()
+            gen_before = svc.gen
+            svc.apply(np.full(8, dynamic.ADD_EDGE), u, v)
+        raise AssertionError("stream never overflowed the capped table")
+    # the failing chunk left no trace: same snapshot, same cfg
+    assert svc.edge_set() == edges_before
+    assert svc.gen == gen_before
+    assert svc.cfg.edge_capacity == 8
+    # and the service still works for ops that fit
+    if edges_before:
+        eu, ev = next(iter(edges_before))
+        ok = svc.apply([dynamic.REM_EDGE], [eu], [ev])
+        assert ok.all()
+
+
+def test_compaction_triggers_on_tombstones():
+    svc = SCCService(tiny_cfg(edge_capacity=32, max_probes=16),
+                     buckets=(16,), compact_tomb_frac=0.2)
+    oracle = SeqSCC(NV)
+    boot(svc, oracle)
+    rng = np.random.default_rng(5)
+    pairs = [(int(a), int(b)) for a, b in
+             zip(rng.integers(0, NV, 12), rng.integers(0, NV, 12))]
+    pairs = sorted(set(pairs))
+    svc.apply([dynamic.ADD_EDGE] * len(pairs),
+              [p[0] for p in pairs], [p[1] for p in pairs])
+    svc.apply([dynamic.REM_EDGE] * len(pairs),
+              [p[0] for p in pairs], [p[1] for p in pairs])
+    for p in pairs:
+        oracle.add_edge(*p)
+        oracle.remove_edge(*p)
+    assert svc.compaction_count >= 1
+    _, tomb = et.fill_stats(svc.state.edges)
+    assert int(tomb) == 0
+    assert svc.edge_set() == oracle.edges == set()
