@@ -1,19 +1,29 @@
 """Streaming-service throughput: sustained ops/sec across workload mixes.
 
-The paper (Fig 4/5) measures an *on-line* system: threads apply an
-unbounded update stream while readers run SameSCC queries.  This bench
-drives :class:`repro.core.service.SCCService` -- grow-and-replay, bucketed
-batch scheduling, periodic compaction -- with the paper's mix axes:
+The paper (Fig 4/5) measures an *on-line* system: a fixed pool of update
+threads applies an unbounded stream while readers run SameSCC queries
+concurrently.  This bench drives :class:`repro.core.service.SCCService` --
+grow-and-replay, bucketed batch scheduling, the pipelined in-flight update
+window, periodic compaction -- with the paper's mix axes:
 
   update-heavy   90% inserts, no queries        (Fig 4b analogue)
   balanced       50/50 add/remove + queries     (Fig 4a analogue)
   query-heavy    mostly reader batches          (Fig 5 analogue)
 
-Reported: sustained update ops/s, query ops/s, number of compiled step
-shapes (must stay bounded by bucket-count x capacity-growth count no
-matter the stream length), table grows, compactions.
+and then demonstrates the paper's headline *overlap* claim: the same
+update mix run once with serial query interleaving (`run_stream`) and once
+with a QueryBroker-fed reader pool (`run_concurrent_stream --readers N`).
+Combined (update+query) throughput with concurrent readers must exceed
+the serial baseline -- queries execute against the committed snapshot
+while the next update step is still in flight.
+
+Reported per mix: update ops/s, query ops/s, combined ops/s, number of
+compiled step shapes (bounded by 2 x bucket-count x capacity-growth count
+no matter the stream length: pipelined + serial-replay jit entries), table
+grows, compactions.
 
     PYTHONPATH=src python -m benchmarks.bench_stream [--smoke] [--full]
+                                                     [--readers N]
 """
 from __future__ import annotations
 
@@ -38,6 +48,18 @@ MIXES = {
 }
 
 
+def assert_compile_bound(rep, buckets):
+    # grows AND capacity-escalating compactions each mint a new
+    # GraphConfig (hence up to len(buckets) fresh step shapes); the
+    # pipelined fast path and the serial grow-and-replay path are
+    # separate jit entries, hence the factor 2
+    n_cfgs = 1 + rep["grows"] + rep["compactions"]
+    assert rep["compile_count"] <= 2 * len(buckets) * n_cfgs, (
+        "per-chunk recompilation detected: "
+        f"{rep['compile_count']} compiled shapes for "
+        f"{len(buckets)} buckets x {n_cfgs} configs x 2 step paths")
+
+
 def run(nv=4096, edge_capacity=4096, n_ops=16384, chunk=512,
         buckets=(128, 512), n_queries=2048, mixes=None, seed=0):
     """One service per mix (fresh table so growth cost is included)."""
@@ -52,30 +74,83 @@ def run(nv=4096, edge_capacity=4096, n_ops=16384, chunk=512,
             svc, n_ops=n_ops, chunk=chunk, n_queries=n_queries,
             seed=seed, **mix)
         rows.append((name, rep["ops"], rep["ops_per_s"], rep["queries"],
-                     rep["queries_per_s"], rep["compile_count"],
-                     rep["grows"], rep["compactions"],
-                     rep["edge_capacity"]))
-        # grows AND capacity-escalating compactions each mint a new
-        # GraphConfig (hence up to len(buckets) fresh step shapes)
-        n_cfgs = 1 + rep["grows"] + rep["compactions"]
-        assert rep["compile_count"] <= len(buckets) * n_cfgs, (
-            "per-chunk recompilation detected: "
-            f"{rep['compile_count']} compiled shapes for "
-            f"{len(buckets)} buckets x {n_cfgs} configs")
+                     rep["queries_per_s"], rep["combined_per_s"],
+                     rep["compile_count"], rep["grows"],
+                     rep["compactions"], rep["edge_capacity"]))
+        assert_compile_bound(rep, buckets)
+    return rows
+
+
+def run_overlap(nv=4096, edge_capacity=4096, n_ops=16384, chunk=512,
+                buckets=(128, 512), n_queries=2048, readers=2, seed=0):
+    """Serial-reader baseline vs concurrent reader pool on the SAME update
+    mix (balanced): the paper's Fig 4/5 overlap demonstration."""
+    smscc = configs.get("smscc")
+
+    def fresh():
+        cfg = smscc.config(n_vertices=nv, edge_capacity=edge_capacity,
+                           max_probes=64, max_outer=64, max_inner=128)
+        return booted_service(cfg, buckets)
+
+    # warm the shared jit cache (step buckets + both query shapes at the
+    # boot cfg) on a throwaway service so neither timed run is charged
+    # compile time the other gets for free; growth-minted configs compile
+    # identically in both runs (same deterministic update stream)
+    import numpy as np
+
+    from repro.core import dynamic
+    warm = fresh()
+    warm.apply(np.full(chunk, dynamic.NOP, np.int32),
+               np.zeros(chunk, np.int32), np.zeros(chunk, np.int32))
+    warm.same_scc(np.zeros(n_queries, np.int32),
+                  np.zeros(n_queries, np.int32))
+    warm.reachable(np.zeros(32, np.int32), np.zeros(32, np.int32))
+
+    # both modes are scored on full wall clock (workload generation and
+    # thread startup included) so the comparison is symmetric
+    import time
+    t0 = time.perf_counter()
+    serial = stream.run_stream(fresh(), n_ops=n_ops, add_frac=0.5,
+                               query_frac=1.0, chunk=chunk,
+                               n_queries=n_queries, seed=seed)
+    serial_wall = time.perf_counter() - t0
+    serial_combined = int((serial["ops"] + serial["queries"]) /
+                          serial_wall)
+    conc = stream.run_concurrent_stream(fresh(), n_ops=n_ops,
+                                        readers=readers, add_frac=0.5,
+                                        chunk=chunk, n_queries=n_queries,
+                                        seed=seed)
+    assert_compile_bound(conc, buckets)
+    rows = [("serial_readers", serial["ops"], serial["ops_per_s"],
+             serial["queries"], serial["queries_per_s"],
+             serial_combined, 0),
+            (f"concurrent_x{readers}", conc["ops"], conc["ops_per_s"],
+             conc["queries"], conc["queries_per_s"],
+             conc["combined_per_s"], readers)]
+    assert conc["combined_per_s"] > serial_combined, (
+        "no reader/updater overlap: concurrent combined throughput "
+        f"{conc['combined_per_s']} ops/s did not beat the serial "
+        f"baseline {serial_combined} ops/s")
     return rows
 
 
 HEADER = ["mix", "ops", "ops_per_s", "queries", "queries_per_s",
-          "compiled_shapes", "grows", "compactions", "final_capacity"]
+          "combined_per_s", "compiled_shapes", "grows", "compactions",
+          "final_capacity"]
+OVERLAP_HEADER = ["mode", "ops", "ops_per_s", "queries", "queries_per_s",
+                  "combined_per_s", "readers"]
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CPU-friendly run (CI: exercises grow + "
-                         "replay + both mix extremes end-to-end)")
+                         "replay + both mix extremes + reader overlap "
+                         "end-to-end)")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale graph (slow; accelerator advised)")
+    ap.add_argument("--readers", type=int, default=2,
+                    help="reader threads for the overlap comparison")
     args = ap.parse_args()
     if args.smoke:
         # capacity starts undersized on purpose so the smoke run also
@@ -83,12 +158,21 @@ def main():
         rows = run(nv=256, edge_capacity=256, n_ops=1024, chunk=128,
                    buckets=(32, 128), n_queries=256,
                    mixes=("update_heavy", "query_heavy"))
+        overlap = run_overlap(nv=256, edge_capacity=1024, n_ops=1024,
+                              chunk=128, buckets=(32, 128), n_queries=256,
+                              readers=args.readers)
     elif args.full:
         rows = run(nv=2 ** 17, edge_capacity=2 ** 18, n_ops=2 ** 17,
                    chunk=4096, buckets=(1024, 4096), n_queries=2 ** 15)
+        overlap = run_overlap(nv=2 ** 17, edge_capacity=2 ** 18,
+                              n_ops=2 ** 17, chunk=4096,
+                              buckets=(1024, 4096), n_queries=2 ** 15,
+                              readers=args.readers)
     else:
         rows = run()
+        overlap = run_overlap(readers=args.readers)
     common.emit(rows, HEADER)
+    common.emit(overlap, OVERLAP_HEADER)
 
 
 if __name__ == "__main__":

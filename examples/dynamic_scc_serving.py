@@ -2,9 +2,12 @@
 
 This is the paper's system run the way it would run in production, now on
 top of the streaming service layer (:mod:`repro.core.service`):
-  * a sustained stream of update chunks + snapshot query batches (the
-    paper's mixed workload, Fig 4/5), cut into bucketed static batch
-    shapes so compilation count stays bounded,
+  * a sustained stream of update chunks applied through the service's
+    pipelined in-flight window, overlapped with **concurrent reader
+    threads** issuing coalesced snapshot queries through a
+    :class:`repro.core.broker.QueryBroker` (the paper's mixed workload,
+    Fig 4/5), all cut into bucketed static batch shapes so compilation
+    count stays bounded,
   * **grow-and-replay**: the edge table starts deliberately small; when
     probe-bound overflow drops an insert, the service rehashes into a
     larger capacity and replays it -- no edge is ever lost,
@@ -17,16 +20,21 @@ top of the streaming service layer (:mod:`repro.core.service`):
     compaction) happens inside the service when tombstones pile up.
 
     PYTHONPATH=src python examples/dynamic_scc_serving.py [--steps N]
+                                                          [--readers N]
+    PYTHONPATH=src python examples/dynamic_scc_serving.py --smoke  # CI
 """
 import argparse
 import dataclasses
 import os
+import tempfile
+import threading
 import time
 
 import numpy as np
 
 from repro.ckpt import checkpoint
 from repro.core import dynamic, graph_state as gs
+from repro.core.broker import QueryBroker
 from repro.core.service import SCCService
 from repro.data import pipeline
 
@@ -37,15 +45,14 @@ CKPT_DIR = "/tmp/smscc_serving_ckpt"
 CKPT_EVERY = 10
 
 
-def build_service(cfg: gs.GraphConfig):
+def build_service(cfg: gs.GraphConfig, nv: int, batch: int, preload: int):
     """Preloaded service: random digraph loaded THROUGH the service so the
     deliberately undersized table grows (and replays) instead of silently
     dropping edges the way a raw bulk insert would."""
     rng = np.random.default_rng(0)
-    svc = SCCService(cfg, buckets=(64, BATCH), state=gs.all_singletons(cfg))
-    n = 4000
-    svc.apply(np.full(n, dynamic.ADD_EDGE, np.int32),
-              rng.integers(0, NV, n), rng.integers(0, NV, n))
+    svc = SCCService(cfg, buckets=(64, batch), state=gs.all_singletons(cfg))
+    svc.apply(np.full(preload, dynamic.ADD_EDGE, np.int32),
+              rng.integers(0, nv, preload), rng.integers(0, nv, preload))
     st = svc.stats()
     print(f"[preload] {st['live_edges']} edges | capacity "
           f"{st['edge_capacity']} (grows={st['grows']}, "
@@ -53,16 +60,56 @@ def build_service(cfg: gs.GraphConfig):
     return svc
 
 
+def reader_loop(broker: QueryBroker, stop: threading.Event, nv: int,
+                n_queries: int, seed: int, out: dict):
+    """Free-running reader: coalesced SameSCC (+ occasional reachability)
+    batches; checks its observed generations never go backwards.  Any
+    failure is stashed in ``out`` and re-raised by the main thread (a
+    daemon thread's own traceback cannot fail the CI smoke)."""
+    rng = np.random.default_rng(seed)
+    last_gen = -1
+    try:
+        while not stop.is_set():
+            qu = rng.integers(0, nv, n_queries)
+            qv = rng.integers(0, nv, n_queries)
+            snap = broker.same_scc(qu, qv)
+            assert snap.gen >= last_gen, "reader saw generation regress"
+            last_gen = snap.gen
+            out["queries"] += n_queries
+            if rng.random() < 0.25:
+                snap = broker.reachable(qu[:64], qv[:64])
+                last_gen = max(last_gen, snap.gen)
+                out["queries"] += 64
+    except BaseException as e:
+        out["error"] = e
+        stop.set()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--readers", type=int, default=2,
+                    help="concurrent reader threads (0 = updates only)")
     ap.add_argument("--reset", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CPU-friendly run against a throwaway "
+                         "checkpoint dir (the CI docs gate)")
     args = ap.parse_args()
-    if args.reset and os.path.exists(CKPT_DIR):
-        for f in os.listdir(CKPT_DIR):
-            os.remove(os.path.join(CKPT_DIR, f))
+    if args.smoke:
+        nv, batch, queries, preload = 512, 128, 256, 400
+        steps = min(args.steps, 6)
+        ckpt_dir = tempfile.mkdtemp(prefix="smscc_serving_smoke_")
+        ckpt_every = 3
+    else:
+        nv, batch, queries, preload = NV, BATCH, QUERIES, 4000
+        steps = args.steps
+        ckpt_dir = CKPT_DIR
+        ckpt_every = CKPT_EVERY
+    if args.reset and os.path.exists(ckpt_dir):
+        for f in os.listdir(ckpt_dir):
+            os.remove(os.path.join(ckpt_dir, f))
 
-    cfg = gs.GraphConfig(n_vertices=NV, edge_capacity=2 ** 12,
+    cfg = gs.GraphConfig(n_vertices=nv, edge_capacity=max(512, nv),
                          max_probes=128, max_outer=64, max_inner=128)
     svc = None
     cursor = 0
@@ -72,68 +119,88 @@ def main():
     # the table may have grown beyond the boot config before the crash.
     try:
         meta, _ = checkpoint.restore(
-            CKPT_DIR, {"cursor": np.int64(0),
+            ckpt_dir, {"cursor": np.int64(0),
                        "edge_capacity": np.int64(cfg.edge_capacity)})
     except KeyError:  # checkpoint from an older format: start fresh, and
         # clear the stale files so a future torn-LATEST fallback cannot
         # resurrect them over newer new-format progress
         print("[recovery] unreadable (old-format) checkpoint removed")
-        for f in os.listdir(CKPT_DIR):
-            os.remove(os.path.join(CKPT_DIR, f))
+        for f in os.listdir(ckpt_dir):
+            os.remove(os.path.join(ckpt_dir, f))
         meta = None
     if meta is not None:
         cap = int(meta["edge_capacity"])
         ck_cfg = dataclasses.replace(cfg, edge_capacity=cap)
         tpl = {"state": gs.empty(ck_cfg), "cursor": np.int64(0),
                "edge_capacity": np.int64(cap)}
-        restored, _ = checkpoint.restore(CKPT_DIR, tpl)
-        svc = SCCService(ck_cfg, buckets=(64, BATCH),
+        restored, _ = checkpoint.restore(ckpt_dir, tpl)
+        svc = SCCService(ck_cfg, buckets=(64, batch),
                          state=restored["state"])
         cursor = int(restored["cursor"])
         print(f"[recovery] resumed at chunk {cursor} (capacity {cap})")
     if svc is None:  # no (usable) checkpoint: pay the preload only now
-        svc = build_service(cfg)
+        svc = build_service(cfg, nv, batch, preload)
 
-    rng = np.random.default_rng(1)
+    # the reader path: a broker-fed thread pool querying the committed
+    # snapshot while the update pipeline runs
+    broker = QueryBroker(svc, buckets=(64, queries)).start()
+    stop = threading.Event()
+    reader_stats = [{"queries": 0} for _ in range(args.readers)]
+    readers = [threading.Thread(
+        target=reader_loop, args=(broker, stop, nv, queries, 100 + i,
+                                  reader_stats[i]), daemon=True)
+        for i in range(args.readers)]
+    for t in readers:
+        t.start()
+
     times = []
     stragglers = 0
     t_start = time.perf_counter()
-    for step in range(cursor, args.steps):
-        ops = pipeline.op_stream(NV, BATCH, step=step, add_frac=0.7)
-        qu = rng.integers(0, NV, QUERIES)
-        qv = rng.integers(0, NV, QUERIES)
-        t0 = time.perf_counter()
-        svc.apply(np.asarray(ops.kind), np.asarray(ops.u),
-                  np.asarray(ops.v))
-        same = svc.same_scc(qu, qv)
-        reach = svc.reachable(qu[:64], qv[:64])
-        assert same.gen == reach.gen  # one committed snapshot per chunk
-        dt = time.perf_counter() - t0
-        times.append(dt)
-        med = sorted(times[-50:])[len(times[-50:]) // 2]
-        if len(times) > 5 and dt > 3 * med:
-            stragglers += 1
-            print(f"[straggler] chunk {step}: {dt*1e3:.0f}ms vs median "
-                  f"{med*1e3:.0f}ms")
-        if (step + 1) % CKPT_EVERY == 0:
-            st = svc.stats()
-            checkpoint.save(
-                CKPT_DIR, step + 1,
-                {"state": svc.state, "cursor": np.int64(step + 1),
-                 "edge_capacity": np.int64(svc.cfg.edge_capacity)})
-            print(f"[ckpt] chunk {step+1} | "
-                  f"{BATCH/med:.0f} updates/s, {QUERIES/med:.0f} queries/s"
-                  f" | {st['n_ccs']} SCCs | gen={st['gen']}"
-                  f" | capacity={st['edge_capacity']}"
-                  f" (grows={st['grows']}, replayed={st['replayed_ops']},"
-                  f" compactions={st['compactions']})")
+    try:
+        for step in range(cursor, steps):
+            ops = pipeline.op_stream(nv, batch, step=step, add_frac=0.7)
+            t0 = time.perf_counter()
+            svc.apply(np.asarray(ops.kind), np.asarray(ops.u),
+                      np.asarray(ops.v))
+            dt = time.perf_counter() - t0
+            times.append(dt)
+            med = sorted(times[-50:])[len(times[-50:]) // 2]
+            if len(times) > 5 and dt > 3 * med:
+                stragglers += 1
+                print(f"[straggler] chunk {step}: {dt*1e3:.0f}ms vs median "
+                      f"{med*1e3:.0f}ms")
+            if (step + 1) % ckpt_every == 0:
+                st = svc.stats()
+                checkpoint.save(
+                    ckpt_dir, step + 1,
+                    {"state": svc.state, "cursor": np.int64(step + 1),
+                     "edge_capacity": np.int64(svc.cfg.edge_capacity)})
+                print(f"[ckpt] chunk {step+1} | {batch/med:.0f} updates/s"
+                      f" | {st['n_ccs']} SCCs | gen={st['gen']}"
+                      f" | capacity={st['edge_capacity']}"
+                      f" (grows={st['grows']}, "
+                      f"replayed={st['replayed_ops']},"
+                      f" compactions={st['compactions']})")
+    finally:
+        stop.set()
+        for t in readers:
+            t.join()
+        broker.stop()
+    for r in reader_stats:
+        if "error" in r:
+            raise r["error"]
 
     total = time.perf_counter() - t_start
-    done = args.steps - cursor
+    done = steps - cursor
+    n_queries = sum(r["queries"] for r in reader_stats)
     print(f"\nserved {done} chunks in {total:.1f}s | "
-          f"{done*BATCH/total:.0f} updates/s | "
-          f"{done*QUERIES/total:.0f} queries/s | stragglers={stragglers} | "
-          f"compiled shapes={svc.compile_count}")
+          f"{done*batch/total:.0f} updates/s | "
+          f"{n_queries/total:.0f} queries/s ({args.readers} readers, "
+          f"{broker.stats()['coalescing']:.0f} coalesced/flush) | "
+          f"stragglers={stragglers} | "
+          f"compiled shapes={svc.compile_count} | "
+          f"pipelined={svc.pipelined_chunks} "
+          f"fallback={svc.fallback_chunks}")
 
 
 if __name__ == "__main__":

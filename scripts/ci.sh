@@ -12,12 +12,23 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== compileall (syntax gate) =="
 python -m compileall -q src tests benchmarks examples scripts
 
+echo "== docs gate: every file the docs reference must exist =="
+grep -ohE '`[a-zA-Z0-9_/.-]+\.(py|sh|md)`' docs/*.md \
+    | tr -d '\`' | sort -u | while read -r f; do
+    if [[ ! -f "$f" && ! -f "docs/$f" ]]; then
+        echo "docs reference a missing file: $f" >&2
+        exit 1
+    fi
+done
+
 echo "== tier-1 tests (pytest.ini defaults to -m 'not slow') =="
 python -m pytest -x -q tests/
 
 if [[ "${1:-}" != "--fast" ]]; then
-    echo "== stream service smoke (grow-and-replay + both mix extremes) =="
+    echo "== stream service smoke (grow-and-replay + mixes + reader overlap) =="
     python -m benchmarks.bench_stream --smoke
+    echo "== documented serving entry point (examples/dynamic_scc_serving.py --smoke) =="
+    python examples/dynamic_scc_serving.py --smoke
 fi
 
 echo "CI OK"

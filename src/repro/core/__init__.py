@@ -10,3 +10,6 @@ from repro.core import (  # noqa: F401
     reach,
     scc,
 )
+
+# service/broker are imported lazily by consumers (they pull in the
+# launch-layer scheduler), not eagerly here.

@@ -1,0 +1,229 @@
+"""Thread-safe reader path for the streaming SCC service.
+
+The paper's readers (arXiv:1804.01276, and the non-blocking sibling
+arXiv:1809.00896) run *concurrently* with a fixed pool of update threads
+and are wait-free: a query never blocks an update and always observes a
+consistent state.  Our compiled analogue: reader threads hand their point
+queries to a :class:`QueryBroker`, which coalesces everything pending into
+one padded batched device call per query kind against a single *pinned*
+committed snapshot, then distributes the generation-stamped answers.
+
+Consistency contract (see ``docs/SERVICE_API.md``):
+
+* every flush pins ``service.state`` exactly once -- all answers of that
+  flush share one generation, and the pinned state is always a fully
+  committed snapshot (the service never publishes in-flight pipeline
+  states, and the pipeline donates only its own private double buffer);
+* the snapshot is pinned *after* the pending set is collected, so a
+  reader that saw generation ``g`` and then submits again can only be
+  answered at a generation ``>= g`` (monotone reads per reader);
+* padding lanes target vertex 0 on the snapshot but their results are
+  discarded before distribution, so they can never alias a real answer.
+
+Compilations stay bounded: coalesced batches are cut/padded to the
+broker's own bucket registry (the same ``prefill_bs{N}`` trick as the
+update path), so query-step compiles are at most ``len(buckets)`` per
+query kind per graph config.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import service as svc_mod
+
+__all__ = ["QueryBroker"]
+
+_KINDS = ("same_scc", "reachable", "scc_members")
+
+
+class QueryBroker:
+    """Coalesces concurrent reader queries into batched snapshot calls.
+
+    Two operating modes:
+
+    * **dispatcher thread** (``start()`` / ``stop()``, or use the broker
+      as a context manager): a background thread drains the pending set
+      whenever it is non-empty -- readers just call the blocking wrappers.
+    * **inline**: without a dispatcher, blocking wrappers flush the
+      pending set themselves (and piggyback on whichever thread got there
+      first), which keeps single-threaded callers and tests simple.
+    """
+
+    def __init__(self, service, buckets: Sequence[int] = (64, 256, 1024)):
+        from repro.launch.stream import BucketedScheduler
+        self._svc = service
+        self._sched = BucketedScheduler(buckets)
+        self._cv = threading.Condition()
+        self._pending: Dict[str, List[Tuple[np.ndarray, np.ndarray,
+                                            Future]]] = {
+            k: [] for k in _KINDS}
+        self._thread: threading.Thread | None = None
+        self._stopping = False
+        # telemetry
+        self.flushes = 0
+        self.served = 0
+        self.max_coalesced = 0
+
+    # ------------------------------------------------------- submission ---
+
+    def submit(self, kind: str, u, v=None) -> Future:
+        """Queue a query batch; returns a Future resolving to a
+        :class:`repro.core.service.Snapshot`."""
+        assert kind in _KINDS, f"unknown query kind {kind!r}"
+        u = np.atleast_1d(np.asarray(u, np.int32))
+        v = np.zeros_like(u) if v is None \
+            else np.atleast_1d(np.asarray(v, np.int32))
+        assert u.shape == v.shape
+        fut: Future = Future()
+        with self._cv:
+            if self._stopping:
+                raise RuntimeError("QueryBroker is stopped")
+            self._pending[kind].append((u, v, fut))
+            self._cv.notify()
+        return fut
+
+    def same_scc(self, u, v) -> svc_mod.Snapshot:
+        """Blocking SameSCC through the coalescer."""
+        return self._resolve(self.submit("same_scc", u, v))
+
+    def reachable(self, u, v) -> svc_mod.Snapshot:
+        """Blocking reachability through the coalescer."""
+        return self._resolve(self.submit("reachable", u, v))
+
+    def scc_members(self, u) -> svc_mod.Snapshot:
+        """Blocking membership-mask query; value is bool[Q, NV]."""
+        return self._resolve(self.submit("scc_members", u))
+
+    def _resolve(self, fut: Future) -> svc_mod.Snapshot:
+        if self._thread is None or not self._thread.is_alive():
+            # inline mode: some thread must drain the queue; a concurrent
+            # flush may already have taken our request, in which case this
+            # flush is a cheap no-op and result() waits for the other one.
+            self.flush()
+        return fut.result()
+
+    # ---------------------------------------------------------- flushing --
+
+    def flush(self) -> int:
+        """Answer everything pending against ONE pinned committed snapshot;
+        returns the number of point queries served."""
+        with self._cv:
+            batch = {k: reqs for k, reqs in self._pending.items() if reqs}
+            for k in batch:
+                self._pending[k] = []
+        if not batch:
+            return 0
+        # Pin AFTER collecting the batch: a reader already answered at gen
+        # g resubmits only after its result arrived, hence after the flush
+        # that pinned g -- commits are monotone, so this pin sees >= g.
+        # cfg may be read mid-grow relative to st, but the only mutable
+        # field (edge_capacity) never enters a query: n_vertices/max_inner
+        # are fixed for the service's lifetime.
+        st = self._svc.state
+        cfg = self._svc.cfg
+        try:
+            gen = int(st.gen)
+            served = 0
+            for kind, reqs in batch.items():
+                served += self._flush_kind(kind, reqs, st, cfg, gen)
+        except BaseException as e:
+            for reqs in batch.values():
+                for _, _, fut in reqs:
+                    if not fut.done():
+                        fut.set_exception(e)
+            raise
+        self.flushes += 1
+        self.served += served
+        return served
+
+    def _flush_kind(self, kind, reqs, st, cfg, gen) -> int:
+        u = np.concatenate([r[0] for r in reqs])
+        v = np.concatenate([r[1] for r in reqs])
+        n = u.shape[0]
+        self.max_coalesced = max(self.max_coalesced, n)
+        if kind == "scc_members":
+            out = np.zeros((n, cfg.n_vertices), bool)
+        else:
+            out = np.zeros(n, bool)
+        for sl, b in self._sched.plan(n):
+            pu = np.zeros(b, np.int32)
+            pv = np.zeros(b, np.int32)
+            k = sl.stop - sl.start
+            pu[:k] = u[sl]
+            pv[:k] = v[sl]
+            if kind == "same_scc":
+                out[sl] = svc_mod.same_scc_on(st, cfg, pu, pv)[:k]
+            elif kind == "reachable":
+                out[sl] = svc_mod.reachable_on(st, cfg, pu, pv)[:k]
+            else:
+                out[sl] = svc_mod.members_on(st, cfg, pu)[:k]
+        pos = 0
+        for ru, _, fut in reqs:
+            k = ru.shape[0]
+            fut.set_result(svc_mod.Snapshot(out[pos:pos + k], gen))
+            pos += k
+        return n
+
+    # ------------------------------------------------------- dispatcher ---
+
+    def start(self) -> "QueryBroker":
+        """Spawn the background dispatcher thread (idempotent)."""
+        with self._cv:
+            self._stopping = False
+            if self._thread is not None and self._thread.is_alive():
+                return self
+            self._thread = threading.Thread(
+                target=self._run, name="scc-query-broker", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self):
+        """Drain outstanding queries, then stop the dispatcher."""
+        with self._cv:
+            self._stopping = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        # a dispatcher that died on a flush error may leave pending
+        # futures behind -- fail them rather than hang their readers
+        with self._cv:
+            leftovers = [fut for reqs in self._pending.values()
+                         for _, _, fut in reqs]
+            for k in self._pending:
+                self._pending[k] = []
+        for fut in leftovers:
+            if not fut.done():
+                fut.set_exception(RuntimeError("QueryBroker stopped"))
+
+    def _run(self):
+        while True:
+            with self._cv:
+                while not self._stopping and \
+                        not any(self._pending.values()):
+                    self._cv.wait(timeout=0.05)
+                if self._stopping and not any(self._pending.values()):
+                    return
+            try:
+                self.flush()
+            except BaseException:
+                # flush already failed its own collected futures; keep the
+                # dispatcher alive so later submitters are not orphaned
+                # waiting on a thread that silently died
+                continue
+
+    def __enter__(self) -> "QueryBroker":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    def stats(self) -> dict:
+        return {"flushes": self.flushes, "served": self.served,
+                "max_coalesced": self.max_coalesced,
+                "coalescing": round(self.served / self.flushes, 2)
+                if self.flushes else 0.0}

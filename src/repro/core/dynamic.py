@@ -72,9 +72,15 @@ def _first_claim(cand, target, nv, b):
     return cand & (claims[target] == idx)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def apply_batch(state: gs.GraphState, ops: OpBatch, cfg: gs.GraphConfig):
-    """One batch-atomic SMSCC step.  Returns (new_state, ok: bool[B])."""
+def _apply_batch_impl(state: gs.GraphState, ops: OpBatch,
+                      cfg: gs.GraphConfig):
+    """One batch-atomic SMSCC step.
+
+    Returns ``(new_state, ok: bool[B], ovf_delta: int32[])``.  The overflow
+    *delta* is a dedicated output buffer (never aliased to the input state)
+    so a pipelined caller can donate ``state`` into the next step and still
+    inspect this step's overflow later without touching donated memory.
+    """
     nv = cfg.n_vertices
     b = ops.kind.shape[0]
     vid = jnp.arange(nv, dtype=jnp.int32)
@@ -197,7 +203,38 @@ def apply_batch(state: gs.GraphState, ops: OpBatch, cfg: gs.GraphConfig):
         overflow=state.overflow + ovf,
     )
     new_state = gs.recount_ccs(new_state)
+    return new_state, ok, ovf
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def apply_batch(state: gs.GraphState, ops: OpBatch, cfg: gs.GraphConfig):
+    """One batch-atomic SMSCC step.  Returns (new_state, ok: bool[B])."""
+    new_state, ok, _ = _apply_batch_impl(state, ops, cfg)
     return new_state, ok
+
+
+# In-flight variants for the concurrent-reader pipeline: both return the
+# per-step overflow delta as a third output so the host can defer its only
+# sync point behind a window of dispatched steps.  The donating entry hands
+# the input state's buffers to XLA for reuse — callers must guarantee
+# nothing else (in particular no committed reader snapshot) still
+# references them.
+apply_batch_async = jax.jit(_apply_batch_impl, static_argnames=("cfg",))
+_apply_batch_donated = jax.jit(_apply_batch_impl, static_argnames=("cfg",),
+                               donate_argnums=(0,))
+
+
+def apply_batch_inflight(state: gs.GraphState, ops: OpBatch,
+                         cfg: gs.GraphConfig, *, donate: bool = False):
+    """Dispatch one step without forcing any host sync.
+
+    Returns ``(new_state, ok, ovf_delta)`` as in-flight device values.
+    With ``donate=True`` the input state's buffers are donated to the
+    output (saves a full state copy per step on accelerators; ignored
+    with a warning on CPU, where XLA does not implement donation).
+    """
+    fn = _apply_batch_donated if donate else apply_batch_async
+    return fn(state, ops, cfg)
 
 
 @partial(jax.jit, static_argnames=("cfg",))

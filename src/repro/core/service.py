@@ -31,9 +31,26 @@ snapshot queries
     any replay).  Readers therefore always see a consistent generation --
     the batched analogue of the paper's wait-free reader guarantee -- and
     every query result is stamped with the generation it was computed at.
+
+concurrent-reader pipeline
+    The updater path no longer forces a device->host sync per step: a
+    chunk's bucket batches are dispatched through
+    ``dynamic.apply_batch_inflight`` (async dispatch, optional buffer
+    donation between steps), and the only host sync -- the per-step
+    overflow delta -- is resolved behind a bounded in-flight window.  A
+    chunk whose window stays overflow-free commits in one shot; any
+    overflow aborts the fast path and the chunk re-runs on the serial
+    grow-and-replay path from the untouched committed snapshot, so results
+    are bit-identical either way.  The committed snapshot is
+    double-buffered against donation (the pipeline steps off a private
+    device copy), which is what lets a :class:`repro.core.broker.QueryBroker`
+    serve readers from ``service.state`` while the next update step is
+    still executing.  See ``docs/ARCHITECTURE.md`` for the full request
+    lifecycle and ``docs/SERVICE_API.md`` for the consistency contract.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from functools import partial
 from typing import NamedTuple, Sequence
@@ -84,6 +101,52 @@ def _members(state: gs.GraphState, u):
     return state.v_alive & (state.ccid == lab)
 
 
+@jax.jit
+def _members_batch(state: gs.GraphState, u):
+    """bool[Q, NV]: row i is the membership mask of u[i]'s SCC."""
+    nv = state.ccid.shape[0]
+    uu = jnp.clip(u, 0, nv - 1)
+    lab = jnp.where(state.v_alive[uu], state.ccid[uu], nv)
+    return state.v_alive[None, :] & (state.ccid[None, :] == lab[:, None])
+
+
+def _ids_in_range(ids, nv: int) -> np.ndarray:
+    ids = np.asarray(ids)
+    return (ids >= 0) & (ids < nv)
+
+
+# Snapshot-query primitives shared by SCCService and QueryBroker: each
+# answers against an explicit pinned state (NOT the service's live pointer),
+# which is what lets the broker serve a whole coalesced batch from one
+# consistent generation.
+
+def same_scc_on(state: gs.GraphState, cfg: gs.GraphConfig, u, v
+                ) -> np.ndarray:
+    """bool[Q]: SameSCC on a pinned snapshot; out-of-range ids answer
+    False, never alias a clipped vertex."""
+    res = community.check_scc(state, jnp.asarray(u, jnp.int32),
+                              jnp.asarray(v, jnp.int32))
+    return np.asarray(res) & _ids_in_range(u, cfg.n_vertices) \
+        & _ids_in_range(v, cfg.n_vertices)
+
+
+def reachable_on(state: gs.GraphState, cfg: gs.GraphConfig, u, v
+                 ) -> np.ndarray:
+    """bool[Q]: u[i] ⇝ v[i] on a pinned snapshot."""
+    res = _reachable_batch(state, jnp.asarray(u, jnp.int32),
+                           jnp.asarray(v, jnp.int32), cfg.max_inner)
+    return np.asarray(res) & _ids_in_range(u, cfg.n_vertices) \
+        & _ids_in_range(v, cfg.n_vertices)
+
+
+def members_on(state: gs.GraphState, cfg: gs.GraphConfig, u) -> np.ndarray:
+    """bool[Q, NV]: SCC membership masks on a pinned snapshot; rows of
+    out-of-range ids are all-False."""
+    res = np.array(_members_batch(state, jnp.asarray(u, jnp.int32)))
+    res[~_ids_in_range(u, cfg.n_vertices)] = False
+    return res
+
+
 class SCCService:
     """Host-side streaming wrapper: grow-and-replay + bucketed scheduling +
     generation-stamped snapshot queries over ``dynamic.apply_batch``."""
@@ -93,7 +156,9 @@ class SCCService:
                  state: gs.GraphState | None = None,
                  grow_factor: int = 2,
                  max_edge_capacity: int | None = None,
-                 compact_tomb_frac: float = 0.25):
+                 compact_tomb_frac: float = 0.25,
+                 inflight_window: int = 8,
+                 donate: bool | None = None):
         from repro.launch.stream import BucketedScheduler
         self._cfg = cfg
         self._state = gs.empty(cfg) if state is None else state
@@ -101,12 +166,21 @@ class SCCService:
         self._grow_factor = grow_factor
         self._max_edge_capacity = max_edge_capacity
         self._compact_tomb_frac = compact_tomb_frac
+        # concurrent pipeline: how many dispatched steps may be in flight
+        # before the oldest overflow delta is resolved (0 = serial path
+        # only, the pre-pipeline behaviour); donation defaults to on
+        # wherever XLA implements it (not CPU).
+        self._inflight_window = inflight_window
+        self._donate = (jax.default_backend() != "cpu"
+                        ) if donate is None else donate
         self._committed = self._state
         # telemetry
         self._compiled: set = set()
         self.grow_count = 0
         self.replayed_ops = 0
         self.compaction_count = 0
+        self.pipelined_chunks = 0
+        self.fallback_chunks = 0
 
     # ------------------------------------------------------------ state ---
 
@@ -125,10 +199,14 @@ class SCCService:
 
     @property
     def compile_count(self) -> int:
-        """Distinct (batch-shape, graph-config) pairs stepped so far -- an
-        upper bound on *update-step* compiles.  Table rehashes (one per
-        target capacity) and query batches (one per query shape) have
-        their own, separately-cached jit entries not counted here."""
+        """Distinct (step-path, batch-shape, graph-config) entries stepped
+        so far -- an upper bound on *update-step* compiles.  The pipelined
+        fast path and the serial replay path are separate jit entries, so
+        the bound is ``2 x len(buckets)`` per graph config (the serial
+        entries only ever materialize on chunks that overflowed).  Table
+        rehashes (one per target capacity) and query batches (one per
+        query shape) have their own, separately-cached jit entries not
+        counted here."""
         return len(self._compiled)
 
     # ---------------------------------------------------------- updates ---
@@ -140,18 +218,35 @@ class SCCService:
         through grow-and-replay so no AddEdge is ever dropped.  Results
         match the documented per-batch linearization applied bucket by
         bucket.
+
+        Fast path: all batches are dispatched as in-flight device steps
+        (no per-batch host sync; buffers donated step-to-step when the
+        backend supports it) and the chunk commits after one deferred
+        overflow check.  Any overflow aborts the fast path and the chunk
+        re-runs on the serial grow-and-replay path from the untouched
+        committed snapshot -- the two paths compute identical results, so
+        callers cannot observe which one ran.
         """
         kind = np.asarray(kind, np.int32)
         u = np.asarray(u, np.int32)
         v = np.asarray(v, np.int32)
-        ok = np.zeros(kind.shape[0], bool)
         entry_state, entry_cfg = self._state, self._cfg
         entry_stats = (set(self._compiled), self.grow_count,
-                       self.replayed_ops, self.compaction_count)
+                       self.replayed_ops, self.compaction_count,
+                       self.pipelined_chunks, self.fallback_chunks)
         try:
-            for sl, ops in self._sched.chunks(kind, u, v):
-                n_real = sl.stop - sl.start
-                ok[sl] = self._apply_padded(ops)[:n_real]
+            ok = None
+            if self._inflight_window > 0:
+                ok = self._apply_pipelined(kind, u, v)
+            if ok is None:  # overflow (or pipeline disabled): serial path
+                self.fallback_chunks += 1
+                self._state, self._cfg = entry_state, entry_cfg
+                ok = np.zeros(kind.shape[0], bool)
+                for sl, ops in self._sched.chunks(kind, u, v):
+                    n_real = sl.stop - sl.start
+                    ok[sl] = self._apply_padded(ops)[:n_real]
+            else:
+                self.pipelined_chunks += 1
             self._maybe_compact()
         except Exception:
             # all-or-nothing chunk: never let a half-applied batch, a cfg
@@ -159,9 +254,49 @@ class SCCService:
             # work leak into the next apply()'s commit
             self._state, self._cfg = entry_state, entry_cfg
             (self._compiled, self.grow_count, self.replayed_ops,
-             self.compaction_count) = entry_stats
+             self.compaction_count, self.pipelined_chunks,
+             self.fallback_chunks) = entry_stats
             raise
         self._committed = self._state
+        return ok
+
+    def _apply_pipelined(self, kind, u, v) -> np.ndarray | None:
+        """Dispatch the whole chunk without per-batch host syncs.
+
+        Steps are enqueued back-to-back; each step's overflow delta is a
+        dedicated output resolved only once ``inflight_window`` newer
+        steps have been dispatched (or at drain).  Returns the per-op ok
+        vector, or ``None`` if any step overflowed -- in which case
+        nothing was committed and the caller replays the chunk on the
+        serial grow-and-replay path.
+
+        When donating, the pipeline steps off a private device copy of the
+        committed snapshot (double buffering): readers keep a valid
+        ``self._committed`` while XLA reuses the pipeline's own buffers
+        step-to-step.
+        """
+        state = self._committed
+        if self._donate:
+            state = jax.tree_util.tree_map(jnp.copy, state)
+        pending = []  # (chunk slice, in-flight ok device array)
+        window: collections.deque = collections.deque()  # ovf deltas
+        for sl, ops in self._sched.chunks(kind, u, v):
+            self._compiled.add(
+                ("pipelined", int(ops.kind.shape[0]), self._cfg))
+            state, ok_dev, ovf = dynamic.apply_batch_inflight(
+                state, ops, self._cfg, donate=self._donate)
+            pending.append((sl, ok_dev))
+            window.append(ovf)
+            if len(window) > self._inflight_window:
+                if int(window.popleft()) != 0:
+                    return None
+        while window:
+            if int(window.popleft()) != 0:
+                return None
+        self._state = state
+        ok = np.zeros(kind.shape[0], bool)
+        for sl, ok_dev in pending:
+            ok[sl] = np.asarray(ok_dev)[: sl.stop - sl.start]
         return ok
 
     def _apply_padded(self, ops: dynamic.OpBatch, depth: int = 0
@@ -263,26 +398,18 @@ class SCCService:
     # point of the paper's wait-free readers).
 
     def _in_range(self, ids) -> np.ndarray:
-        ids = np.asarray(ids)
-        return (ids >= 0) & (ids < self._cfg.n_vertices)
+        return _ids_in_range(ids, self._cfg.n_vertices)
 
     def same_scc(self, u, v) -> Snapshot:
         """Batched SameSCC(u, v) (paper checkSCC, Alg. 23): absent or
         out-of-range endpoints answer False, never alias a real vertex."""
         st = self._committed
-        res = community.check_scc(st, jnp.asarray(u, jnp.int32),
-                                  jnp.asarray(v, jnp.int32))
-        res = np.asarray(res) & self._in_range(u) & self._in_range(v)
-        return Snapshot(res, int(st.gen))
+        return Snapshot(same_scc_on(st, self._cfg, u, v), int(st.gen))
 
     def reachable(self, u, v) -> Snapshot:
         """Batched reachability u[i] ⇝ v[i] on the committed snapshot."""
         st = self._committed
-        res = _reachable_batch(st, jnp.asarray(u, jnp.int32),
-                               jnp.asarray(v, jnp.int32),
-                               self._cfg.max_inner)
-        res = np.asarray(res) & self._in_range(u) & self._in_range(v)
-        return Snapshot(res, int(st.gen))
+        return Snapshot(reachable_on(st, self._cfg, u, v), int(st.gen))
 
     def scc_members(self, u) -> Snapshot:
         """bool[NV] membership mask of u's SCC on the committed snapshot."""
@@ -316,4 +443,6 @@ class SCCService:
             "replayed_ops": self.replayed_ops,
             "compactions": self.compaction_count,
             "compile_count": self.compile_count,
+            "pipelined_chunks": self.pipelined_chunks,
+            "fallback_chunks": self.fallback_chunks,
         }

@@ -4,6 +4,7 @@ streaming SCC service on the host mesh.
     python -m repro.launch.serve --arch gemma3-12b --smoke
     python -m repro.launch.serve --arch mind --smoke
     python -m repro.launch.serve --arch smscc --steps 64
+    python -m repro.launch.serve --arch smscc --steps 64 --readers 2
 """
 from __future__ import annotations
 
@@ -67,9 +68,12 @@ def serve_mind(mod, steps: int):
           f"{dt:.2f}s ({steps*b*c/dt:.0f} scores/s)")
 
 
-def serve_smscc(mod, steps: int, nv: int = 2048, chunk: int = 256):
+def serve_smscc(mod, steps: int, nv: int = 2048, chunk: int = 256,
+                readers: int = 0):
     """The paper's on-line mode: sustained update stream + wait-free query
-    batches over the committed snapshot, via the SCC service layer."""
+    batches over the committed snapshot, via the SCC service layer.  With
+    ``readers > 0`` the queries move off the update thread into a
+    QueryBroker-fed reader pool that overlaps the update pipeline."""
     from repro.core import graph_state as gs
     from repro.core.service import SCCService
     from repro.launch import stream
@@ -80,8 +84,14 @@ def serve_smscc(mod, steps: int, nv: int = 2048, chunk: int = 256):
     # lands immediately instead of bouncing off dead endpoints
     svc = SCCService(cfg, buckets=(64, chunk),
                      state=gs.all_singletons(cfg))
-    rep = stream.run_stream(svc, n_ops=steps * chunk, add_frac=0.7,
-                            query_frac=0.5, chunk=chunk, n_queries=1024)
+    if readers > 0:
+        rep = stream.run_concurrent_stream(
+            svc, n_ops=steps * chunk, readers=readers, add_frac=0.7,
+            chunk=chunk, n_queries=1024)
+    else:
+        rep = stream.run_stream(svc, n_ops=steps * chunk, add_frac=0.7,
+                                query_frac=0.5, chunk=chunk,
+                                n_queries=1024)
     print(rep.pretty())
 
 
@@ -89,6 +99,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-12b")
     ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--readers", type=int, default=0,
+                    help="smscc only: concurrent reader threads (0 = "
+                         "serial query interleaving)")
     args = ap.parse_args()
     mod = configs.get(args.arch)
     if mod.FAMILY == "lm":
@@ -96,7 +109,7 @@ def main():
     elif mod.FAMILY == "recsys":
         serve_mind(mod, args.steps)
     elif mod.FAMILY == "smscc":
-        serve_smscc(mod, args.steps)
+        serve_smscc(mod, args.steps, readers=args.readers)
     else:
         raise SystemExit(f"no serve path for family {mod.FAMILY}")
 
