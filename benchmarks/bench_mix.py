@@ -7,6 +7,9 @@ unit is the batch lane, so throughput is reported vs batch size B for:
   Coarse  coarse_apply       -- one op at a time, full recompute ("global
                                 lock" semantics: no locality exploited)
   SMSCC   dynamic.apply_batch -- B lanes, one unified localized repair
+  Client  repro.api.GraphClient -- the same B lanes as typed ops through
+                                the full public stack (facade + service
+                                scheduler + pipelined window)
 
 Mixes: --mix 50 (50/50 add/rem, Fig 4a), 90 (Fig 4b), 10 (Fig 4c).
 Variants: --no-vertex-ops restricts to edges (paper's `woDV` mode).
@@ -15,7 +18,9 @@ from __future__ import annotations
 
 import argparse
 
+from repro.api import GraphClient, updates_from_arrays
 from repro.core import baselines, dynamic
+from repro.core.service import SCCService
 from repro.data import pipeline
 from benchmarks import common
 
@@ -46,6 +51,20 @@ def run(mix=50, nv=2048, batches=(16, 64, 256, 1024), seq_ops=64,
             lambda o: dynamic.apply_batch(state0, o, cfg), ops,
             iters=iters)
         rows.append((f"mix{mix}", f"smscc_b{b}", b, round(b / t, 1),
+                     round(t * 1e3, 2)))
+
+    # full public stack: the same lanes as typed ops through a GraphClient
+    # session (sustained-service semantics, so repeated timing iterations
+    # legitimately mutate the service)
+    for b in batches:
+        ops = pipeline.op_stream(nv, b, step=1, add_frac=add_frac,
+                                 include_vertex_ops=include_vertex_ops)
+        typed = updates_from_arrays(ops.kind, ops.u, ops.v)
+        svc = SCCService(cfg, buckets=(b,), state=state0)
+        client = GraphClient(svc)
+        t, _ = common.time_fn(client.submit_many, typed, iters=iters)
+        client.close()
+        rows.append((f"mix{mix}", f"client_b{b}", b, round(b / t, 1),
                      round(t * 1e3, 2)))
     return rows
 

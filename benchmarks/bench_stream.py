@@ -2,20 +2,29 @@
 
 The paper (Fig 4/5) measures an *on-line* system: a fixed pool of update
 threads applies an unbounded stream while readers run SameSCC queries
-concurrently.  This bench drives :class:`repro.core.service.SCCService` --
-grow-and-replay, bucketed batch scheduling, the pipelined in-flight update
-window, periodic compaction -- with the paper's mix axes:
+concurrently.  This bench drives the serving stack through the typed
+public API (:class:`repro.api.GraphClient` over
+:class:`repro.core.service.SCCService`) -- grow-and-replay, bucketed batch
+scheduling, the pipelined in-flight update window, periodic compaction --
+with the paper's mix axes:
 
   update-heavy   90% inserts, no queries        (Fig 4b analogue)
   balanced       50/50 add/remove + queries     (Fig 4a analogue)
   query-heavy    mostly reader batches          (Fig 5 analogue)
 
-and then demonstrates the paper's headline *overlap* claim: the same
-update mix run once with serial query interleaving (`run_stream`) and once
-with a QueryBroker-fed reader pool (`run_concurrent_stream --readers N`).
-Combined (update+query) throughput with concurrent readers must exceed
-the serial baseline -- queries execute against the committed snapshot
-while the next update step is still in flight.
+then demonstrates the paper's headline *overlap* claim: the same update
+mix run once with serial query interleaving (`run_stream`) and once with
+per-reader client sessions over a QueryBroker dispatcher
+(`run_concurrent_stream --readers N`).  Combined (update+query)
+throughput with concurrent readers must exceed the serial baseline --
+queries execute against the committed snapshot while the next update step
+is still in flight.
+
+Finally the **client-overhead** section prices the facade itself: the
+same deterministic stream driven once through typed ops +
+``GraphClient.submit_many`` and once through the internal raw-array
+entry points, asserting the typed path keeps >= 85% of the internal
+path's combined ops/s (facade cost < 15%).
 
 Reported per mix: update ops/s, query ops/s, combined ops/s, number of
 compiled step shapes (bounded by 2 x bucket-count x capacity-growth count
@@ -28,6 +37,9 @@ grows, compactions.
 from __future__ import annotations
 
 import argparse
+import time
+
+import numpy as np
 
 from repro import configs
 from repro.core import graph_state as gs
@@ -81,6 +93,28 @@ def run(nv=4096, edge_capacity=4096, n_ops=16384, chunk=512,
     return rows
 
 
+def _warm_caches(fresh, chunk, n_queries):
+    """Warm the shared jit cache (step buckets + both query shapes at the
+    boot cfg) on a throwaway service, through the same typed-client path
+    the timed runs use, so neither timed run is charged compile time the
+    other gets for free; growth-minted configs compile identically in
+    both runs (same deterministic update stream)."""
+    from repro.api import GraphClient, Reachable, SameSCC
+    from repro.core.broker import QueryBroker
+
+    warm = fresh()
+    # same query-bucket registry as both timed drivers, so the compiled
+    # query shapes are all paid for here
+    client = GraphClient(warm, broker=QueryBroker(
+        warm, buckets=tuple(sorted({n_queries, min(32, n_queries)}))))
+    ops = stream.typed_op_stream(warm.cfg.n_vertices, chunk, step=0,
+                                 add_frac=0.5, seed=999)
+    client.submit_many(ops)
+    client.submit_many([SameSCC(0, 0)] * n_queries)
+    client.submit_many([Reachable(0, 0)] * min(32, n_queries))
+    client.close()
+
+
 def run_overlap(nv=4096, edge_capacity=4096, n_ops=16384, chunk=512,
                 buckets=(128, 512), n_queries=2048, readers=2, seed=0):
     """Serial-reader baseline vs concurrent reader pool on the SAME update
@@ -92,23 +126,10 @@ def run_overlap(nv=4096, edge_capacity=4096, n_ops=16384, chunk=512,
                            max_probes=64, max_outer=64, max_inner=128)
         return booted_service(cfg, buckets)
 
-    # warm the shared jit cache (step buckets + both query shapes at the
-    # boot cfg) on a throwaway service so neither timed run is charged
-    # compile time the other gets for free; growth-minted configs compile
-    # identically in both runs (same deterministic update stream)
-    import numpy as np
-
-    from repro.core import dynamic
-    warm = fresh()
-    warm.apply(np.full(chunk, dynamic.NOP, np.int32),
-               np.zeros(chunk, np.int32), np.zeros(chunk, np.int32))
-    warm.same_scc(np.zeros(n_queries, np.int32),
-                  np.zeros(n_queries, np.int32))
-    warm.reachable(np.zeros(32, np.int32), np.zeros(32, np.int32))
+    _warm_caches(fresh, chunk, n_queries)
 
     # both modes are scored on full wall clock (workload generation and
     # thread startup included) so the comparison is symmetric
-    import time
     t0 = time.perf_counter()
     serial = stream.run_stream(fresh(), n_ops=n_ops, add_frac=0.5,
                                query_frac=1.0, chunk=chunk,
@@ -134,19 +155,100 @@ def run_overlap(nv=4096, edge_capacity=4096, n_ops=16384, chunk=512,
     return rows
 
 
+def run_client_overhead(nv=4096, edge_capacity=4096, n_ops=8192,
+                        chunk=512, buckets=(128, 512), n_queries=1024,
+                        seed=0, reps=3, max_overhead=0.15):
+    """Price the typed facade: the same deterministic update+query stream
+    through (a) typed ops + ``GraphClient.submit_many`` and (b) the
+    internal raw-array entry points (``SCCService._apply_chunk`` +
+    direct snapshot queries) -- identical device work, so the delta is
+    pure client-layer overhead (op objects, encoding, broker futures).
+
+    Asserts the typed path sustains >= ``1 - max_overhead`` of the
+    internal path's combined ops/s (min-of-``reps`` wall times, plus a
+    small absolute slack so tiny smoke runs don't flake on scheduler
+    noise)."""
+    from repro.api import GraphClient, SameSCC
+    from repro.core.broker import QueryBroker
+    from repro.data import pipeline
+
+    smscc = configs.get("smscc")
+
+    def fresh():
+        cfg = smscc.config(n_vertices=nv, edge_capacity=edge_capacity,
+                           max_probes=64, max_outer=64, max_inner=128)
+        return booted_service(cfg, buckets)
+
+    n_chunks = n_ops // chunk
+    raw, typed, qpairs, typed_q = [], [], [], []
+    for step in range(n_chunks):
+        ops = pipeline.op_stream(nv, chunk, step=step, add_frac=0.5,
+                                 seed=seed)
+        arrs = (np.asarray(ops.kind), np.asarray(ops.u),
+                np.asarray(ops.v))
+        raw.append(arrs)
+        typed.append(stream.typed_op_stream(nv, chunk, step=step,
+                                            add_frac=0.5, seed=seed))
+        rng = np.random.default_rng(seed + step)
+        qu = rng.integers(0, nv, n_queries)
+        qv = rng.integers(0, nv, n_queries)
+        qpairs.append((qu, qv))
+        typed_q.append([SameSCC(int(a), int(b)) for a, b in zip(qu, qv)])
+
+    def time_direct():
+        svc = fresh()
+        t0 = time.perf_counter()
+        for arrs, (qu, qv) in zip(raw, qpairs):
+            svc._apply_chunk(*arrs)
+            svc.same_scc(qu, qv)
+        return time.perf_counter() - t0
+
+    def time_typed():
+        svc = fresh()
+        # broker bucket == query batch size so both paths run identical
+        # device shapes; only the facade differs
+        client = GraphClient(svc, broker=QueryBroker(
+            svc, buckets=(n_queries,)))
+        t0 = time.perf_counter()
+        for ops, qs in zip(typed, typed_q):
+            client.submit_many(ops)
+            client.submit_many(qs)
+        dt = time.perf_counter() - t0
+        client.close()
+        return dt
+
+    time_direct()  # shared-cache warmup for both paths' jit entries
+    time_typed()
+    t_direct = min(time_direct() for _ in range(reps))
+    t_typed = min(time_typed() for _ in range(reps))
+    total = n_chunks * (chunk + n_queries)
+    direct_ps = int(total / t_direct)
+    typed_ps = int(total / t_typed)
+    rows = [("internal_raw", total, direct_ps, round(t_direct, 4)),
+            ("typed_client", total, typed_ps, round(t_typed, 4)),
+            ("overhead_frac", "", "",
+             round(max(0.0, t_typed / t_direct - 1.0), 4))]
+    assert t_typed <= t_direct * (1 + max_overhead) + 0.05, (
+        f"GraphClient facade too expensive: {t_typed:.4f}s typed vs "
+        f"{t_direct:.4f}s internal "
+        f"({(t_typed / t_direct - 1) * 100:.1f}% > {max_overhead:.0%})")
+    return rows
+
+
 HEADER = ["mix", "ops", "ops_per_s", "queries", "queries_per_s",
           "combined_per_s", "compiled_shapes", "grows", "compactions",
           "final_capacity"]
 OVERLAP_HEADER = ["mode", "ops", "ops_per_s", "queries", "queries_per_s",
                   "combined_per_s", "readers"]
+OVERHEAD_HEADER = ["path", "ops", "combined_per_s", "wall_s"]
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CPU-friendly run (CI: exercises grow + "
-                         "replay + both mix extremes + reader overlap "
-                         "end-to-end)")
+                         "replay + both mix extremes + reader overlap + "
+                         "the facade-overhead bound end-to-end)")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale graph (slow; accelerator advised)")
     ap.add_argument("--readers", type=int, default=2,
@@ -161,6 +263,9 @@ def main():
         overlap = run_overlap(nv=256, edge_capacity=1024, n_ops=1024,
                               chunk=128, buckets=(32, 128), n_queries=256,
                               readers=args.readers)
+        overhead = run_client_overhead(nv=256, edge_capacity=1024,
+                                       n_ops=1024, chunk=128,
+                                       buckets=(32, 128), n_queries=256)
     elif args.full:
         rows = run(nv=2 ** 17, edge_capacity=2 ** 18, n_ops=2 ** 17,
                    chunk=4096, buckets=(1024, 4096), n_queries=2 ** 15)
@@ -168,11 +273,17 @@ def main():
                               n_ops=2 ** 17, chunk=4096,
                               buckets=(1024, 4096), n_queries=2 ** 15,
                               readers=args.readers)
+        overhead = run_client_overhead(nv=2 ** 17, edge_capacity=2 ** 18,
+                                       n_ops=2 ** 16, chunk=4096,
+                                       buckets=(1024, 4096),
+                                       n_queries=2 ** 14)
     else:
         rows = run()
         overlap = run_overlap(readers=args.readers)
+        overhead = run_client_overhead()
     common.emit(rows, HEADER)
     common.emit(overlap, OVERLAP_HEADER)
+    common.emit(overhead, OVERHEAD_HEADER)
 
 
 if __name__ == "__main__":

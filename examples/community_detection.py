@@ -1,45 +1,61 @@
 """The paper's §5.3 application: on-line community detection.
 
 A social-graph stream (80% membership checks / 20% friendship updates,
-paper Fig 5c) runs against the dynamic engine; every batch is atomic, and
-queries read a consistent snapshot (the wait-free-query analogue).
+paper Fig 5c) runs against the typed client API: updates and community
+queries (`SameSCC`, `CommunityOf`, `CommunitySizes`) all go through one
+:class:`repro.api.GraphClient` session, so every membership answer
+carries the generation stamp of the committed snapshot it read (the
+wait-free-query analogue) — no raw engine state ever reaches this driver.
 
     PYTHONPATH=src python examples/community_detection.py
 """
 import numpy as np
 
-from repro.core import community, dynamic, graph_state as gs
-from repro.data import pipeline
+from repro.api import AddEdge, CommunityOf, CommunitySizes, GraphClient, SameSCC
+from repro.core import graph_state as gs
+from repro.core.service import SCCService
+from repro.launch.stream import typed_op_stream
 
 NV = 1024
 cfg = gs.GraphConfig(n_vertices=NV, edge_capacity=2 ** 13, max_probes=128,
                      max_outer=64, max_inner=128)
 
-# bootstrap a random social graph
+# bootstrap a random social graph through the client (every user starts as
+# a singleton community; friendships stream in as typed ops)
 rng = np.random.default_rng(0)
-state = gs.from_arrays(cfg, rng.integers(0, NV, 3000),
-                       rng.integers(0, NV, 3000))
-state = dynamic.recompute(state, cfg)
-print(f"bootstrap: {int(state.n_ccs)} communities over "
-      f"{int(gs.live_vertex_count(state))} users")
+svc = SCCService(cfg, buckets=(256, 1024), state=gs.all_singletons(cfg))
+client = GraphClient(svc)
+client.submit_many([AddEdge(int(a), int(b)) for a, b in
+                    zip(rng.integers(0, NV, 3000),
+                        rng.integers(0, NV, 3000))])
+st = client.stats()
+print(f"bootstrap: {st['n_ccs']} communities over {NV} users "
+      f"(gen {st['gen']})")
 
 for step in range(5):
-    # 20% updates (friend/unfriend) -- one atomic batch
-    ops = pipeline.op_stream(NV, 64, step=step, add_frac=0.7,
-                             include_vertex_ops=False)
-    state, ok = dynamic.apply_batch(state, ops, cfg)
-    # 80% queries -- one vectorized gather over the same snapshot
+    # 20% updates (friend/unfriend) -- one typed chunk through the client
+    ops = typed_op_stream(NV, 64, step=step, add_frac=0.7,
+                          include_vertex_ops=False)
+    accepted = sum(r.value for r in client.submit_many(ops))
+    # 80% queries -- coalesced by the broker against one committed snapshot
     qu = rng.integers(0, NV, 256)
     qv = rng.integers(0, NV, 256)
-    same = community.check_scc(state, qu, qv)
-    rep, size = community.largest_community(state)
-    print(f"step {step}: applied {int(ok.sum())}/64 updates, "
-          f"{int(same.sum())}/256 pairs share a community, "
-          f"largest community = {int(size)} users (rep {int(rep)}), "
-          f"total = {int(state.n_ccs)}")
+    res = client.submit_many(
+        [SameSCC(int(a), int(b)) for a, b in zip(qu, qv)]
+        + [CommunitySizes()])
+    same, sizes = res[:-1], res[-1]
+    rep = int(np.argmax(sizes.value))
+    print(f"step {step}: applied {accepted}/64 updates, "
+          f"{sum(r.value for r in same)}/256 pairs share a community, "
+          f"largest community = {int(sizes.value[rep])} users (rep {rep}), "
+          f"total = {client.stats()['n_ccs']} @gen {sizes.gen}")
 
-# friend suggestions: same-community cohort matrix
-cohort = np.asarray(rng.integers(0, NV, 8))
-pairs = community.same_community_pairs(state, cohort)
-print("suggestion matrix for cohort", cohort.tolist())
-print(np.asarray(pairs).astype(int))
+# friend suggestions: same-community cohort matrix from CommunityOf labels
+cohort = [int(x) for x in rng.integers(0, NV, 8)]
+labels = client.submit_many([CommunityOf(u) for u in cohort])
+lab = np.asarray([r.value for r in labels])
+ok = lab < NV
+pairs = (lab[:, None] == lab[None, :]) & ok[:, None] & ok[None, :]
+print("suggestion matrix for cohort", cohort)
+print(pairs.astype(int))
+client.close()

@@ -1,13 +1,14 @@
 """End-to-end driver: a fault-tolerant dynamic-SCC serving loop.
 
-This is the paper's system run the way it would run in production, now on
-top of the streaming service layer (:mod:`repro.core.service`):
-  * a sustained stream of update chunks applied through the service's
-    pipelined in-flight window, overlapped with **concurrent reader
-    threads** issuing coalesced snapshot queries through a
-    :class:`repro.core.broker.QueryBroker` (the paper's mixed workload,
-    Fig 4/5), all cut into bucketed static batch shapes so compilation
-    count stays bounded,
+This is the paper's system run the way it would run in production, now
+entirely behind the typed public API (:class:`repro.api.GraphClient`):
+  * a sustained stream of typed update ops applied through an updater
+    client session (the service's pipelined in-flight window underneath),
+    overlapped with **concurrent reader sessions** — one ``GraphClient``
+    per reader thread over a shared dispatcher-fed
+    :class:`repro.core.broker.QueryBroker` — issuing coalesced typed
+    snapshot queries (the paper's mixed workload, Fig 4/5), all cut into
+    bucketed static batch shapes so compilation count stays bounded,
   * **grow-and-replay**: the edge table starts deliberately small; when
     probe-bound overflow drops an insert, the service rehashes into a
     larger capacity and replays it -- no edge is ever lost,
@@ -15,7 +16,9 @@ top of the streaming service layer (:mod:`repro.core.service`):
     "database") with crash-safe restore -- kill it mid-run and restart to
     see it resume at the checkpointed chunk cursor.  The checkpoint
     records the (possibly grown) edge capacity so restore rebuilds the
-    right template shapes,
+    right template shapes, and the generation counter so restore can
+    assert **gen continuity**: the restored client resumes exactly at the
+    committed generation the checkpoint saw,
   * throughput + straggler accounting per chunk; GC (edge-table
     compaction) happens inside the service when tombstones pile up.
 
@@ -32,11 +35,12 @@ import time
 
 import numpy as np
 
+from repro.api import AddEdge, GraphClient, Reachable, SameSCC
 from repro.ckpt import checkpoint
-from repro.core import dynamic, graph_state as gs
+from repro.core import graph_state as gs
 from repro.core.broker import QueryBroker
 from repro.core.service import SCCService
-from repro.data import pipeline
+from repro.launch.stream import typed_op_stream
 
 NV = 4096
 BATCH = 256
@@ -45,40 +49,43 @@ CKPT_DIR = "/tmp/smscc_serving_ckpt"
 CKPT_EVERY = 10
 
 
-def build_service(cfg: gs.GraphConfig, nv: int, batch: int, preload: int):
-    """Preloaded service: random digraph loaded THROUGH the service so the
+def preload_graph(client: GraphClient, nv: int, preload: int):
+    """Preload a random digraph THROUGH the typed client so the
     deliberately undersized table grows (and replays) instead of silently
     dropping edges the way a raw bulk insert would."""
     rng = np.random.default_rng(0)
-    svc = SCCService(cfg, buckets=(64, batch), state=gs.all_singletons(cfg))
-    svc.apply(np.full(preload, dynamic.ADD_EDGE, np.int32),
-              rng.integers(0, nv, preload), rng.integers(0, nv, preload))
-    st = svc.stats()
+    client.submit_many([AddEdge(int(a), int(b)) for a, b in
+                        zip(rng.integers(0, nv, preload),
+                            rng.integers(0, nv, preload))])
+    st = client.stats()
     print(f"[preload] {st['live_edges']} edges | capacity "
           f"{st['edge_capacity']} (grows={st['grows']}, "
           f"replayed={st['replayed_ops']})")
-    return svc
 
 
-def reader_loop(broker: QueryBroker, stop: threading.Event, nv: int,
+def reader_loop(client: GraphClient, stop: threading.Event, nv: int,
                 n_queries: int, seed: int, out: dict):
-    """Free-running reader: coalesced SameSCC (+ occasional reachability)
-    batches; checks its observed generations never go backwards.  Any
-    failure is stashed in ``out`` and re-raised by the main thread (a
-    daemon thread's own traceback cannot fail the CI smoke)."""
+    """Free-running reader session: coalesced typed SameSCC (+ occasional
+    Reachable) batches; checks its observed generations never go
+    backwards.  Any failure is stashed in ``out`` and re-raised by the
+    main thread (a daemon thread's own traceback cannot fail the CI
+    smoke)."""
     rng = np.random.default_rng(seed)
     last_gen = -1
     try:
         while not stop.is_set():
             qu = rng.integers(0, nv, n_queries)
             qv = rng.integers(0, nv, n_queries)
-            snap = broker.same_scc(qu, qv)
-            assert snap.gen >= last_gen, "reader saw generation regress"
-            last_gen = snap.gen
+            res = client.submit_many(
+                [SameSCC(int(a), int(b)) for a, b in zip(qu, qv)])
+            assert res[0].gen >= last_gen, "reader saw generation regress"
+            last_gen = res[0].gen
             out["queries"] += n_queries
             if rng.random() < 0.25:
-                snap = broker.reachable(qu[:64], qv[:64])
-                last_gen = max(last_gen, snap.gen)
+                res = client.submit_many(
+                    [Reachable(int(a), int(b)) for a, b in
+                     zip(qu[:64], qv[:64])])
+                last_gen = max(last_gen, res[0].gen)
                 out["queries"] += 64
     except BaseException as e:
         out["error"] = e
@@ -116,11 +123,13 @@ def main():
 
     # crash recovery: the meta leaves restore first (extra npz keys are
     # ignored), telling us what edge capacity the state template needs --
-    # the table may have grown beyond the boot config before the crash.
+    # the table may have grown beyond the boot config before the crash --
+    # and what committed generation the checkpoint captured.
     try:
         meta, _ = checkpoint.restore(
             ckpt_dir, {"cursor": np.int64(0),
-                       "edge_capacity": np.int64(cfg.edge_capacity)})
+                       "edge_capacity": np.int64(cfg.edge_capacity),
+                       "gen": np.int64(0)})
     except KeyError:  # checkpoint from an older format: start fresh, and
         # clear the stale files so a future torn-LATEST fallback cannot
         # resurrect them over newer new-format progress
@@ -132,23 +141,38 @@ def main():
         cap = int(meta["edge_capacity"])
         ck_cfg = dataclasses.replace(cfg, edge_capacity=cap)
         tpl = {"state": gs.empty(ck_cfg), "cursor": np.int64(0),
-               "edge_capacity": np.int64(cap)}
+               "edge_capacity": np.int64(cap), "gen": np.int64(0)}
         restored, _ = checkpoint.restore(ckpt_dir, tpl)
         svc = SCCService(ck_cfg, buckets=(64, batch),
                          state=restored["state"])
         cursor = int(restored["cursor"])
-        print(f"[recovery] resumed at chunk {cursor} (capacity {cap})")
-    if svc is None:  # no (usable) checkpoint: pay the preload only now
-        svc = build_service(cfg, nv, batch, preload)
+        # gen continuity: the restored service (and therefore every new
+        # client session, whose read-your-writes token seeds from it)
+        # resumes exactly at the generation the checkpoint committed.
+        saved_gen = int(meta["gen"])
+        assert svc.gen == saved_gen == int(restored["state"].gen), (
+            f"generation discontinuity across restore: service at "
+            f"{svc.gen}, checkpoint recorded {saved_gen}")
+        print(f"[recovery] resumed at chunk {cursor} (capacity {cap}, "
+              f"gen {saved_gen})")
+    if svc is None:
+        svc = SCCService(cfg, buckets=(64, batch),
+                         state=gs.all_singletons(cfg))
 
-    # the reader path: a broker-fed thread pool querying the committed
-    # snapshot while the update pipeline runs
+    # one shared broker; per-session typed clients on top
     broker = QueryBroker(svc, buckets=(64, queries)).start()
+    updater = GraphClient(svc, broker=broker)
+    if cursor == 0 and int(gs.live_edge_count(svc.state)) == 0:
+        preload_graph(updater, nv, preload)  # no usable checkpoint
+    assert updater.token == svc.gen  # session token tracks the commit line
+
+    # the reader path: per-thread client sessions over the shared broker
     stop = threading.Event()
     reader_stats = [{"queries": 0} for _ in range(args.readers)]
     readers = [threading.Thread(
-        target=reader_loop, args=(broker, stop, nv, queries, 100 + i,
-                                  reader_stats[i]), daemon=True)
+        target=reader_loop,
+        args=(GraphClient(svc, broker=broker), stop, nv, queries, 100 + i,
+              reader_stats[i]), daemon=True)
         for i in range(args.readers)]
     for t in readers:
         t.start()
@@ -158,10 +182,9 @@ def main():
     t_start = time.perf_counter()
     try:
         for step in range(cursor, steps):
-            ops = pipeline.op_stream(nv, batch, step=step, add_frac=0.7)
+            ops = typed_op_stream(nv, batch, step=step, add_frac=0.7)
             t0 = time.perf_counter()
-            svc.apply(np.asarray(ops.kind), np.asarray(ops.u),
-                      np.asarray(ops.v))
+            updater.submit_many(ops)
             dt = time.perf_counter() - t0
             times.append(dt)
             med = sorted(times[-50:])[len(times[-50:]) // 2]
@@ -170,11 +193,12 @@ def main():
                 print(f"[straggler] chunk {step}: {dt*1e3:.0f}ms vs median "
                       f"{med*1e3:.0f}ms")
             if (step + 1) % ckpt_every == 0:
-                st = svc.stats()
+                st = updater.stats()
                 checkpoint.save(
                     ckpt_dir, step + 1,
                     {"state": svc.state, "cursor": np.int64(step + 1),
-                     "edge_capacity": np.int64(svc.cfg.edge_capacity)})
+                     "edge_capacity": np.int64(svc.cfg.edge_capacity),
+                     "gen": np.int64(svc.gen)})
                 print(f"[ckpt] chunk {step+1} | {batch/med:.0f} updates/s"
                       f" | {st['n_ccs']} SCCs | gen={st['gen']}"
                       f" | capacity={st['edge_capacity']}"
@@ -193,14 +217,16 @@ def main():
     total = time.perf_counter() - t_start
     done = steps - cursor
     n_queries = sum(r["queries"] for r in reader_stats)
+    st = updater.stats()
     print(f"\nserved {done} chunks in {total:.1f}s | "
           f"{done*batch/total:.0f} updates/s | "
           f"{n_queries/total:.0f} queries/s ({args.readers} readers, "
-          f"{broker.stats()['coalescing']:.0f} coalesced/flush) | "
+          f"{st['coalescing']:.0f} coalesced/flush) | "
           f"stragglers={stragglers} | "
-          f"compiled shapes={svc.compile_count} | "
-          f"pipelined={svc.pipelined_chunks} "
-          f"fallback={svc.fallback_chunks}")
+          f"compiled shapes={st['compile_count']} | "
+          f"pipelined={st['pipelined_chunks']} "
+          f"fallback={st['fallback_chunks']} "
+          f"gen_waits={st['gen_waits']}")
 
 
 if __name__ == "__main__":

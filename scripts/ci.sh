@@ -21,6 +21,19 @@ grep -ohE '`[a-zA-Z0-9_/.-]+\.(py|sh|md)`' docs/*.md \
     fi
 done
 
+echo "== api gate: no raw engine call sites outside src/repro/core =="
+# the typed repro.api.GraphClient is the only public surface: raw
+# (kind, u, v) .apply( chunks and string-kind broker submit( calls must
+# not reappear in drivers, examples, or benchmarks
+if grep -rnE '\.apply\(' examples benchmarks src/repro/launch --include='*.py'; then
+    echo "legacy raw .apply( call site found -- use repro.api.GraphClient" >&2
+    exit 1
+fi
+if grep -rnE '\.submit\([[:space:]]*["'\'']' examples benchmarks src/repro/launch --include='*.py'; then
+    echo "legacy string-kind submit( call site found -- use typed repro.api ops" >&2
+    exit 1
+fi
+
 echo "== tier-1 tests (pytest.ini defaults to -m 'not slow') =="
 python -m pytest -x -q tests/
 

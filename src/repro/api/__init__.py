@@ -1,0 +1,27 @@
+# The public client surface of the repo: a typed request/response API over
+# the SCCService update pipeline and the QueryBroker reader path.  Callers
+# build ops from repro.api (AddEdge, SameSCC, ...) and submit them through
+# a GraphClient; the raw (kind, u, v) lane convention and string query
+# kinds are internal to src/repro/core (enforced by scripts/ci.sh).
+from repro.api.client import (  # noqa: F401
+    AtLeast,
+    Consistency,
+    GraphClient,
+    Result,
+)
+from repro.api.ops import (  # noqa: F401
+    AddEdge,
+    AddVertex,
+    CommunityOf,
+    CommunitySizes,
+    Op,
+    QueryOp,
+    Reachable,
+    RemoveEdge,
+    RemoveVertex,
+    SameSCC,
+    SccMembers,
+    UpdateOp,
+    encode_updates,
+    updates_from_arrays,
+)

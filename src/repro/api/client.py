@@ -1,0 +1,317 @@
+"""`GraphClient`: the unified request/response surface of the repo.
+
+The paper's SMSCC is a *linearizable concurrent graph object*: one
+abstract object against which a pool of threads issues updates and
+wait-free queries, every response justified by some sequential history
+(arXiv:1804.01276, §2; the object-interface framing is arXiv:1710.08296).
+Internally this repo implements that object as two cooperating halves — the
+:class:`repro.core.service.SCCService` update pipeline and the
+:class:`repro.core.broker.QueryBroker` reader path — but neither half is
+the *object*: callers used to juggle raw ``(kind, u, v)`` arrays for one
+and string query kinds for the other.  ``GraphClient`` is the missing
+facade:
+
+* **one vocabulary** — every request is a typed op from
+  :mod:`repro.api.ops`; homogeneous runs are packed into the compiled
+  core's batch shapes by the encoders, so the engine is untouched;
+* **one response shape** — every answer is a :class:`Result` carrying the
+  generation stamp of the committed snapshot that justified it (the
+  API-level rendering of the paper's linearization points);
+* **explicit consistency** — reads run under
+  :data:`Consistency.LATEST` (any committed generation — the historical
+  behaviour), :meth:`Consistency.AT_LEAST` (block until the committed
+  generation covers an explicit floor), or
+  :data:`Consistency.READ_YOUR_WRITES` (block until the committed
+  generation covers the client's last acknowledged update — per-client
+  token, maintained automatically).
+
+A ``GraphClient`` instance is a *session*: use one per logical caller
+(e.g. one per reader thread).  Many clients may share one service and one
+broker — updates serialize on the service's update lock, queries coalesce
+in the broker.  Per-client submission order is preserved across the
+update/query boundary: updates are acknowledged only after their chunk
+commits, and a later read's floor (its consistency level) can never admit
+a snapshot older than the session has already observed under
+READ_YOUR_WRITES.
+"""
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import Future
+from typing import Any, Iterable, Iterator, List, NamedTuple, Sequence, \
+    Tuple
+
+import numpy as np
+
+from repro.api.ops import (CommunityOf, CommunitySizes, Op, QueryOp,
+                           SccMembers, UpdateOp, encode_updates)
+
+__all__ = ["GraphClient", "Result", "Consistency", "AtLeast"]
+
+
+# -------------------------------------------------------- consistency ----
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class _Level:
+    name: str
+
+    def __repr__(self):
+        return f"Consistency.{self.name}"
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class AtLeast:
+    """Read floor: answer only at a committed generation ``>= gen``."""
+    gen: int
+
+    def __repr__(self):
+        return f"Consistency.AT_LEAST({self.gen})"
+
+
+class Consistency:
+    """The read-consistency levels of the client API.
+
+    ===================  ====================================================
+    level                guarantee for the answering snapshot's generation
+    ===================  ====================================================
+    ``LATEST``           any committed generation (never blocks)
+    ``AT_LEAST(g)``      ``gen >= g`` — blocks until such a commit exists
+    ``READ_YOUR_WRITES`` ``gen >= `` the client's last acked update
+                         generation (its session token) — blocks until the
+                         client's own writes are visible
+    ===================  ====================================================
+
+    All levels read *committed* snapshots only; stronger levels narrow
+    which committed generations may answer, they never expose in-flight
+    state.
+    """
+    LATEST = _Level("LATEST")
+    READ_YOUR_WRITES = _Level("READ_YOUR_WRITES")
+    AT_LEAST = AtLeast
+
+
+# ------------------------------------------------------------- result ----
+
+
+class Result(NamedTuple):
+    """One op's response: the value plus its generation stamp.
+
+    ``gen`` is the generation of the committed snapshot the value was
+    computed against (queries) or that the op's chunk committed (updates).
+    Update values are the acceptance booleans of the paper's method
+    contracts; query values are per-op scalars/arrays (see
+    :mod:`repro.api.ops` for the table).  (A NamedTuple, not a dataclass:
+    results are minted per op on the hot path, and tuple construction is
+    what keeps the facade inside its benchmarked overhead bound.)
+    """
+    op: Op
+    value: Any
+    gen: int
+
+
+# ------------------------------------------------------------- client ----
+
+
+def _runs(ops: Iterable[Op]) -> Iterator[Tuple[str, List[Op]]]:
+    """Maximal homogeneous runs: consecutive updates batch into one service
+    chunk; consecutive same-kind queries coalesce into one broker request.
+    Run boundaries are exactly the client's ordering obligations."""
+    run: List[Op] = []
+    cat = None
+    for op in ops:
+        if isinstance(op, UpdateOp):
+            c = "update"
+        elif isinstance(op, QueryOp):
+            c = op.BROKER_KIND
+        else:
+            raise TypeError(f"not an api op: {op!r}")
+        if c != cat and run:
+            yield cat, run
+            run = []
+        cat = c
+        run.append(op)
+    if run:
+        yield cat, run
+
+
+class GraphClient:
+    """Typed client session over one SCCService (+ QueryBroker).
+
+    ``broker=None`` makes the client own a private broker in inline mode
+    (flushes happen on the submitting thread — single-threaded callers and
+    tests need no dispatcher).  Pass a shared, started broker to coalesce
+    queries across many client sessions.  A client instance is not itself
+    thread-safe (it carries the per-session read-your-writes token); give
+    each thread its own client over the shared service/broker.
+    """
+
+    def __init__(self, service, broker=None,
+                 consistency=Consistency.LATEST):
+        from repro.core.broker import QueryBroker
+        self._svc = service
+        self._broker = QueryBroker(service) if broker is None else broker
+        self._owns_broker = broker is None
+        self._consistency = consistency
+        # read-your-writes token: floor generation for RYW reads.  Seeded
+        # with the creation-time committed gen (already committed, so it
+        # never blocks) and advanced to each acked update's commit gen.
+        self._token = int(service.gen)
+        self.updates_submitted = 0
+        self.queries_submitted = 0
+
+    # ------------------------------------------------------- properties --
+
+    @property
+    def service(self):
+        return self._svc
+
+    @property
+    def broker(self):
+        return self._broker
+
+    @property
+    def gen(self) -> int:
+        """Latest committed generation of the underlying service."""
+        return int(self._svc.gen)
+
+    @property
+    def token(self) -> int:
+        """The session's read-your-writes floor (last acked update gen)."""
+        return self._token
+
+    # -------------------------------------------------------- submission --
+
+    def submit(self, op: Op, consistency=None) -> "Future[Result]":
+        """Issue one op; resolves to its :class:`Result`.
+
+        Updates are acknowledged synchronously (the returned future is
+        already done — the chunk committed).  Queries resolve when the
+        broker flushes: immediately on this thread in inline mode, or
+        asynchronously when a dispatcher is running.
+        """
+        fut: Future = Future()
+        if isinstance(op, UpdateOp):
+            fut.set_result(self._apply_updates([op])[0])
+            return fut
+        if not isinstance(op, QueryOp):
+            raise TypeError(f"not an api op: {op!r}")
+        min_gen = self._min_gen(consistency)
+        bfut = self._submit_query_run(op.BROKER_KIND, [op], min_gen)
+        self.queries_submitted += 1
+        if self._broker.dispatching:
+            def _chain(f):
+                try:
+                    fut.set_result(self._result_of(op, f.result(), 0))
+                except BaseException as e:  # surfaced via fut.result()
+                    fut.set_exception(e)
+            bfut.add_done_callback(_chain)
+        else:
+            snap = self._broker.resolve(bfut, min_gen=min_gen)
+            fut.set_result(self._result_of(op, snap, 0))
+        return fut
+
+    def submit_many(self, ops: Sequence[Op], consistency=None
+                    ) -> List[Result]:
+        """Issue a mixed op sequence; returns one :class:`Result` per op,
+        in submission order.
+
+        Consecutive updates are packed into one service chunk (one commit,
+        one shared stamp); consecutive same-kind queries coalesce into one
+        broker request.  Runs execute strictly in order, so generation
+        stamps returned to this client are monotone non-decreasing across
+        the whole sequence — and under READ_YOUR_WRITES every query stamp
+        is ``>=`` the session token at its submission.
+        """
+        results: List[Result] = []
+        for cat, run in _runs(ops):
+            if cat == "update":
+                results.extend(self._apply_updates(run))
+                continue
+            min_gen = self._min_gen(consistency)
+            bfut = self._submit_query_run(cat, run, min_gen)
+            self.queries_submitted += len(run)
+            snap = self._broker.resolve(bfut, min_gen=min_gen)
+            # run-level value decode (one C-level conversion per run, not
+            # one isinstance chain + numpy index per op)
+            gen = int(snap.gen)
+            if cat == "community_sizes":
+                hist = np.asarray(snap.value)
+                results.extend(Result(op, hist, gen) for op in run)
+            elif cat == "scc_members":
+                masks = np.asarray(snap.value)
+                results.extend(Result(op, masks[i], gen)
+                               for i, op in enumerate(run))
+            else:  # bool / int lanes
+                vals = snap.value.tolist()
+                results.extend(Result(op, val, gen)
+                               for op, val in zip(run, vals))
+        return results
+
+    # ---------------------------------------------------------- internals --
+
+    def _min_gen(self, consistency) -> int:
+        c = self._consistency if consistency is None else consistency
+        if c is Consistency.LATEST:
+            return 0
+        if c is Consistency.READ_YOUR_WRITES:
+            return self._token
+        if isinstance(c, AtLeast):
+            return int(c.gen)
+        raise TypeError(f"unknown consistency level: {c!r}")
+
+    def _apply_updates(self, run: List[Op]) -> List[Result]:
+        kind, u, v = encode_updates(run)
+        ok, gen = self._svc._apply_ops(kind, u, v)
+        self._token = max(self._token, gen)
+        self.updates_submitted += len(run)
+        return [Result(op, val, gen)
+                for op, val in zip(run, np.asarray(ok).tolist())]
+
+    def _submit_query_run(self, kind: str, run: List[Op], min_gen: int):
+        if kind == "community_sizes":
+            # one histogram per flush answers the whole run
+            return self._broker.submit(kind, [0], min_gen=min_gen)
+        u = [op.u for op in run]
+        if kind in ("scc_members", "community_of"):
+            return self._broker.submit(kind, u, min_gen=min_gen)
+        return self._broker.submit(kind, u, [op.v for op in run],
+                                   min_gen=min_gen)
+
+    @staticmethod
+    def _result_of(op: Op, snap, i: int) -> Result:
+        if isinstance(op, CommunitySizes):
+            value: Any = np.asarray(snap.value)
+        elif isinstance(op, SccMembers):
+            value = np.asarray(snap.value[i])
+        elif isinstance(op, CommunityOf):
+            value = int(snap.value[i])
+        else:
+            value = bool(snap.value[i])
+        return Result(op, value, int(snap.gen))
+
+    # ---------------------------------------------------------- telemetry --
+
+    def stats(self) -> dict:
+        """One unified telemetry dict: service (pipelined/fallback chunks,
+        grows, compile bound), broker (coalesced flushes, gen waits), and
+        session counters."""
+        s = dict(self._svc.stats())
+        s.update(self._broker.stats())
+        s.update(client_updates=self.updates_submitted,
+                 client_queries=self.queries_submitted,
+                 ryw_token=self._token)
+        return s
+
+    # ---------------------------------------------------------- lifecycle --
+
+    def close(self):
+        """Stop the private broker (no-op for a shared one)."""
+        if self._owns_broker:
+            self._broker.stop()
+
+    def __enter__(self) -> "GraphClient":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

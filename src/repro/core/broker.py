@@ -6,7 +6,10 @@ and are wait-free: a query never blocks an update and always observes a
 consistent state.  Our compiled analogue: reader threads hand their point
 queries to a :class:`QueryBroker`, which coalesces everything pending into
 one padded batched device call per query kind against a single *pinned*
-committed snapshot, then distributes the generation-stamped answers.
+committed snapshot, then distributes the generation-stamped answers.  The
+paper's §5.3 community application rides the same path: ``community_of``
+(blongsToCommunity) and ``community_sizes`` are broker kinds, not
+raw-state helpers.
 
 Consistency contract (see ``docs/SERVICE_API.md``):
 
@@ -17,6 +20,12 @@ Consistency contract (see ``docs/SERVICE_API.md``):
 * the snapshot is pinned *after* the pending set is collected, so a
   reader that saw generation ``g`` and then submits again can only be
   answered at a generation ``>= g`` (monotone reads per reader);
+* **gen-wait hook**: a request may carry ``min_gen`` -- the floor behind
+  the client API's ``AT_LEAST`` / ``READ_YOUR_WRITES`` consistency
+  levels.  A flush whose pinned generation is below a request's floor
+  defers that request (re-queued, ``gen_waits`` telemetry) and answers it
+  on a later flush once the service commits past the floor; requests
+  whose floor is already covered are never delayed by waiting ones;
 * padding lanes target vertex 0 on the snapshot but their results are
   discarded before distribution, so they can never alias a real answer.
 
@@ -24,12 +33,18 @@ Compilations stay bounded: coalesced batches are cut/padded to the
 broker's own bucket registry (the same ``prefill_bs{N}`` trick as the
 update path), so query-step compiles are at most ``len(buckets)`` per
 query kind per graph config.
+
+This module is the *internal* reader surface: multi-threaded callers
+should hold a :class:`repro.api.GraphClient` per session rather than
+calling the string-kind ``submit`` directly (the CI gate rejects
+string-kind submits outside ``src/repro/core``).
 """
 from __future__ import annotations
 
 import threading
 from concurrent.futures import Future
-from typing import Dict, List, Sequence, Tuple
+from concurrent.futures import TimeoutError as _FutureTimeout
+from typing import Dict, List, NamedTuple, Sequence, Set
 
 import numpy as np
 
@@ -37,7 +52,15 @@ from repro.core import service as svc_mod
 
 __all__ = ["QueryBroker"]
 
-_KINDS = ("same_scc", "reachable", "scc_members")
+_KINDS = ("same_scc", "reachable", "scc_members", "community_of",
+          "community_sizes")
+
+
+class _Req(NamedTuple):
+    u: np.ndarray
+    v: np.ndarray
+    min_gen: int
+    fut: Future
 
 
 class QueryBroker:
@@ -58,21 +81,26 @@ class QueryBroker:
         self._svc = service
         self._sched = BucketedScheduler(buckets)
         self._cv = threading.Condition()
-        self._pending: Dict[str, List[Tuple[np.ndarray, np.ndarray,
-                                            Future]]] = {
-            k: [] for k in _KINDS}
+        self._pending: Dict[str, List[_Req]] = {k: [] for k in _KINDS}
         self._thread: threading.Thread | None = None
         self._stopping = False
-        # telemetry
+        # telemetry; _waited tracks requests already counted in gen_waits
+        # so flush retries do not re-count the same deferred query
         self.flushes = 0
         self.served = 0
         self.max_coalesced = 0
+        self.gen_waits = 0
+        self._waited: Set[Future] = set()
 
     # ------------------------------------------------------- submission ---
 
-    def submit(self, kind: str, u, v=None) -> Future:
+    def submit(self, kind: str, u, v=None, min_gen: int = 0) -> Future:
         """Queue a query batch; returns a Future resolving to a
-        :class:`repro.core.service.Snapshot`."""
+        :class:`repro.core.service.Snapshot`.
+
+        ``min_gen`` is the consistency floor: the answer's generation is
+        guaranteed ``>= min_gen`` (the request waits for such a commit).
+        """
         assert kind in _KINDS, f"unknown query kind {kind!r}"
         u = np.atleast_1d(np.asarray(u, np.int32))
         v = np.zeros_like(u) if v is None \
@@ -82,35 +110,82 @@ class QueryBroker:
         with self._cv:
             if self._stopping:
                 raise RuntimeError("QueryBroker is stopped")
-            self._pending[kind].append((u, v, fut))
+            self._pending[kind].append(_Req(u, v, int(min_gen), fut))
             self._cv.notify()
         return fut
 
-    def same_scc(self, u, v) -> svc_mod.Snapshot:
+    def same_scc(self, u, v, min_gen: int = 0) -> svc_mod.Snapshot:
         """Blocking SameSCC through the coalescer."""
-        return self._resolve(self.submit("same_scc", u, v))
+        return self.resolve(self.submit("same_scc", u, v, min_gen=min_gen),
+                            min_gen=min_gen)
 
-    def reachable(self, u, v) -> svc_mod.Snapshot:
+    def reachable(self, u, v, min_gen: int = 0) -> svc_mod.Snapshot:
         """Blocking reachability through the coalescer."""
-        return self._resolve(self.submit("reachable", u, v))
+        return self.resolve(
+            self.submit("reachable", u, v, min_gen=min_gen),
+            min_gen=min_gen)
 
-    def scc_members(self, u) -> svc_mod.Snapshot:
+    def scc_members(self, u, min_gen: int = 0) -> svc_mod.Snapshot:
         """Blocking membership-mask query; value is bool[Q, NV]."""
-        return self._resolve(self.submit("scc_members", u))
+        return self.resolve(
+            self.submit("scc_members", u, min_gen=min_gen),
+            min_gen=min_gen)
 
-    def _resolve(self, fut: Future) -> svc_mod.Snapshot:
-        if self._thread is None or not self._thread.is_alive():
-            # inline mode: some thread must drain the queue; a concurrent
-            # flush may already have taken our request, in which case this
-            # flush is a cheap no-op and result() waits for the other one.
-            self.flush()
+    def community_of(self, u, min_gen: int = 0) -> svc_mod.Snapshot:
+        """Blocking community-id query; value is int32[Q] (sentinel
+        ``n_vertices`` for absent ids)."""
+        return self.resolve(
+            self.submit("community_of", u, min_gen=min_gen),
+            min_gen=min_gen)
+
+    def community_sizes(self, min_gen: int = 0) -> svc_mod.Snapshot:
+        """Blocking community-size histogram; value is int32[NV]."""
+        return self.resolve(
+            self.submit("community_sizes", [0], min_gen=min_gen),
+            min_gen=min_gen)
+
+    @property
+    def dispatching(self) -> bool:
+        """True when a background dispatcher thread is draining queries."""
+        t = self._thread
+        return t is not None and t.is_alive()
+
+    def resolve(self, fut: Future, min_gen: int = 0) -> svc_mod.Snapshot:
+        """Drive ``fut`` to completion and return its Snapshot.
+
+        With a dispatcher running this just waits.  In inline mode some
+        thread must drain the queue: flush here, waiting for the service
+        to commit past ``min_gen`` first when the request carries a floor
+        (a concurrent flush may already have taken the request, in which
+        case our flush is a cheap no-op and ``result()`` waits for the
+        other one).
+        """
+        while not fut.done() and not self.dispatching:
+            if min_gen:
+                self._svc.wait_for_gen(min_gen, timeout=0.5)
+            served = self.flush()
+            if fut.done():
+                break
+            if served == 0 and (not min_gen or self._svc.gen >= min_gen):
+                # nothing here we could serve: either another thread's
+                # flush owns our request (its result is imminent), or our
+                # own flush re-queued it and a commit raced past the
+                # floor between the pin and this check -- wait briefly,
+                # then loop so the next flush serves the re-queued case
+                # rather than assuming the former (which would hang).
+                try:
+                    return fut.result(timeout=0.05)
+                except _FutureTimeout:
+                    continue
         return fut.result()
 
     # ---------------------------------------------------------- flushing --
 
-    def flush(self) -> int:
-        """Answer everything pending against ONE pinned committed snapshot;
-        returns the number of point queries served."""
+    def flush(self, fail_waiting: bool = False) -> int:
+        """Answer everything pending whose consistency floor the pinned
+        committed snapshot covers; returns the number of point queries
+        served.  Requests still waiting on a commit are re-queued (or
+        failed, with ``fail_waiting=True`` -- the stop path)."""
         with self._cv:
             batch = {k: reqs for k, reqs in self._pending.items() if reqs}
             for k in batch:
@@ -125,28 +200,68 @@ class QueryBroker:
         # are fixed for the service's lifetime.
         st = self._svc.state
         cfg = self._svc.cfg
+        gen = int(st.gen)
+        # gen-wait hook: split off requests whose floor is above the
+        # pinned generation; they wait for a later commit without
+        # delaying the ready ones.
+        waiting: List[tuple] = []  # (kind, request)
+        ready = {}
+        for kind, reqs in batch.items():
+            rd = [r for r in reqs if r.min_gen <= gen]
+            waiting.extend((kind, r) for r in reqs if r.min_gen > gen)
+            if rd:
+                ready[kind] = rd
+        if waiting:
+            for _, r in waiting:  # count each deferred query once
+                if r.fut not in self._waited:
+                    self._waited.add(r.fut)
+                    self.gen_waits += 1
+            if fail_waiting:
+                for _, r in waiting:
+                    self._waited.discard(r.fut)
+                    if not r.fut.done():
+                        r.fut.set_exception(RuntimeError(
+                            f"QueryBroker stopped before generation "
+                            f"{r.min_gen} committed (at {gen})"))
+            else:
+                with self._cv:
+                    for kind, r in waiting:
+                        self._pending[kind].append(r)
+                    self._cv.notify()
+        if not ready:
+            return 0
+        for reqs in ready.values():  # leaving the pending system for good
+            for r in reqs:
+                self._waited.discard(r.fut)
         try:
-            gen = int(st.gen)
             served = 0
-            for kind, reqs in batch.items():
+            for kind, reqs in ready.items():
                 served += self._flush_kind(kind, reqs, st, cfg, gen)
         except BaseException as e:
-            for reqs in batch.values():
-                for _, _, fut in reqs:
-                    if not fut.done():
-                        fut.set_exception(e)
+            for reqs in ready.values():
+                for r in reqs:
+                    if not r.fut.done():
+                        r.fut.set_exception(e)
             raise
         self.flushes += 1
         self.served += served
         return served
 
-    def _flush_kind(self, kind, reqs, st, cfg, gen) -> int:
-        u = np.concatenate([r[0] for r in reqs])
-        v = np.concatenate([r[1] for r in reqs])
+    def _flush_kind(self, kind, reqs: List[_Req], st, cfg, gen) -> int:
+        if kind == "community_sizes":
+            # no per-lane ids: one histogram sweep answers every request
+            hist = svc_mod.community_sizes_on(st, cfg)
+            for r in reqs:
+                r.fut.set_result(svc_mod.Snapshot(hist, gen))
+            return len(reqs)
+        u = np.concatenate([r.u for r in reqs])
+        v = np.concatenate([r.v for r in reqs])
         n = u.shape[0]
         self.max_coalesced = max(self.max_coalesced, n)
         if kind == "scc_members":
             out = np.zeros((n, cfg.n_vertices), bool)
+        elif kind == "community_of":
+            out = np.full(n, cfg.n_vertices, np.int32)
         else:
             out = np.zeros(n, bool)
         for sl, b in self._sched.plan(n):
@@ -159,16 +274,24 @@ class QueryBroker:
                 out[sl] = svc_mod.same_scc_on(st, cfg, pu, pv)[:k]
             elif kind == "reachable":
                 out[sl] = svc_mod.reachable_on(st, cfg, pu, pv)[:k]
+            elif kind == "community_of":
+                out[sl] = svc_mod.community_of_on(st, cfg, pu)[:k]
             else:
                 out[sl] = svc_mod.members_on(st, cfg, pu)[:k]
         pos = 0
-        for ru, _, fut in reqs:
-            k = ru.shape[0]
-            fut.set_result(svc_mod.Snapshot(out[pos:pos + k], gen))
+        for r in reqs:
+            k = r.u.shape[0]
+            r.fut.set_result(svc_mod.Snapshot(out[pos:pos + k], gen))
             pos += k
         return n
 
     # ------------------------------------------------------- dispatcher ---
+
+    def _min_pending_floor(self) -> int:
+        with self._cv:
+            floors = [r.min_gen for reqs in self._pending.values()
+                      for r in reqs]
+        return min(floors) if floors else 0
 
     def start(self) -> "QueryBroker":
         """Spawn the background dispatcher thread (idempotent)."""
@@ -182,7 +305,9 @@ class QueryBroker:
         return self
 
     def stop(self):
-        """Drain outstanding queries, then stop the dispatcher."""
+        """Drain outstanding queries, then stop the dispatcher.  Requests
+        whose consistency floor is still uncommitted are failed rather
+        than left waiting for a generation that may never arrive."""
         with self._cv:
             self._stopping = True
             self._cv.notify_all()
@@ -192,10 +317,11 @@ class QueryBroker:
         # a dispatcher that died on a flush error may leave pending
         # futures behind -- fail them rather than hang their readers
         with self._cv:
-            leftovers = [fut for reqs in self._pending.values()
-                         for _, _, fut in reqs]
+            leftovers = [r.fut for reqs in self._pending.values()
+                         for r in reqs]
             for k in self._pending:
                 self._pending[k] = []
+            self._waited.clear()
         for fut in leftovers:
             if not fut.done():
                 fut.set_exception(RuntimeError("QueryBroker stopped"))
@@ -209,12 +335,17 @@ class QueryBroker:
                 if self._stopping and not any(self._pending.values()):
                     return
             try:
-                self.flush()
+                served = self.flush(fail_waiting=self._stopping)
             except BaseException:
                 # flush already failed its own collected futures; keep the
                 # dispatcher alive so later submitters are not orphaned
                 # waiting on a thread that silently died
                 continue
+            if served == 0 and any(self._pending.values()):
+                # everything pending is gen-deferred: block on the next
+                # service commit instead of spinning on flush()
+                self._svc.wait_for_gen(self._min_pending_floor(),
+                                       timeout=0.05)
 
     def __enter__(self) -> "QueryBroker":
         return self.start()
@@ -225,5 +356,6 @@ class QueryBroker:
     def stats(self) -> dict:
         return {"flushes": self.flushes, "served": self.served,
                 "max_coalesced": self.max_coalesced,
+                "gen_waits": self.gen_waits,
                 "coalescing": round(self.served / self.flushes, 2)
                 if self.flushes else 0.0}

@@ -52,6 +52,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
+import time
 from functools import partial
 from typing import NamedTuple, Sequence
 
@@ -147,6 +149,24 @@ def members_on(state: gs.GraphState, cfg: gs.GraphConfig, u) -> np.ndarray:
     return res
 
 
+def community_of_on(state: gs.GraphState, cfg: gs.GraphConfig, u
+                    ) -> np.ndarray:
+    """int32[Q]: community (SCC) id on a pinned snapshot; out-of-range or
+    dead ids answer the sentinel ``n_vertices``, never alias a clipped
+    vertex (paper blongsToCommunity contract)."""
+    lab = np.array(community.belongs_to_community(
+        state, jnp.asarray(u, jnp.int32)))
+    lab[~_ids_in_range(u, cfg.n_vertices)] = cfg.n_vertices
+    return lab
+
+
+def community_sizes_on(state: gs.GraphState, cfg: gs.GraphConfig
+                       ) -> np.ndarray:
+    """int32[NV]: community-size histogram (indexed by representative id)
+    on a pinned snapshot."""
+    return np.asarray(community.community_sizes(state))
+
+
 class SCCService:
     """Host-side streaming wrapper: grow-and-replay + bucketed scheduling +
     generation-stamped snapshot queries over ``dynamic.apply_batch``."""
@@ -174,6 +194,10 @@ class SCCService:
         self._donate = (jax.default_backend() != "cpu"
                         ) if donate is None else donate
         self._committed = self._state
+        # update-path serialization (many GraphClient sessions may share
+        # one service) + commit notification for consistency-level waits
+        self._apply_lock = threading.RLock()
+        self._commit_cv = threading.Condition()
         # telemetry
         self._compiled: set = set()
         self.grow_count = 0
@@ -212,6 +236,23 @@ class SCCService:
     # ---------------------------------------------------------- updates ---
 
     def apply(self, kind, u, v) -> np.ndarray:
+        """Deprecated raw entry point -- prefer
+        :class:`repro.api.GraphClient` (typed ops, consistency levels).
+
+        Kept as a shim for the internal layer and its tests; the CI gate
+        (``scripts/ci.sh``) rejects ``.apply(`` call sites in examples,
+        benchmarks, and the launch layer.
+        """
+        return self._apply_chunk(kind, u, v)
+
+    def _apply_ops(self, kind, u, v):
+        """GraphClient entry: apply a chunk and report the commit gen it
+        is covered by, atomically w.r.t. concurrent client sessions."""
+        with self._apply_lock:
+            ok = self._apply_chunk(kind, u, v)
+            return ok, self.gen
+
+    def _apply_chunk(self, kind, u, v) -> np.ndarray:
         """Apply a variable-length op stream chunk; returns ok: bool[N].
 
         The chunk is cut into padded bucket batches; each batch goes
@@ -230,35 +271,56 @@ class SCCService:
         kind = np.asarray(kind, np.int32)
         u = np.asarray(u, np.int32)
         v = np.asarray(v, np.int32)
-        entry_state, entry_cfg = self._state, self._cfg
-        entry_stats = (set(self._compiled), self.grow_count,
-                       self.replayed_ops, self.compaction_count,
-                       self.pipelined_chunks, self.fallback_chunks)
-        try:
-            ok = None
-            if self._inflight_window > 0:
-                ok = self._apply_pipelined(kind, u, v)
-            if ok is None:  # overflow (or pipeline disabled): serial path
-                self.fallback_chunks += 1
+        with self._apply_lock:
+            entry_state, entry_cfg = self._state, self._cfg
+            entry_stats = (set(self._compiled), self.grow_count,
+                           self.replayed_ops, self.compaction_count,
+                           self.pipelined_chunks, self.fallback_chunks)
+            try:
+                ok = None
+                if self._inflight_window > 0:
+                    ok = self._apply_pipelined(kind, u, v)
+                if ok is None:  # overflow (or pipeline off): serial path
+                    self.fallback_chunks += 1
+                    self._state, self._cfg = entry_state, entry_cfg
+                    ok = np.zeros(kind.shape[0], bool)
+                    for sl, ops in self._sched.chunks(kind, u, v):
+                        n_real = sl.stop - sl.start
+                        ok[sl] = self._apply_padded(ops)[:n_real]
+                else:
+                    self.pipelined_chunks += 1
+                self._maybe_compact()
+            except Exception:
+                # all-or-nothing chunk: never let a half-applied batch, a
+                # cfg that no longer matches the table, or telemetry for
+                # aborted work leak into the next chunk's commit
                 self._state, self._cfg = entry_state, entry_cfg
-                ok = np.zeros(kind.shape[0], bool)
-                for sl, ops in self._sched.chunks(kind, u, v):
-                    n_real = sl.stop - sl.start
-                    ok[sl] = self._apply_padded(ops)[:n_real]
-            else:
-                self.pipelined_chunks += 1
-            self._maybe_compact()
-        except Exception:
-            # all-or-nothing chunk: never let a half-applied batch, a cfg
-            # that no longer matches the table, or telemetry for aborted
-            # work leak into the next apply()'s commit
-            self._state, self._cfg = entry_state, entry_cfg
-            (self._compiled, self.grow_count, self.replayed_ops,
-             self.compaction_count, self.pipelined_chunks,
-             self.fallback_chunks) = entry_stats
-            raise
-        self._committed = self._state
+                (self._compiled, self.grow_count, self.replayed_ops,
+                 self.compaction_count, self.pipelined_chunks,
+                 self.fallback_chunks) = entry_stats
+                raise
+            with self._commit_cv:
+                self._committed = self._state
+                self._commit_cv.notify_all()
         return ok
+
+    def wait_for_gen(self, gen: int, timeout: float | None = None) -> int:
+        """Block until the committed generation reaches ``gen`` (the
+        consistency-level hook used by AT_LEAST / READ_YOUR_WRITES reads);
+        returns the committed generation at wake-up.  Every commit
+        notifies under ``_commit_cv`` (the pointer is only ever advanced
+        inside it), so a plain wait cannot miss a wakeup."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._commit_cv:
+            while self.gen < gen:
+                if deadline is None:
+                    self._commit_cv.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._commit_cv.wait(remaining)
+            return self.gen
 
     def _apply_pipelined(self, kind, u, v) -> np.ndarray | None:
         """Dispatch the whole chunk without per-batch host syncs.
@@ -419,6 +481,17 @@ class SCCService:
                             int(st.gen))
         res = _members(st, jnp.asarray(u, jnp.int32))
         return Snapshot(np.asarray(res), int(st.gen))
+
+    def community_of(self, u) -> Snapshot:
+        """Batched blongsToCommunity (paper §5.3) on the committed
+        snapshot; int32 labels, sentinel ``n_vertices`` for absent ids."""
+        st = self._committed
+        return Snapshot(community_of_on(st, self._cfg, u), int(st.gen))
+
+    def community_sizes(self) -> Snapshot:
+        """Community-size histogram on the committed snapshot."""
+        st = self._committed
+        return Snapshot(community_sizes_on(st, self._cfg), int(st.gen))
 
     # ------------------------------------------------------------- misc ---
 

@@ -70,10 +70,11 @@ def serve_mind(mod, steps: int):
 
 def serve_smscc(mod, steps: int, nv: int = 2048, chunk: int = 256,
                 readers: int = 0):
-    """The paper's on-line mode: sustained update stream + wait-free query
-    batches over the committed snapshot, via the SCC service layer.  With
-    ``readers > 0`` the queries move off the update thread into a
-    QueryBroker-fed reader pool that overlaps the update pipeline."""
+    """The paper's on-line mode: a typed GraphClient update stream +
+    wait-free query batches over the committed snapshot, via the SCC
+    service layer.  With ``readers > 0`` the queries move off the update
+    thread into per-reader client sessions over one QueryBroker that
+    overlaps the update pipeline."""
     from repro.core import graph_state as gs
     from repro.core.service import SCCService
     from repro.launch import stream
@@ -93,6 +94,12 @@ def serve_smscc(mod, steps: int, nv: int = 2048, chunk: int = 256,
                                 query_frac=0.5, chunk=chunk,
                                 n_queries=1024)
     print(rep.pretty())
+    # the unified GraphClient.stats() telemetry (service + broker merged)
+    tele = ("gen", "pipelined_chunks", "fallback_chunks", "compile_count",
+            "grows", "compactions", "flushes", "served", "max_coalesced",
+            "gen_waits", "coalescing", "client_updates", "client_queries")
+    print("[client.stats] " + " | ".join(
+        f"{k}={rep[k]}" for k in tele if k in rep))
 
 
 def main():

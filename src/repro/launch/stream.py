@@ -1,4 +1,4 @@
-"""Bucketed stream scheduling for the SCC service.
+"""Bucketed stream scheduling + typed-client stream drivers.
 
 An on-line service sees arbitrary-length op chunks; under jit every new
 batch length is a fresh XLA compilation.  The scheduler therefore admits
@@ -8,6 +8,11 @@ is cut greedily into the largest buckets that fit, and the tail is padded
 with NOP lanes up to the smallest bucket that holds it.  Total
 compilations are bounded by ``len(buckets)`` per graph config, independent
 of stream length.
+
+The drivers (`run_stream`, `run_concurrent_stream`) speak the public
+typed API: workload generators produce :mod:`repro.api.ops` op streams,
+and every update/query goes through a :class:`repro.api.GraphClient`
+session — the raw ``(kind, u, v)`` convention stays behind the facade.
 """
 from __future__ import annotations
 
@@ -20,7 +25,7 @@ import numpy as np
 from repro.core import dynamic
 
 __all__ = ["BucketedScheduler", "run_stream", "run_concurrent_stream",
-           "StreamReport"]
+           "StreamReport", "typed_op_stream"]
 
 
 class BucketedScheduler:
@@ -71,48 +76,75 @@ class StreamReport(dict):
         return " | ".join(f"{k}={v}" for k, v in self.items())
 
 
+def typed_op_stream(nv: int, n: int, *, step: int, add_frac: float,
+                    seed: int = 0, include_vertex_ops: bool = True):
+    """One deterministic chunk of typed update ops (paper workload mix)."""
+    from repro.api import updates_from_arrays
+    from repro.data import pipeline
+
+    ops = pipeline.op_stream(nv, n, step=step, add_frac=add_frac,
+                             seed=seed,
+                             include_vertex_ops=include_vertex_ops)
+    return updates_from_arrays(np.asarray(ops.kind), np.asarray(ops.u),
+                               np.asarray(ops.v))
+
+
 def run_stream(service, n_ops: int, *, add_frac: float = 0.6,
                query_frac: float = 0.0, chunk: int = 512,
                n_queries: int = 256, include_vertex_ops: bool = True,
                seed: int = 0) -> StreamReport:
-    """Drive ``service`` with a synthetic mixed workload (paper Fig 4/5).
+    """Drive ``service`` with a synthetic mixed workload (paper Fig 4/5)
+    through a single typed :class:`repro.api.GraphClient` session.
 
     ``query_frac`` interleaves SameSCC/reachability query batches between
     update chunks; throughput is reported separately for updates and
     queries.  Deterministic in ``seed``.
     """
-    from repro.data import pipeline
+    from repro.api import GraphClient, Reachable, SameSCC
+    from repro.core.broker import QueryBroker
 
     nv = service.cfg.n_vertices
     rng = np.random.default_rng(seed)
+    n_reach = min(32, n_queries)
+    # bucket registry matched to the two query shapes issued below, and to
+    # run_concurrent_stream's registry, so serial/concurrent comparisons
+    # share identical compiled query shapes
+    client = GraphClient(service, broker=QueryBroker(
+        service, buckets=tuple(sorted({n_queries, n_reach}))))
     applied = 0
     queries = 0
     accepted = 0
     t_update = 0.0
     t_query = 0.0
     step = 0
-    while applied < n_ops:
-        n = min(chunk, n_ops - applied)
-        ops = pipeline.op_stream(nv, n, step=step, add_frac=add_frac,
-                                 seed=seed,
-                                 include_vertex_ops=include_vertex_ops)
-        t0 = time.perf_counter()
-        ok = service.apply(np.asarray(ops.kind), np.asarray(ops.u),
-                           np.asarray(ops.v))
-        t_update += time.perf_counter() - t0
-        accepted += int(ok.sum())
-        applied += n
-        step += 1
-        if query_frac > 0 and rng.random() < query_frac:
-            qu = rng.integers(0, nv, n_queries)
-            qv = rng.integers(0, nv, n_queries)
-            n_reach = min(32, n_queries)  # reach sweeps cost O(E) per round
+    try:
+        while applied < n_ops:
+            n = min(chunk, n_ops - applied)
+            ops = typed_op_stream(nv, n, step=step, add_frac=add_frac,
+                                  seed=seed,
+                                  include_vertex_ops=include_vertex_ops)
             t0 = time.perf_counter()
-            same = service.same_scc(qu, qv)
-            reach_ = service.reachable(qu[:n_reach], qv[:n_reach])
-            t_query += time.perf_counter() - t0
-            assert same.gen == reach_.gen, "snapshot generation drifted"
-            queries += n_queries + n_reach
+            results = client.submit_many(ops)
+            t_update += time.perf_counter() - t0
+            accepted += sum(r.value for r in results)
+            applied += n
+            step += 1
+            if query_frac > 0 and rng.random() < query_frac:
+                qu = rng.integers(0, nv, n_queries)
+                qv = rng.integers(0, nv, n_queries)
+                same_ops = [SameSCC(int(a), int(b))
+                            for a, b in zip(qu, qv)]
+                reach_ops = [Reachable(int(a), int(b))
+                             for a, b in zip(qu[:n_reach], qv[:n_reach])]
+                t0 = time.perf_counter()
+                same = client.submit_many(same_ops)
+                reach_ = client.submit_many(reach_ops)
+                t_query += time.perf_counter() - t0
+                assert same[0].gen == reach_[0].gen, \
+                    "snapshot generation drifted"
+                queries += n_queries + n_reach
+    finally:
+        client.close()
     wall = t_update + t_query
     rep = StreamReport(
         ops=applied, accepted=accepted, queries=queries,
@@ -121,7 +153,7 @@ def run_stream(service, n_ops: int, *, add_frac: float = 0.6,
         queries_per_s=int(queries / t_query) if t_query else 0,
         combined_per_s=int((applied + queries) / wall) if wall else 0,
     )
-    rep.update(service.stats())
+    rep.update(client.stats())
     return rep
 
 
@@ -134,17 +166,18 @@ def run_concurrent_stream(service, n_ops: int, *, readers: int = 2,
     """The paper's actual serving shape: ``readers`` query threads overlap
     a live update stream (Fig 4/5's concurrent mode).
 
-    The main thread applies the same deterministic update stream as
-    :func:`run_stream`; meanwhile each reader thread issues coalesced
-    SameSCC (and occasional reachability) batches through a
-    :class:`repro.core.broker.QueryBroker`, checking that the generations
-    it observes are monotone.  Queries are free-running: throughput is
-    whatever the readers manage while the updates execute, the point being
-    that ``combined_per_s`` beats the serial interleaving of
-    :func:`run_stream` on the same update mix.
+    The main thread applies the same deterministic typed update stream as
+    :func:`run_stream` through its own :class:`repro.api.GraphClient`
+    session; meanwhile each reader thread holds its own client session
+    over one shared, dispatcher-fed :class:`repro.core.broker.QueryBroker`
+    and issues coalesced SameSCC (and occasional reachability) batches,
+    checking that the generations it observes are monotone.  Queries are
+    free-running: throughput is whatever the readers manage while the
+    updates execute, the point being that ``combined_per_s`` beats the
+    serial interleaving of :func:`run_stream` on the same update mix.
     """
+    from repro.api import GraphClient, Reachable, SameSCC
     from repro.core.broker import QueryBroker
-    from repro.data import pipeline
 
     nv = service.cfg.n_vertices
     # bucket registry sized to the two request shapes readers issue, so a
@@ -152,28 +185,33 @@ def run_concurrent_stream(service, n_ops: int, *, readers: int = 2,
     buckets = query_buckets or tuple(sorted(
         {n_queries} | ({reach_queries} if reach_queries else set())))
     broker = QueryBroker(service, buckets=buckets).start()
+    updater = GraphClient(service, broker=broker)
     stop = threading.Event()
     q_counts = [0] * readers
     errors: list = []
 
     def reader(i: int):
+        client = GraphClient(service, broker=broker)
         rng = np.random.default_rng(seed + 7919 * (i + 1))
         last_gen = -1
         try:
             while not stop.is_set():
                 qu = rng.integers(0, nv, n_queries)
                 qv = rng.integers(0, nv, n_queries)
-                snap = broker.same_scc(qu, qv)
-                if snap.gen < last_gen:
+                res = client.submit_many(
+                    [SameSCC(int(a), int(b)) for a, b in zip(qu, qv)])
+                gen = res[0].gen
+                if gen < last_gen:
                     raise AssertionError(
                         f"reader {i} saw generation go backwards: "
-                        f"{snap.gen} < {last_gen}")
-                last_gen = snap.gen
+                        f"{gen} < {last_gen}")
+                last_gen = gen
                 q_counts[i] += n_queries
                 if reach_queries and rng.random() < 0.25:
-                    snap = broker.reachable(qu[:reach_queries],
-                                            qv[:reach_queries])
-                    last_gen = max(last_gen, snap.gen)
+                    res = client.submit_many(
+                        [Reachable(int(a), int(b)) for a, b in
+                         zip(qu[:reach_queries], qv[:reach_queries])])
+                    last_gen = max(last_gen, res[0].gen)
                     q_counts[i] += reach_queries
         except Exception as e:  # surfaced after join
             errors.append(e)
@@ -187,12 +225,11 @@ def run_concurrent_stream(service, n_ops: int, *, readers: int = 2,
     try:
         while applied < n_ops:
             n = min(chunk, n_ops - applied)
-            ops = pipeline.op_stream(nv, n, step=step, add_frac=add_frac,
-                                     seed=seed,
-                                     include_vertex_ops=include_vertex_ops)
-            ok = service.apply(np.asarray(ops.kind), np.asarray(ops.u),
-                               np.asarray(ops.v))
-            accepted += int(ok.sum())
+            ops = typed_op_stream(nv, n, step=step, add_frac=add_frac,
+                                  seed=seed,
+                                  include_vertex_ops=include_vertex_ops)
+            results = updater.submit_many(ops)
+            accepted += sum(r.value for r in results)
             applied += n
             step += 1
     finally:
@@ -211,6 +248,5 @@ def run_concurrent_stream(service, n_ops: int, *, readers: int = 2,
         queries_per_s=int(queries / wall) if wall else 0,
         combined_per_s=int((applied + queries) / wall) if wall else 0,
     )
-    rep.update(service.stats())
-    rep.update(broker.stats())
+    rep.update(updater.stats())
     return rep
