@@ -20,29 +20,39 @@ throughput with concurrent readers must exceed the serial baseline --
 queries execute against the committed snapshot while the next update step
 is still in flight.
 
-Finally the **client-overhead** section prices the facade itself: the
-same deterministic stream driven once through typed ops +
+The **client-overhead** section prices the facade itself: the same
+deterministic stream driven once through typed ops +
 ``GraphClient.submit_many`` and once through the internal raw-array
 entry points, asserting the typed path keeps >= 85% of the internal
 path's combined ops/s (facade cost < 15%).
 
+Finally the **repair-tier** section measures the tiered repair engine on
+the paper's locality-of-repair shape (tiny affected regions inside a
+large table): the identical small-region workload under the tiered and
+untiered configs, per-tier hit counts and median step latency, asserting
+the compact-sparse tier's median step beats the full-sparse sweep.
+
 Reported per mix: update ops/s, query ops/s, combined ops/s, number of
 compiled step shapes (bounded by 2 x bucket-count x capacity-growth count
 no matter the stream length: pipelined + serial-replay jit entries), table
-grows, compactions.
+grows, compactions.  ``--json PATH`` writes the whole report as machine-
+readable JSON -- ``scripts/ci.sh`` records it as ``BENCH_stream.json``,
+the committed perf-trajectory point, and gates on it.
 
     PYTHONPATH=src python -m benchmarks.bench_stream [--smoke] [--full]
                                                      [--readers N]
+                                                     [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
 from repro import configs
-from repro.core import graph_state as gs
+from repro.core import dynamic, graph_state as gs
 from repro.core.service import SCCService
 from repro.launch import stream
 from benchmarks import common
@@ -235,12 +245,161 @@ def run_client_overhead(nv=4096, edge_capacity=4096, n_ops=8192,
     return rows
 
 
+def run_repair_tiers(nv=8192, edge_capacity=2 ** 15, cycle=8, steps=48,
+                     touched_cycles=2, seed=0, assert_speedup=True):
+    """The repair-tier section: small-region repair on a large graph.
+
+    The base graph is ``nv / cycle`` disjoint directed cycles (one SCC
+    each).  Every step removes the edges of a few random cycles and
+    re-adds them in the same batch, so the affected region is just those
+    cycles' members -- the paper's locality-of-repair shape: the region
+    stays tiny while the table stays huge.  A handful of steps are forced
+    tiny (dense tier) or huge (full tier) so every tier reports a hit.
+
+    The identical deterministic op sequence runs once under the tiered
+    config and once under the untiered full-sparse baseline; per-step wall
+    times are grouped by the tier the tiered run reported.  Asserts the
+    compact-sparse tier's median step beats the full-sparse baseline's
+    median over the very same steps.
+    """
+    smscc = configs.get("smscc")
+    n_cycles = nv // cycle
+    vcap = max(64, touched_cycles * cycle * 4)
+
+    def build(tiered: bool):
+        kw = dict(n_vertices=nv, edge_capacity=edge_capacity,
+                  max_probes=64, max_outer=64, max_inner=128)
+        if tiered:
+            # dense tier sized to one cycle, compact to a few, full beyond
+            kw.update(dense_capacity=cycle, region_vertex_capacity=vcap,
+                      region_edge_buckets=(256, 4096))
+        else:
+            kw.update(dense_capacity=0, region_vertex_capacity=0)
+        cfg = smscc.config(**kw)
+        base = np.arange(nv, dtype=np.int32)
+        src = base
+        dst = (base // cycle) * cycle + (base + 1) % cycle
+        state = gs.from_arrays(cfg, src, dst)
+        assert int(state.overflow) == 0
+        state = dynamic.recompute(state, cfg)
+        return cfg, state
+
+    def cycle_toggle(cs):
+        """Remove + re-add every edge of the given cycles in ONE batch:
+        region == those cycles' members, graph unchanged after the step."""
+        u = np.concatenate([c * cycle + np.arange(cycle) for c in cs]
+                           ).astype(np.int32)
+        v = np.concatenate([c * cycle + (np.arange(cycle) + 1) % cycle
+                            for c in cs]).astype(np.int32)
+        n = u.shape[0]
+        kind = np.concatenate([np.full(n, dynamic.REM_EDGE, np.int32),
+                               np.full(n, dynamic.ADD_EDGE, np.int32)])
+        return (np.stack([kind, np.concatenate([u, u]),
+                          np.concatenate([v, v])]), None)
+
+    # full-tier shape: cross edges chaining > vcap worth of cycles into one
+    # giant SCC (then an untimed undo batch splits them back apart)
+    span_cycles = min(n_cycles, 2 * vcap // cycle + 2)
+    heads = (np.arange(span_cycles, dtype=np.int32) * cycle + cycle - 1)
+    tails = ((np.arange(1, span_cycles + 1, dtype=np.int32) % span_cycles)
+             * cycle)
+    full_add = np.stack([np.full(span_cycles, dynamic.ADD_EDGE, np.int32),
+                         heads, tails])
+    full_rm = np.stack([np.full(span_cycles, dynamic.REM_EDGE, np.int32),
+                        heads, tails])
+
+    rng = np.random.default_rng(seed)
+    batches = []
+    for s in range(steps):
+        if s % 12 == 10:   # full tier
+            batches.append((full_add, full_rm))
+        elif s % 12 == 11:  # dense tier: one cycle == dense_capacity
+            batches.append(cycle_toggle([int(rng.integers(0, n_cycles))]))
+        else:               # compact tier: a few cycles
+            batches.append(cycle_toggle(
+                rng.choice(n_cycles, size=touched_cycles, replace=False)))
+
+    def pad(arr, n):
+        k, u, v = arr
+        pk = np.full(n, dynamic.NOP, np.int32)
+        pu = np.zeros(n, np.int32)
+        pv = np.zeros(n, np.int32)
+        pk[:k.shape[0]] = k
+        pu[:k.shape[0]] = u
+        pv[:k.shape[0]] = v
+        return dynamic.make_ops(pk, pu, pv)
+
+    n_lanes = max(max(b[0].shape[1], 0 if b[1] is None else b[1].shape[1])
+                  for b in batches)
+
+    def drive(cfg, state):
+        import jax
+        # warm the (single) step shape so no run is charged compile time
+        warm = pad((np.array([dynamic.NOP], np.int32),
+                    np.zeros(1, np.int32), np.zeros(1, np.int32)), n_lanes)
+        out = dynamic.apply_batch_async(state, warm, cfg)
+        jax.block_until_ready(out[0].ccid)
+        state = out[0]
+        times, tiers = [], []
+        for arr, undo in batches:
+            ops = pad(arr, n_lanes)
+            t0 = time.perf_counter()
+            state, _, _, rstats = dynamic.apply_batch_async(state, ops,
+                                                            cfg)
+            jax.block_until_ready(state.ccid)
+            times.append(time.perf_counter() - t0)
+            tiers.append(int(rstats.tier))
+            if undo is not None:  # restore the base graph out-of-band
+                state, _, _, _ = dynamic.apply_batch_async(
+                    state, pad(undo, n_lanes), cfg)
+                jax.block_until_ready(state.ccid)
+        return np.asarray(times), tiers
+
+    cfg_t, st_t = build(tiered=True)
+    cfg_f, st_f = build(tiered=False)
+    times_t, tiers_t = drive(cfg_t, st_t)
+    times_f, _ = drive(cfg_f, st_f)
+
+    counts = {name: tiers_t.count(code)
+              for code, name in enumerate(dynamic.TIER_NAMES)}
+    rows, med = [], {}
+    for code, name in enumerate(dynamic.TIER_NAMES):
+        idx = [i for i, t in enumerate(tiers_t) if t == code]
+        med_t = float(np.median(times_t[idx])) if idx else None
+        med_f = float(np.median(times_f[idx])) if idx else None
+        med[name] = {"tiered_s": med_t, "baseline_full_s": med_f,
+                     "steps": len(idx)}
+        rows.append((name, len(idx),
+                     round(med_t * 1e3, 3) if idx else "",
+                     round(med_f * 1e3, 3) if idx else "",
+                     round(med_f / med_t, 2) if idx else ""))
+    assert counts["compact"] > 0, "workload never hit the compact tier"
+    speedup = (med["compact"]["baseline_full_s"]
+               / med["compact"]["tiered_s"])
+    if assert_speedup:
+        assert speedup > 1.0, (
+            "compact-sparse repair did not beat full-sparse on the "
+            f"small-region workload: {med['compact']['tiered_s']:.6f}s vs "
+            f"{med['compact']['baseline_full_s']:.6f}s per step")
+    report = {"nv": nv, "edge_capacity": edge_capacity, "cycle": cycle,
+              "steps": steps, "tier_counts": counts,
+              "median_step_s": med,
+              "compact_vs_full_speedup": round(speedup, 3)}
+    return rows, report
+
+
 HEADER = ["mix", "ops", "ops_per_s", "queries", "queries_per_s",
           "combined_per_s", "compiled_shapes", "grows", "compactions",
           "final_capacity"]
 OVERLAP_HEADER = ["mode", "ops", "ops_per_s", "queries", "queries_per_s",
                   "combined_per_s", "readers"]
 OVERHEAD_HEADER = ["path", "ops", "combined_per_s", "wall_s"]
+REPAIR_HEADER = ["tier", "steps", "tiered_median_ms",
+                 "full_baseline_median_ms", "speedup"]
+
+
+def _dicts(rows, header):
+    return [dict(zip(header, r)) for r in rows]
 
 
 def main():
@@ -248,42 +407,73 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CPU-friendly run (CI: exercises grow + "
                          "replay + both mix extremes + reader overlap + "
-                         "the facade-overhead bound end-to-end)")
+                         "the facade-overhead bound + the repair-tier "
+                         "speedup end-to-end)")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale graph (slow; accelerator advised)")
     ap.add_argument("--readers", type=int, default=2,
                     help="reader threads for the overlap comparison")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable report (the perf "
+                         "trajectory point recorded by scripts/ci.sh)")
     args = ap.parse_args()
     if args.smoke:
         # capacity starts undersized on purpose so the smoke run also
         # covers grow-and-replay
+        buckets = (32, 128)
         rows = run(nv=256, edge_capacity=256, n_ops=1024, chunk=128,
-                   buckets=(32, 128), n_queries=256,
+                   buckets=buckets, n_queries=256,
                    mixes=("update_heavy", "query_heavy"))
         overlap = run_overlap(nv=256, edge_capacity=1024, n_ops=1024,
-                              chunk=128, buckets=(32, 128), n_queries=256,
+                              chunk=128, buckets=buckets, n_queries=256,
                               readers=args.readers)
         overhead = run_client_overhead(nv=256, edge_capacity=1024,
                                        n_ops=1024, chunk=128,
-                                       buckets=(32, 128), n_queries=256)
+                                       buckets=buckets, n_queries=256)
+        repair, repair_rep = run_repair_tiers(nv=4096,
+                                              edge_capacity=2 ** 14,
+                                              steps=36)
     elif args.full:
+        buckets = (1024, 4096)
         rows = run(nv=2 ** 17, edge_capacity=2 ** 18, n_ops=2 ** 17,
-                   chunk=4096, buckets=(1024, 4096), n_queries=2 ** 15)
+                   chunk=4096, buckets=buckets, n_queries=2 ** 15)
         overlap = run_overlap(nv=2 ** 17, edge_capacity=2 ** 18,
                               n_ops=2 ** 17, chunk=4096,
-                              buckets=(1024, 4096), n_queries=2 ** 15,
+                              buckets=buckets, n_queries=2 ** 15,
                               readers=args.readers)
         overhead = run_client_overhead(nv=2 ** 17, edge_capacity=2 ** 18,
                                        n_ops=2 ** 16, chunk=4096,
-                                       buckets=(1024, 4096),
+                                       buckets=buckets,
                                        n_queries=2 ** 14)
+        repair, repair_rep = run_repair_tiers(nv=2 ** 16,
+                                              edge_capacity=2 ** 18,
+                                              steps=60, touched_cycles=4)
     else:
-        rows = run()
-        overlap = run_overlap(readers=args.readers)
-        overhead = run_client_overhead()
+        buckets = (128, 512)
+        rows = run(buckets=buckets)
+        overlap = run_overlap(buckets=buckets, readers=args.readers)
+        overhead = run_client_overhead(buckets=buckets)
+        repair, repair_rep = run_repair_tiers()
     common.emit(rows, HEADER)
     common.emit(overlap, OVERLAP_HEADER)
     common.emit(overhead, OVERHEAD_HEADER)
+    common.emit(repair, REPAIR_HEADER)
+    if args.json:
+        mode = "smoke" if args.smoke else "full" if args.full else "default"
+        report = {
+            "bench": "bench_stream",
+            "mode": mode,
+            "n_buckets": len(buckets),
+            "repair_tier_count": len(dynamic.TIER_NAMES),
+            "mixes": _dicts(rows, HEADER),
+            "overlap": _dicts(overlap, OVERLAP_HEADER),
+            "client_overhead": _dicts(overhead, OVERHEAD_HEADER),
+            "repair_tiers": repair_rep,
+        }
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,32 @@ grep -ohE '`[a-zA-Z0-9_/.-]+\.(py|sh|md)`' docs/*.md \
     fi
 done
 
+echo "== repair gate: dense repair must feed a matmul hook (Pallas) =="
+# the dense tier's closure must run through the injected reach_blockmm
+# product -- a bare scc_dense_region( call in core/ silently falls back to
+# the jnp einsum everywhere, including real TPUs
+python - <<'PYEOF'
+import pathlib, re, sys
+
+bad = []
+for p in sorted(pathlib.Path("src/repro/core").rglob("*.py")):
+    text = p.read_text()
+    for m in re.finditer(r"scc_dense_region\(", text):
+        head = text[:m.start()].rstrip()
+        if head.endswith("def"):  # the definition itself
+            continue
+        i, depth = m.end(), 1  # span the whole (multi-line) call
+        while i < len(text) and depth:
+            depth += (text[i] == "(") - (text[i] == ")")
+            i += 1
+        if "matmul=" not in text[m.end():i]:
+            bad.append(f"{p}:{text.count(chr(10), 0, m.start()) + 1}")
+if bad:
+    print("core/ scc_dense_region call site without a matmul= hook:",
+          *bad, file=sys.stderr)
+    sys.exit(1)
+PYEOF
+
 echo "== api gate: no raw engine call sites outside src/repro/core =="
 # the typed repro.api.GraphClient is the only public surface: raw
 # (kind, u, v) .apply( chunks and string-kind broker submit( calls must
@@ -38,8 +64,34 @@ echo "== tier-1 tests (pytest.ini defaults to -m 'not slow') =="
 python -m pytest -x -q tests/
 
 if [[ "${1:-}" != "--fast" ]]; then
-    echo "== stream service smoke (grow-and-replay + mixes + reader overlap) =="
-    python -m benchmarks.bench_stream --smoke
+    echo "== stream service smoke (grow-and-replay + mixes + overlap + repair tiers) =="
+    python -m benchmarks.bench_stream --smoke --json BENCH_stream.json
+    echo "== perf-trajectory gates (BENCH_stream.json) =="
+    python - <<'PYEOF'
+import json
+
+rep = json.load(open("BENCH_stream.json"))
+buckets = rep["n_buckets"]
+tiers = rep["repair_tier_count"]
+# compile-count bound: tier dispatch is a runtime branch inside ONE
+# compiled step program, so the per-config bound stays 2 x buckets (step
+# paths) and is in particular <= buckets x repair-tiers per config
+for row in rep["mixes"]:
+    n_cfgs = 1 + row["grows"] + row["compactions"]
+    bound = buckets * tiers * n_cfgs
+    assert row["compiled_shapes"] <= bound, (
+        f"{row['mix']}: {row['compiled_shapes']} compiled step shapes "
+        f"exceed the {buckets} buckets x {tiers} tiers x {n_cfgs} "
+        f"configs bound")
+rt = rep["repair_tiers"]
+assert rt["tier_counts"]["compact"] > 0, "compact tier never fired"
+assert rt["compact_vs_full_speedup"] > 1.0, (
+    "compact-sparse repair lost to full-sparse: "
+    f"{rt['compact_vs_full_speedup']}x")
+print("perf-trajectory gates OK:",
+      f"repair speedup {rt['compact_vs_full_speedup']}x,",
+      f"tier hits {rt['tier_counts']}")
+PYEOF
     echo "== documented serving entry point (examples/dynamic_scc_serving.py --smoke) =="
     python examples/dynamic_scc_serving.py --smoke
 fi

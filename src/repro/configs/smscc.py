@@ -20,6 +20,13 @@ SHAPES = {
 
 def config(n_vertices=2 ** 20, edge_capacity=2 ** 23, **kw):
     base = dict(max_probes=64, max_outer=64, max_inner=256)
+    # tiered repair: the compact-sparse tier is on by default (scaled to
+    # the graph -- regions up to 1/8 of the vertex slots compact into
+    # bounded sub-arrays, so fixpoint rounds cost O(region) not O(table)).
+    # The dense MXU tier stays opt-in (dense_capacity=N): its Pallas
+    # kernel pays off on real TPUs, not under CPU interpret mode.
+    base.update(region_vertex_capacity=max(64, n_vertices // 8),
+                region_edge_buckets=(256, 4096, 65536))
     base.update(kw)
     return gs.GraphConfig(n_vertices=n_vertices,
                           edge_capacity=edge_capacity, **base)

@@ -28,6 +28,25 @@ Repair (the paper's §5.1/§5.2, *locality of repair*):
 M is a union of (pre-batch) SCCs plus fully-included broken classes, and
 every post-batch SCC that changed has all its internal paths inside M, so
 the masked recomputation is exact (proof sketch in DESIGN.md §2).
+
+The masked pass itself is *tiered* so its per-round work is proportional
+to the region, not the table (the other half of locality of repair):
+
+  tier 0 dense    |M| <= dense_capacity: densify the region and close it
+                  with boolean mat-muls through the injected Pallas
+                  ``reach_blockmm`` kernel (MXU on TPU);
+  tier 1 compact  |M| <= region_vertex_capacity and the region's live
+                  edges fit a bucket of ``region_edge_buckets``: compact
+                  the region once into bounded static sub-arrays and run
+                  the scc_static fixpoints there -- O(region edges) per
+                  round;
+  tier 2 full     overflow fallback: scc_static over the full edge table.
+
+Tier choice is a runtime ``lax.cond`` inside the one compiled step (no
+extra compilations); every tier produces bit-identical labels.  The
+chosen tier and the region's vertex/edge counts are returned as
+:class:`RepairStats` next to the overflow delta, and surfaced by
+``SCCService.stats()``.
 """
 from __future__ import annotations
 
@@ -40,6 +59,7 @@ import jax.numpy as jnp
 from repro.core import edge_table as et
 from repro.core import graph_state as gs
 from repro.core import reach, scc
+from repro.kernels.reach_blockmm import ops as reach_blockmm
 
 ADD_EDGE = 0
 REM_EDGE = 1
@@ -48,6 +68,21 @@ REM_VERTEX = 3
 NOP = 4
 
 INT32_MAX = jnp.iinfo(jnp.int32).max
+
+# repair-tier codes reported in RepairStats.tier, ordered by preference:
+# the dispatcher picks the smallest tier the region fits
+TIER_DENSE = 0     # region densified, closed on the MXU (reach_blockmm)
+TIER_COMPACT = 1   # region compacted to bounded COO, sparse fixpoints there
+TIER_FULL = 2      # full-table sparse fixpoints (overflow fallback)
+TIER_NAMES = ("dense", "compact", "full")
+
+
+class RepairStats(NamedTuple):
+    """Per-step repair telemetry (device scalars, resolved lazily by the
+    service next to the overflow delta)."""
+    tier: jax.Array             # int32[]  TIER_DENSE | TIER_COMPACT | TIER_FULL
+    region_vertices: jax.Array  # int32[]  |M_del ∪ (FW ∩ BW)| this step
+    region_edges: jax.Array     # int32[]  live intra-region edges this step
 
 
 class OpBatch(NamedTuple):
@@ -76,10 +111,11 @@ def _apply_batch_impl(state: gs.GraphState, ops: OpBatch,
                       cfg: gs.GraphConfig):
     """One batch-atomic SMSCC step.
 
-    Returns ``(new_state, ok: bool[B], ovf_delta: int32[])``.  The overflow
-    *delta* is a dedicated output buffer (never aliased to the input state)
-    so a pipelined caller can donate ``state`` into the next step and still
-    inspect this step's overflow later without touching donated memory.
+    Returns ``(new_state, ok: bool[B], ovf_delta: int32[], RepairStats)``.
+    The overflow *delta* and the repair stats are dedicated output buffers
+    (never aliased to the input state) so a pipelined caller can donate
+    ``state`` into the next step and still inspect them later without
+    touching donated memory.
     """
     nv = cfg.n_vertices
     b = ops.kind.shape[0]
@@ -139,13 +175,12 @@ def _apply_batch_impl(state: gs.GraphState, ops: OpBatch,
     ends_ok = v_alive[jnp.clip(ops.u, 0, nv - 1)] & \
         v_alive[jnp.clip(ops.v, 0, nv - 1)]
     enable = is_adde & ends_ok
-    edges, inserted = et.insert(edges, ops.u, ops.v, cfg.max_probes,
-                                enable=enable)
+    edges, inserted, dropped = et.insert(edges, ops.u, ops.v,
+                                         cfg.max_probes, enable=enable)
     ok = jnp.where(inserted, True, ok)
-    # overflow accounting: an enabled key not present after insert means the
-    # probe bound was exhausted -- host must grow the table and replay.
-    found_after, _ = et.lookup(edges, ops.u, ops.v, cfg.max_probes)
-    ovf = jnp.sum(enable & ~found_after).astype(jnp.int32)
+    # overflow accounting straight from the table's own probe-exhaustion
+    # report -- the host must grow the table and replay these lanes.
+    ovf = jnp.sum(dropped).astype(jnp.int32)
 
     # ---- Phase 5: unified localized repair ---------------------------------
     src, dst, live = edges.src, edges.dst, edges.state == et.LIVE
@@ -171,25 +206,75 @@ def _apply_batch_impl(state: gs.GraphState, ops: OpBatch,
         bw, _ = reach.backward_reach(src, dst, live, seed_b, v_alive,
                                      cfg.max_inner, spec=cfg.label_spec)
     region = (m_del | (fw & bw)) & v_alive
+    region_v = jnp.sum(region).astype(jnp.int32)
+    region_e = jnp.sum(live & region[src] & region[dst]).astype(jnp.int32)
 
-    def repair_sparse():
-        return scc.scc_static(src, dst, live, region,
-                              max_outer=cfg.max_outer,
-                              max_inner=cfg.max_inner,
-                              spec=cfg.label_spec,
-                              shortcut=cfg.shortcut)
+    # Tiered repair dispatch: the region is the same for every tier; each
+    # tier is a cheaper execution of the identical masked static-SCC pass.
+    # Tiers nest smallest-first via lax.cond (one compiled program per cfg
+    # -- tier choice is a runtime branch, never a recompile).
+    def repair_full(_):
+        lab = scc.scc_static(src, dst, live, region,
+                             max_outer=cfg.max_outer,
+                             max_inner=cfg.max_inner,
+                             spec=cfg.label_spec,
+                             shortcut=cfg.shortcut)
+        return lab, jnp.int32(TIER_FULL)
 
+    dispatch = repair_full
+
+    # (2) compact sparse: region fits the bounded compact COO.  Edge slots
+    # come from the geometric bucket registry; the smallest bucket that
+    # holds the region's live edges wins (lax.switch over static shapes).
+    e_buckets = tuple(b for b in cfg.region_edge_buckets
+                      if b < cfg.edge_capacity)
+    if 0 < cfg.region_vertex_capacity < nv and e_buckets:
+        vcap = cfg.region_vertex_capacity
+
+        def compact_branch(ecap):
+            def run(_):
+                lab, _fits = scc.scc_compact_region(
+                    src, dst, live, region, vcap, ecap,
+                    max_outer=cfg.max_outer, max_inner=cfg.max_inner,
+                    shortcut=cfg.shortcut)
+                return lab, jnp.int32(TIER_COMPACT)
+            return run
+
+        branches = [compact_branch(b) for b in e_buckets]
+        bucket_idx = jnp.minimum(
+            jnp.sum((region_e > jnp.asarray(e_buckets, jnp.int32))
+                    .astype(jnp.int32)), len(e_buckets) - 1)
+        fits_compact = (region_v <= vcap) & (region_e <= e_buckets[-1])
+
+        def repair_compact(_):
+            return jax.lax.switch(bucket_idx, branches, None)
+
+        def dispatch(_, fits=fits_compact, below=repair_compact,
+                     above=dispatch):
+            return jax.lax.cond(fits, below, above, None)
+
+    # (1) dense MXU: small enough to densify; the adjacency closure runs
+    # through the injected reach_blockmm boolean mat-mul (Pallas on TPU,
+    # interpret-mode validation on CPU, jnp oracle under impl='xla').
     if cfg.dense_capacity > 0:
-        fits = jnp.sum(region) <= cfg.dense_capacity
+        def repair_dense(_):
+            def matmul(a, b):
+                return reach_blockmm.bool_matmul(
+                    a, b, impl=cfg.dense_matmul_impl)
+            lab, _fits = scc.scc_dense_region(src, dst, live, region,
+                                              cfg.dense_capacity,
+                                              matmul=matmul)
+            return lab, jnp.int32(TIER_DENSE)
 
-        def repair_dense():
-            lab, _ = scc.scc_dense_region(src, dst, live, region,
-                                          cfg.dense_capacity)
-            return lab
+        fits_dense = region_v <= cfg.dense_capacity
 
-        new_lab = jax.lax.cond(fits, repair_dense, repair_sparse)
-    else:
-        new_lab = repair_sparse()
+        def dispatch(_, fits=fits_dense, below=repair_dense,
+                     above=dispatch):
+            return jax.lax.cond(fits, below, above, None)
+
+    new_lab, tier = dispatch(None)
+    repair = RepairStats(tier=tier, region_vertices=region_v,
+                         region_edges=region_e)
 
     ccid = jnp.where(region, new_lab, ccid)
     ccid = jnp.where(v_alive, ccid, nv)
@@ -203,22 +288,22 @@ def _apply_batch_impl(state: gs.GraphState, ops: OpBatch,
         overflow=state.overflow + ovf,
     )
     new_state = gs.recount_ccs(new_state)
-    return new_state, ok, ovf
+    return new_state, ok, ovf, repair
 
 
 @partial(jax.jit, static_argnames=("cfg",))
 def apply_batch(state: gs.GraphState, ops: OpBatch, cfg: gs.GraphConfig):
     """One batch-atomic SMSCC step.  Returns (new_state, ok: bool[B])."""
-    new_state, ok, _ = _apply_batch_impl(state, ops, cfg)
+    new_state, ok, _, _ = _apply_batch_impl(state, ops, cfg)
     return new_state, ok
 
 
 # In-flight variants for the concurrent-reader pipeline: both return the
-# per-step overflow delta as a third output so the host can defer its only
-# sync point behind a window of dispatched steps.  The donating entry hands
-# the input state's buffers to XLA for reuse — callers must guarantee
-# nothing else (in particular no committed reader snapshot) still
-# references them.
+# per-step overflow delta and repair telemetry as extra outputs so the host
+# can defer its only sync point behind a window of dispatched steps.  The
+# donating entry hands the input state's buffers to XLA for reuse — callers
+# must guarantee nothing else (in particular no committed reader snapshot)
+# still references them.
 apply_batch_async = jax.jit(_apply_batch_impl, static_argnames=("cfg",))
 _apply_batch_donated = jax.jit(_apply_batch_impl, static_argnames=("cfg",),
                                donate_argnums=(0,))
@@ -228,10 +313,11 @@ def apply_batch_inflight(state: gs.GraphState, ops: OpBatch,
                          cfg: gs.GraphConfig, *, donate: bool = False):
     """Dispatch one step without forcing any host sync.
 
-    Returns ``(new_state, ok, ovf_delta)`` as in-flight device values.
-    With ``donate=True`` the input state's buffers are donated to the
-    output (saves a full state copy per step on accelerators; ignored
-    with a warning on CPU, where XLA does not implement donation).
+    Returns ``(new_state, ok, ovf_delta, RepairStats)`` as in-flight
+    device values.  With ``donate=True`` the input state's buffers are
+    donated to the output (saves a full state copy per step on
+    accelerators; ignored with a warning on CPU, where XLA does not
+    implement donation).
     """
     fn = _apply_batch_donated if donate else apply_batch_async
     return fn(state, ops, cfg)

@@ -93,12 +93,16 @@ def lookup(table: EdgeTable, u: jax.Array, v: jax.Array, max_probes: int
 
 def insert(table: EdgeTable, u: jax.Array, v: jax.Array, max_probes: int,
            enable: jax.Array | None = None
-           ) -> Tuple[EdgeTable, jax.Array]:
-    """Batched insert.  Returns ``(table, inserted: bool[B])``.
+           ) -> Tuple[EdgeTable, jax.Array, jax.Array]:
+    """Batched insert.  Returns ``(table, inserted: bool[B], failed: bool[B])``.
 
     ``inserted`` is False for keys already present, duplicate keys within the
     batch (only the first wins -- matching a sequential application order),
-    disabled lanes, and probe-bound overflow.
+    disabled lanes, and probe-bound overflow.  ``failed`` isolates the last
+    case: lanes that *wanted* a slot (enabled, key absent, not an intra-batch
+    duplicate) but exhausted the probe bound -- the table's own overflow
+    report, so callers never need a second probe sweep to detect dropped
+    keys.
     """
     cap = table.src.shape[0]
     b = u.shape[0]
@@ -156,7 +160,7 @@ def insert(table: EdgeTable, u: jax.Array, v: jax.Array, max_probes: int,
     probe = jnp.zeros((b,), jnp.int32)
     table, placed, _ = jax.lax.fori_loop(
         0, max_probes, round_body, (table, placed, probe))
-    return table, placed
+    return table, placed, want & ~placed
 
 
 def remove(table: EdgeTable, u: jax.Array, v: jax.Array, max_probes: int,
@@ -207,7 +211,8 @@ def rehash(table: EdgeTable, new_capacity: int, max_probes: int) -> EdgeTable:
         "new_capacity must be a power of two")
     live = table.state == LIVE
     fresh = empty(new_capacity)
-    fresh, _ = insert(fresh, table.src, table.dst, max_probes, enable=live)
+    fresh, _, _ = insert(fresh, table.src, table.dst, max_probes,
+                         enable=live)
     return fresh
 
 

@@ -42,6 +42,20 @@ class GraphConfig:
     max_outer: int = 128  # SCC peel rounds bound
     max_inner: int = 256  # reachability / fixpoint rounds bound (>= diameter)
     dense_capacity: int = 0  # >0 enables dense blocked repair path (Pallas)
+    # which reach_blockmm.bool_matmul implementation the dense tier feeds:
+    # 'auto' = Pallas MXU kernel on TPU / interpret-mode validation on CPU,
+    # 'pallas' / 'pallas_interpret' force those, 'xla' = jnp oracle fallback
+    dense_matmul_impl: str = "auto"
+    # compact-sparse repair tier: >0 (and < n_vertices) compacts affected
+    # regions of at most this many vertices into bounded sub-arrays so each
+    # fixpoint round costs O(region) instead of O(table capacity)
+    region_vertex_capacity: int = 0
+    # geometric registry of compact-COO edge capacities (static shapes, so
+    # the per-config compile count stays bounded by the registry size);
+    # buckets >= edge_capacity are dropped at dispatch (no smaller than the
+    # full table means no win).  The smallest bucket that holds the
+    # region's live edges is chosen per step; none fitting -> full sweep.
+    region_edge_buckets: tuple = (256, 4096, 65536)
     # optional PartitionSpec for the NV-sized label/frontier arrays inside
     # the repair fixpoints (None = replicated + all-reduce merge; a
     # 'model'-axis spec turns the merges into reduce-scatter-style
@@ -58,6 +72,14 @@ class GraphConfig:
     def __post_init__(self):
         assert self.edge_capacity & (self.edge_capacity - 1) == 0, (
             "edge_capacity must be a power of two")
+        # normalize so configs differing only in registry spelling hash the
+        # same (GraphConfig is a static jit argument)
+        object.__setattr__(self, "region_edge_buckets",
+                           tuple(sorted(set(int(b) for b in
+                                            self.region_edge_buckets))))
+        assert all(b > 0 for b in self.region_edge_buckets), (
+            "region_edge_buckets must be positive")
+        assert self.region_vertex_capacity >= 0
 
 
 class GraphState(NamedTuple):
@@ -96,14 +118,13 @@ def from_arrays(cfg: GraphConfig, src, dst, n_active_vertices=None) -> GraphStat
     if n_active_vertices is None:
         n_active_vertices = nv
     v_alive = (jnp.arange(nv) < n_active_vertices)
-    table, _ = et.insert(state.edges, src, dst, cfg.max_probes)
-    # overflow = keys genuinely absent after the bulk insert (duplicates in
-    # the input are found and therefore do not count as overflow).
-    found, _ = et.lookup(table, src, dst, cfg.max_probes)
+    # overflow = keys the table itself reports dropped on probe exhaustion
+    # (duplicates in the input are found / deduped, so they do not count).
+    table, _, failed = et.insert(state.edges, src, dst, cfg.max_probes)
     state = state._replace(
         v_alive=v_alive,
         edges=table,
-        overflow=state.overflow + jnp.sum(~found).astype(jnp.int32),
+        overflow=state.overflow + jnp.sum(failed).astype(jnp.int32),
     )
     return state
 

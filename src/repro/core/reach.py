@@ -6,9 +6,13 @@ is one edge-parallel gather + scatter-max over the COO edge table; rounds
 are bounded by the diameter of the *masked* region (the paper's "limited"
 property -- sweeps never leave the affected region).
 
-Two execution paths:
-  * sparse (this module): ``O(E)`` work per round on the VPU via segment ops;
-    right when the affected region is a small fraction of a large graph.
+Three execution paths:
+  * sparse (this module): ``O(E)`` work per round on the VPU via segment ops
+    over the full edge table; the overflow fallback for huge regions.
+  * compact sparse: the same fixpoints run over region-compacted operands
+    (:func:`repro.core.scc.compact_region`) -- every function here is
+    shape-generic, so the repair engine feeds it bounded sub-arrays and
+    each round costs O(region edges) instead of O(table capacity).
   * dense  (:mod:`repro.kernels.reach_blockmm`): boolean-semiring blocked
     mat-mul on the MXU; right when the region is compact enough to densify.
 

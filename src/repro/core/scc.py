@@ -21,9 +21,18 @@ dense path, a blocked boolean mat-mul (MXU):
 Labels are *canonical*: ccid[v] == min vertex id of v's SCC, matching the
 paper's invariant that an SCC's identity is stable while its membership is.
 
-The dense path (`scc_dense_region`) gathers a bounded affected region into a
-compact adjacency matrix and closes it with O(log R) boolean mat-mul
-squarings -- the Pallas ``reach_blockmm`` kernel's job on real TPUs.
+The repair engine runs in three tiers over the same affected region
+(:mod:`repro.core.dynamic` dispatches per step, smallest first):
+
+  * dense (`scc_dense_region`): gather the region into a compact adjacency
+    matrix and close it with O(log R) boolean mat-mul squarings -- the
+    Pallas ``reach_blockmm`` kernel's job on the MXU;
+  * compact sparse (`scc_compact_region`): gather region vertices and live
+    intra-region edges once into bounded static sub-arrays
+    (`compact_region`) and rerun the trim/color/backward fixpoints there,
+    so each round costs O(region edges) instead of O(table capacity);
+  * full sparse (`scc_static` over the full COO): the overflow fallback
+    when the region exceeds every compact capacity.
 """
 from __future__ import annotations
 
@@ -123,6 +132,98 @@ def scc_static(src, dst, live, active, *, max_outer: int, max_inner: int,
 
 
 # ---------------------------------------------------------------------------
+# Compact-sparse region path
+# ---------------------------------------------------------------------------
+
+def _enumerate_region(region_mask, capacity: int):
+    """Stable (ascending-global-id) enumeration of region members into
+    ``capacity`` slots.  Returns ``(pos_of int32[NV], ids int32[capacity],
+    valid bool[capacity])``; non-members and overflow land in a clamped
+    junk slot that ``ids`` never sees.  Order preservation is what both
+    compact tiers' bit-identity rests on: the min compact index and the
+    min global id of any subset name the same vertex."""
+    nv = region_mask.shape[0]
+    pos_of = jnp.cumsum(region_mask) - 1
+    pos_of = jnp.where(region_mask, pos_of, capacity)
+    pos_of = jnp.minimum(pos_of, capacity).astype(jnp.int32)
+    ids = jnp.full((capacity + 1,), -1, jnp.int32).at[pos_of].set(
+        jnp.arange(nv, dtype=jnp.int32), mode="drop")[:capacity]
+    return pos_of, ids, ids >= 0
+
+
+def compact_region(src, dst, live, region_mask, v_capacity: int,
+                   e_capacity: int):
+    """Pack the affected region into bounded compact COO arrays.
+
+    Region vertices are enumerated stably (ascending global id) into
+    ``v_capacity`` slots; live intra-region edges into ``e_capacity``
+    compact-index edge slots.  Returns
+    ``(csrc, cdst, celive, ids, valid, pos_of, fits)``:
+
+      * ``csrc/cdst`` int32[EC], ``celive`` bool[EC] -- the compacted edge
+        list over compact vertex indices [0, v_capacity);
+      * ``ids`` int32[VC] -- global id of each compact slot (-1 unused),
+        ``valid`` its occupancy mask, ``pos_of`` int32[NV] the inverse map;
+      * ``fits`` bool[] -- False when either capacity is exceeded (the
+        caller must fall back to the full-sparse sweep).
+
+    The enumeration is order-preserving, so the min compact index and the
+    min global id of any vertex subset name the same vertex -- canonical
+    min-member-id labels survive the compaction round trip bit-exactly.
+    """
+    v_count = jnp.sum(region_mask)
+    e_in = live & region_mask[src] & region_mask[dst]
+    e_count = jnp.sum(e_in)
+    fits = (v_count <= v_capacity) & (e_count <= e_capacity)
+    pos_of, ids, valid = _enumerate_region(region_mask, v_capacity)
+    # stable enumeration of live intra-region edges; overflowing or
+    # non-region edges land in the sliced-off junk slot
+    epos = jnp.cumsum(e_in) - 1
+    epos = jnp.where(e_in, epos, e_capacity)
+    epos = jnp.minimum(epos, e_capacity).astype(jnp.int32)
+    cap_src = jnp.minimum(pos_of[src], v_capacity - 1)
+    cap_dst = jnp.minimum(pos_of[dst], v_capacity - 1)
+    csrc = jnp.zeros((e_capacity + 1,), jnp.int32).at[epos].set(
+        cap_src, mode="drop")[:e_capacity]
+    cdst = jnp.zeros((e_capacity + 1,), jnp.int32).at[epos].set(
+        cap_dst, mode="drop")[:e_capacity]
+    celive = jnp.zeros((e_capacity + 1,), jnp.bool_).at[epos].set(
+        e_in, mode="drop")[:e_capacity]
+    return csrc, cdst, celive, ids, valid, pos_of, fits
+
+
+def scc_compact_region(src, dst, live, region_mask, v_capacity: int,
+                       e_capacity: int, *, max_outer: int, max_inner: int,
+                       shortcut: bool = False):
+    """SCC labels of the region via the compact-sparse tier.
+
+    Gathers the region once into static ``(v_capacity, e_capacity)``
+    sub-arrays and reruns the :func:`scc_static` fixpoints there, so every
+    trim/color/backward round costs O(region) gathers and scatters instead
+    of O(table capacity).  Returns ``(ccid int32[NV], fits bool[])`` --
+    labels valid where ``region_mask`` (INT32_MAX sentinel elsewhere) and
+    bit-identical to ``scc_static(src, dst, live, region_mask, ...)``: both
+    produce canonical min-member-id labels and the compact enumeration is
+    order-preserving.
+    """
+    nv = region_mask.shape[0]
+    csrc, cdst, celive, ids, valid, _, fits = compact_region(
+        src, dst, live, region_mask, v_capacity, e_capacity)
+    # no spec: the whole point is that compact operands are small enough to
+    # stay replicated, round after round
+    clab = scc_static(csrc, cdst, celive, valid, max_outer=max_outer,
+                      max_inner=max_inner, shortcut=shortcut)
+    # a slot scc_static left unassigned (sentinel; only possible when
+    # max_outer was exhausted) must stay the sentinel globally too, exactly
+    # as the full-sparse tier would report it -- never a clipped real id
+    glab = jnp.where(valid & (clab < v_capacity),
+                     ids[jnp.clip(clab, 0, v_capacity - 1)], INT32_MAX)
+    ccid = jnp.full((nv,), INT32_MAX, jnp.int32)
+    ccid = ccid.at[jnp.where(valid, ids, nv)].set(glab, mode="drop")
+    return ccid, fits
+
+
+# ---------------------------------------------------------------------------
 # Dense (MXU) region path
 # ---------------------------------------------------------------------------
 
@@ -133,17 +234,9 @@ def gather_region(src, dst, live, region_mask, capacity: int):
     ``fits`` is False when the region has more members than ``capacity``;
     the caller must then fall back to the sparse path.
     """
-    nv = region_mask.shape[0]
     count = jnp.sum(region_mask)
     fits = count <= capacity
-    # stable enumeration of region members
-    pos_of = jnp.cumsum(region_mask) - 1  # position of each member
-    pos_of = jnp.where(region_mask, pos_of, capacity)  # others -> dropped
-    pos_of = jnp.minimum(pos_of, capacity).astype(jnp.int32)
-    ids = jnp.full((capacity + 1,), -1, jnp.int32).at[pos_of].set(
-        jnp.arange(nv, dtype=jnp.int32), mode="drop")
-    ids = ids[:capacity]
-    valid = ids >= 0
+    pos_of, ids, valid = _enumerate_region(region_mask, capacity)
     # scatter live intra-region edges into the dense block
     e_in = live & region_mask[src] & region_mask[dst]
     r, c = pos_of[src], pos_of[dst]

@@ -205,6 +205,11 @@ class SCCService:
         self.compaction_count = 0
         self.pipelined_chunks = 0
         self.fallback_chunks = 0
+        # per-step repair-tier telemetry (dynamic.RepairStats resolved
+        # lazily, next to the overflow delta)
+        self.repair_tier_steps = {name: 0 for name in dynamic.TIER_NAMES}
+        self.repair_region_v_max = 0
+        self.repair_region_e_max = 0
 
     # ------------------------------------------------------------ state ---
 
@@ -225,9 +230,13 @@ class SCCService:
     def compile_count(self) -> int:
         """Distinct (step-path, batch-shape, graph-config) entries stepped
         so far -- an upper bound on *update-step* compiles.  The pipelined
-        fast path and the serial replay path are separate jit entries, so
-        the bound is ``2 x len(buckets)`` per graph config (the serial
-        entries only ever materialize on chunks that overflowed).  Table
+        fast path and the serial replay path are counted as separate
+        entries, so the bound is ``2 x len(buckets)`` per graph config
+        (the serial entries only ever materialize on chunks that
+        overflowed; on non-donating backends both paths actually share
+        one jit entry, so real compiles come in under the bound).  Repair
+        tiers never mint entries: tier dispatch is a runtime branch
+        inside the one compiled step program.  Table
         rehashes (one per target capacity) and query batches (one per
         query shape) have their own, separately-cached jit entries not
         counted here."""
@@ -275,7 +284,10 @@ class SCCService:
             entry_state, entry_cfg = self._state, self._cfg
             entry_stats = (set(self._compiled), self.grow_count,
                            self.replayed_ops, self.compaction_count,
-                           self.pipelined_chunks, self.fallback_chunks)
+                           self.pipelined_chunks, self.fallback_chunks,
+                           dict(self.repair_tier_steps),
+                           self.repair_region_v_max,
+                           self.repair_region_e_max)
             try:
                 ok = None
                 if self._inflight_window > 0:
@@ -297,7 +309,9 @@ class SCCService:
                 self._state, self._cfg = entry_state, entry_cfg
                 (self._compiled, self.grow_count, self.replayed_ops,
                  self.compaction_count, self.pipelined_chunks,
-                 self.fallback_chunks) = entry_stats
+                 self.fallback_chunks, self.repair_tier_steps,
+                 self.repair_region_v_max,
+                 self.repair_region_e_max) = entry_stats
                 raise
             with self._commit_cv:
                 self._committed = self._state
@@ -341,13 +355,15 @@ class SCCService:
         if self._donate:
             state = jax.tree_util.tree_map(jnp.copy, state)
         pending = []  # (chunk slice, in-flight ok device array)
+        repair = []  # in-flight dynamic.RepairStats per step
         window: collections.deque = collections.deque()  # ovf deltas
         for sl, ops in self._sched.chunks(kind, u, v):
             self._compiled.add(
                 ("pipelined", int(ops.kind.shape[0]), self._cfg))
-            state, ok_dev, ovf = dynamic.apply_batch_inflight(
+            state, ok_dev, ovf, rstats = dynamic.apply_batch_inflight(
                 state, ops, self._cfg, donate=self._donate)
             pending.append((sl, ok_dev))
+            repair.append(rstats)
             window.append(ovf)
             if len(window) > self._inflight_window:
                 if int(window.popleft()) != 0:
@@ -356,10 +372,19 @@ class SCCService:
             if int(window.popleft()) != 0:
                 return None
         self._state = state
+        for rstats in repair:  # everything already executed: cheap syncs
+            self._record_repair(rstats)
         ok = np.zeros(kind.shape[0], bool)
         for sl, ok_dev in pending:
             ok[sl] = np.asarray(ok_dev)[: sl.stop - sl.start]
         return ok
+
+    def _record_repair(self, rstats: dynamic.RepairStats):
+        self.repair_tier_steps[dynamic.TIER_NAMES[int(rstats.tier)]] += 1
+        self.repair_region_v_max = max(self.repair_region_v_max,
+                                       int(rstats.region_vertices))
+        self.repair_region_e_max = max(self.repair_region_e_max,
+                                       int(rstats.region_edges))
 
     def _apply_padded(self, ops: dynamic.OpBatch, depth: int = 0
                       ) -> np.ndarray:
@@ -367,10 +392,11 @@ class SCCService:
             raise RuntimeError("grow-and-replay did not converge; "
                                "max_edge_capacity too small for workload?")
         self._compiled.add((int(ops.kind.shape[0]), self._cfg))
-        prev_ovf = int(self._state.overflow)
-        self._state, ok = dynamic.apply_batch(self._state, ops, self._cfg)
+        self._state, ok, ovf, rstats = dynamic.apply_batch_async(
+            self._state, ops, self._cfg)
         ok = np.asarray(ok).copy()
-        if int(self._state.overflow) == prev_ovf:
+        self._record_repair(rstats)
+        if int(ovf) == 0:
             return ok
         failed = self._failed_add_lanes(ops, ok)
         if not failed.any():  # overflow already resolved by a later lane
@@ -518,4 +544,9 @@ class SCCService:
             "compile_count": self.compile_count,
             "pipelined_chunks": self.pipelined_chunks,
             "fallback_chunks": self.fallback_chunks,
+            "repair_dense_steps": self.repair_tier_steps["dense"],
+            "repair_compact_steps": self.repair_tier_steps["compact"],
+            "repair_full_steps": self.repair_tier_steps["full"],
+            "repair_region_v_max": self.repair_region_v_max,
+            "repair_region_e_max": self.repair_region_e_max,
         }

@@ -29,7 +29,7 @@ def test_insert_lookup_roundtrip():
     t = et.empty(CAP)
     u = jnp.array([1, 2, 3, 1], jnp.int32)
     v = jnp.array([9, 8, 7, 9], jnp.int32)  # (1,9) duplicated in batch
-    t, ins = et.insert(t, u, v, PROBES)
+    t, ins, _ = et.insert(t, u, v, PROBES)
     assert to_np(ins).tolist() == [True, True, True, False]
     found, _ = et.lookup(t, u, v, PROBES)
     assert to_np(found).all()
@@ -42,7 +42,7 @@ def test_remove_and_tombstone_chain():
     t = et.empty(CAP)
     u = jnp.arange(10, dtype=jnp.int32)
     v = (u * 7 + 1) % 11
-    t, ins = et.insert(t, u, v, PROBES)
+    t, ins, _ = et.insert(t, u, v, PROBES)
     assert to_np(ins).all()
     # remove half; duplicates in removal batch -> only first succeeds
     ru = jnp.array([0, 2, 4, 4], jnp.int32)
@@ -73,7 +73,7 @@ def test_against_set_oracle(ops):
         uu = jnp.array([u], jnp.int32)
         vv = jnp.array([v], jnp.int32)
         if is_ins:
-            t, okj = _insert(t, uu, vv, max_probes=PROBES)
+            t, okj, _ = _insert(t, uu, vv, max_probes=PROBES)
             ok = (u, v) not in oracle
             oracle.add((u, v))
         else:
@@ -97,7 +97,7 @@ def test_batch_insert_matches_sequential_order():
     t = et.empty(CAP)
     u = jnp.array([5, 5, 5], jnp.int32)
     v = jnp.array([6, 6, 6], jnp.int32)
-    t, ins = et.insert(t, u, v, PROBES)
+    t, ins, _ = et.insert(t, u, v, PROBES)
     assert to_np(ins).tolist() == [True, False, False]
     live, _ = et.fill_stats(t)
     assert int(live) == 1
@@ -107,7 +107,7 @@ def test_remove_incident():
     t = et.empty(CAP)
     u = jnp.array([0, 1, 2, 3], jnp.int32)
     v = jnp.array([1, 2, 3, 0], jnp.int32)
-    t, _ = et.insert(t, u, v, PROBES)
+    t, _, _ = et.insert(t, u, v, PROBES)
     mask = jnp.zeros((8,), bool).at[1].set(True)
     t, _ = et.remove_incident(t, mask)
     found, _ = et.lookup(t, u, v, PROBES)
@@ -118,5 +118,18 @@ def test_overflow_reports_failure():
     t = et.empty(8)
     u = jnp.arange(16, dtype=jnp.int32)
     v = jnp.arange(16, dtype=jnp.int32) + 100
-    t, ins = et.insert(t, u, v, 8)
+    t, ins, failed = et.insert(t, u, v, 8)
     assert int(jnp.sum(ins)) == 8  # table full: exactly capacity inserts
+    # the table's own overflow report: exactly the dropped lanes, and
+    # disjoint from the placed ones
+    assert int(jnp.sum(failed)) == 8
+    assert not bool(jnp.any(ins & failed))
+    # duplicates and already-present keys are NOT overflow
+    t2 = et.empty(8)
+    du = jnp.array([1, 1, 1], jnp.int32)
+    dv = jnp.array([2, 2, 2], jnp.int32)
+    t2, ins2, failed2 = et.insert(t2, du, dv, 8)
+    assert to_np(ins2).tolist() == [True, False, False]
+    assert not to_np(failed2).any()
+    _, _, failed3 = et.insert(t2, du, dv, 8)
+    assert not to_np(failed3).any()

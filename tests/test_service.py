@@ -85,7 +85,7 @@ def test_rehash_preserves_live_set_and_drops_tombs():
     table = et.empty(256)
     u = rng.integers(0, 64, 120).astype(np.int32)
     v = rng.integers(0, 64, 120).astype(np.int32)
-    table, _ = et.insert(table, u, v, 32)
+    table, _, _ = et.insert(table, u, v, 32)
     table, _ = et.remove(table, u[:40], v[:40], 32)
     live_before = {(int(s), int(d)) for s, d, st in
                    zip(np.asarray(table.src), np.asarray(table.dst),
