@@ -64,31 +64,54 @@ echo "== tier-1 tests (pytest.ini defaults to -m 'not slow') =="
 python -m pytest -x -q tests/
 
 if [[ "${1:-}" != "--fast" ]]; then
-    echo "== stream service smoke (grow-and-replay + mixes + overlap + repair tiers) =="
-    python -m benchmarks.bench_stream --smoke --json BENCH_stream.json
-    echo "== perf-trajectory gates (BENCH_stream.json) =="
+    echo "== stream service smoke (grow-and-replay + mixes + gate/scan + overlap + repair tiers) =="
+    # appends one labelled run to the perf trajectory (BENCH_LABEL env
+    # var names the point; defaults to the mode)
+    python -m benchmarks.bench_stream --smoke --json BENCH_stream.json \
+        ${BENCH_LABEL:+--label "$BENCH_LABEL"}
+    echo "== perf-trajectory gates (BENCH_stream.json, newest run) =="
     python - <<'PYEOF'
 import json
 
-rep = json.load(open("BENCH_stream.json"))
+trajectory = json.load(open("BENCH_stream.json"))
+assert isinstance(trajectory.get("runs"), list) and trajectory["runs"], (
+    "BENCH_stream.json is not the append-friendly runs schema")
+rep = trajectory["runs"][-1]  # gate the run this CI invocation appended
 buckets = rep["n_buckets"]
-tiers = rep["repair_tier_count"]
-# compile-count bound: tier dispatch is a runtime branch inside ONE
-# compiled step program, so the per-config bound stays 2 x buckets (step
-# paths) and is in particular <= buckets x repair-tiers per config
+scan_lengths = rep["n_scan_lengths"]
+# compile-count bound: repair tiers and the repair gate are runtime
+# branches inside ONE compiled step program; the per-config entries are
+# one fused-scan program per scan length, the single-step pipelined
+# program, and the serial grow-and-replay program per bucket
 for row in rep["mixes"]:
     n_cfgs = 1 + row["grows"] + row["compactions"]
-    bound = buckets * tiers * n_cfgs
+    bound = buckets * (scan_lengths + 1) * n_cfgs
     assert row["compiled_shapes"] <= bound, (
         f"{row['mix']}: {row['compiled_shapes']} compiled step shapes "
-        f"exceed the {buckets} buckets x {tiers} tiers x {n_cfgs} "
-        f"configs bound")
+        f"exceed the {buckets} buckets x ({scan_lengths} scan lengths "
+        f"+ serial) x {n_cfgs} configs bound")
+# fused-update-engine gate: the update-heavy mix must beat the committed
+# PR-4 baseline (154 combined ops/s on this smoke workload) by >= 3x,
+# with the repair gate and the scan engine demonstrably in the dataflow
+uh = next(r for r in rep["mixes"] if r["mix"] == "update_heavy")
+assert uh["combined_per_s"] >= 3 * 154, (
+    f"update-heavy mix too slow: {uh['combined_per_s']} combined ops/s "
+    f"< 3 x the committed PR-4 baseline (154)")
+assert uh["repair_skipped_steps"] > 0, "repair gate never skipped a step"
+assert uh["scanned_chunks"] > 0, "scan engine never fused a super-chunk"
+overhead = rep["client_overhead"]["overhead_frac"]
+assert isinstance(overhead, float), "overhead_frac must be a scalar"
 rt = rep["repair_tiers"]
 assert rt["tier_counts"]["compact"] > 0, "compact tier never fired"
 assert rt["compact_vs_full_speedup"] > 1.0, (
     "compact-sparse repair lost to full-sparse: "
     f"{rt['compact_vs_full_speedup']}x")
 print("perf-trajectory gates OK:",
+      f"update-heavy {uh['combined_per_s']} ops/s "
+      f"({uh['combined_per_s'] / 154:.1f}x the PR-4 baseline),",
+      f"{uh['repair_skipped_steps']} gated steps,",
+      f"{uh['scanned_chunks']} scanned chunks,",
+      f"client overhead {overhead:.1%},",
       f"repair speedup {rt['compact_vs_full_speedup']}x,",
       f"tier hits {rt['tier_counts']}")
 PYEOF

@@ -294,8 +294,13 @@ class GraphClient:
 
     def stats(self) -> dict:
         """One unified telemetry dict: service (pipelined/fallback chunks,
-        grows, compile bound), broker (coalesced flushes, gen waits), and
-        session counters."""
+        grows, compile bound; the fused-update-engine counters
+        ``scanned_chunks`` / ``scan_dispatches`` -- chunks and dispatches
+        that ran through the ``lax.scan`` super-chunk path -- and
+        ``repair_skipped_steps`` -- steps the in-graph repair gate proved
+        structure-preserving, next to the per-tier
+        ``repair_{dense,compact,full}_steps``), broker (coalesced
+        flushes, gen waits), and session counters."""
         s = dict(self._svc.stats())
         s.update(self._broker.stats())
         s.update(client_updates=self.updates_submitted,

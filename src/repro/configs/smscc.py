@@ -8,6 +8,15 @@ from repro.core import graph_state as gs
 
 FAMILY = "smscc"
 
+# Scan-length registry for the fused update engine (geometric, mirrors the
+# batch-bucket registry): runs of same-bucket chunks are stacked into
+# lax.scan super-chunks of the largest registered length that fits, so the
+# service pays one dispatch + one host sync per super-chunk.  1 is always
+# implied (no NOP-step padding); compile shapes stay bounded by
+# buckets x scan lengths per config.  SCCService default; drivers that
+# build their own service should pass scan_lengths=SCAN_LENGTHS.
+SCAN_LENGTHS = (1, 4, 16)
+
 SHAPES = {
     "update_1m": dict(kind="update", n_vertices=2 ** 20,
                       edge_capacity=2 ** 23, batch=8192),
@@ -27,6 +36,10 @@ def config(n_vertices=2 ** 20, edge_capacity=2 ** 23, **kw):
     # kernel pays off on real TPUs, not under CPU interpret mode.
     base.update(region_vertex_capacity=max(64, n_vertices // 8),
                 region_edge_buckets=(256, 4096, 65536))
+    # in-graph repair gate: on by default -- structure-preserving steps
+    # (the common case in the paper's update-heavy mixes) skip phase 5
+    # entirely at O(batch) cost, bit-identically (dynamic.TIER_SKIP).
+    base.update(repair_gate=True)
     base.update(kw)
     return gs.GraphConfig(n_vertices=n_vertices,
                           edge_capacity=edge_capacity, **base)

@@ -47,6 +47,20 @@ extra compilations); every tier produces bit-identical labels.  The
 chosen tier and the region's vertex/edge counts are returned as
 :class:`RepairStats` next to the overflow delta, and surfaced by
 ``SCCService.stats()``.
+
+Two step-level fusions keep the *update-heavy* path fast (the paper's
+Fig 4/5 regime, where most ops do not change SCC structure):
+
+  * the **repair gate** (``GraphConfig.repair_gate``, on by default) wraps
+    all of phase 5 in a ``lax.cond`` on a cheap in-graph predicate --
+    a step with no straddling insert and no deletion-affected SCC member
+    has a provably empty region, so the whole repair is skipped
+    (``RepairStats.tier == TIER_SKIP``) at O(batch) cost, bit-identically;
+  * the **scan engine** (:func:`apply_batch_scan`) runs K same-bucket
+    chunks through the step inside one compiled ``lax.scan``, carrying the
+    state and stacking per-step ``ok``/overflow/:class:`RepairStats`
+    outputs, so the service dispatches (and host-syncs) once per
+    super-chunk instead of per chunk.
 """
 from __future__ import annotations
 
@@ -69,20 +83,16 @@ NOP = 4
 
 INT32_MAX = jnp.iinfo(jnp.int32).max
 
-# repair-tier codes reported in RepairStats.tier, ordered by preference:
-# the dispatcher picks the smallest tier the region fits
-TIER_DENSE = 0     # region densified, closed on the MXU (reach_blockmm)
-TIER_COMPACT = 1   # region compacted to bounded COO, sparse fixpoints there
-TIER_FULL = 2      # full-table sparse fixpoints (overflow fallback)
-TIER_NAMES = ("dense", "compact", "full")
-
-
-class RepairStats(NamedTuple):
-    """Per-step repair telemetry (device scalars, resolved lazily by the
-    service next to the overflow delta)."""
-    tier: jax.Array             # int32[]  TIER_DENSE | TIER_COMPACT | TIER_FULL
-    region_vertices: jax.Array  # int32[]  |M_del ∪ (FW ∩ BW)| this step
-    region_edges: jax.Array     # int32[]  live intra-region edges this step
+# Repair-tier codes / names / stats pytree live in graph_state (the scan
+# entry stacks RepairStats leaves, and keeping the pytree next to
+# GraphState avoids a dynamic<->graph_state import cycle); re-exported
+# here because this module is the tier dispatcher's home.
+TIER_DENSE = gs.TIER_DENSE
+TIER_COMPACT = gs.TIER_COMPACT
+TIER_FULL = gs.TIER_FULL
+TIER_SKIP = gs.TIER_SKIP
+TIER_NAMES = gs.TIER_NAMES
+RepairStats = gs.RepairStats
 
 
 class OpBatch(NamedTuple):
@@ -192,91 +202,118 @@ def _apply_batch_impl(state: gs.GraphState, ops: OpBatch,
     # edges that straddle two current classes (paper Alg. 15 line 226 check)
     straddle = inserted & (ccid[jnp.clip(ops.u, 0, nv - 1)] !=
                            ccid[jnp.clip(ops.v, 0, nv - 1)])
-    seed_f = jnp.zeros((nv,), jnp.bool_).at[
-        jnp.where(straddle, ops.v, nv)].set(True, mode="drop")
-    seed_b = jnp.zeros((nv,), jnp.bool_).at[
-        jnp.where(straddle, ops.u, nv)].set(True, mode="drop")
-    if cfg.fuse_fwbw:
-        fw, bw, _ = reach.fused_fw_bw_reach(
-            src, dst, live, seed_f, seed_b, v_alive, cfg.max_inner,
-            spec=cfg.label_spec)
+
+    def run_repair(_):
+        seed_f = jnp.zeros((nv,), jnp.bool_).at[
+            jnp.where(straddle, ops.v, nv)].set(True, mode="drop")
+        seed_b = jnp.zeros((nv,), jnp.bool_).at[
+            jnp.where(straddle, ops.u, nv)].set(True, mode="drop")
+        if cfg.fuse_fwbw:
+            fw, bw, _ = reach.fused_fw_bw_reach(
+                src, dst, live, seed_f, seed_b, v_alive, cfg.max_inner,
+                spec=cfg.label_spec)
+        else:
+            fw, _ = reach.forward_reach(src, dst, live, seed_f, v_alive,
+                                        cfg.max_inner, spec=cfg.label_spec)
+            bw, _ = reach.backward_reach(src, dst, live, seed_b, v_alive,
+                                         cfg.max_inner, spec=cfg.label_spec)
+        region = (m_del | (fw & bw)) & v_alive
+        region_v = jnp.sum(region).astype(jnp.int32)
+        region_e = jnp.sum(live & region[src] & region[dst]
+                           ).astype(jnp.int32)
+
+        # Tiered repair dispatch: the region is the same for every tier;
+        # each tier is a cheaper execution of the identical masked
+        # static-SCC pass.  Tiers nest smallest-first via lax.cond (one
+        # compiled program per cfg -- tier choice is a runtime branch,
+        # never a recompile).
+        def repair_full(_):
+            lab = scc.scc_static(src, dst, live, region,
+                                 max_outer=cfg.max_outer,
+                                 max_inner=cfg.max_inner,
+                                 spec=cfg.label_spec,
+                                 shortcut=cfg.shortcut)
+            return lab, jnp.int32(TIER_FULL)
+
+        dispatch = repair_full
+
+        # (2) compact sparse: region fits the bounded compact COO.  Edge
+        # slots come from the geometric bucket registry; the smallest
+        # bucket that holds the region's live edges wins (lax.switch over
+        # static shapes).
+        e_buckets = tuple(b for b in cfg.region_edge_buckets
+                          if b < cfg.edge_capacity)
+        if 0 < cfg.region_vertex_capacity < nv and e_buckets:
+            vcap = cfg.region_vertex_capacity
+
+            def compact_branch(ecap):
+                def run(_):
+                    lab, _fits = scc.scc_compact_region(
+                        src, dst, live, region, vcap, ecap,
+                        max_outer=cfg.max_outer, max_inner=cfg.max_inner,
+                        shortcut=cfg.shortcut)
+                    return lab, jnp.int32(TIER_COMPACT)
+                return run
+
+            branches = [compact_branch(b) for b in e_buckets]
+            bucket_idx = jnp.minimum(
+                jnp.sum((region_e > jnp.asarray(e_buckets, jnp.int32))
+                        .astype(jnp.int32)), len(e_buckets) - 1)
+            fits_compact = (region_v <= vcap) & (region_e <= e_buckets[-1])
+
+            def repair_compact(_):
+                return jax.lax.switch(bucket_idx, branches, None)
+
+            def dispatch(_, fits=fits_compact, below=repair_compact,
+                         above=dispatch):
+                return jax.lax.cond(fits, below, above, None)
+
+        # (1) dense MXU: small enough to densify; the adjacency closure
+        # runs through the injected reach_blockmm boolean mat-mul (Pallas
+        # on TPU, interpret-mode validation on CPU, jnp oracle under
+        # impl='xla').
+        if cfg.dense_capacity > 0:
+            def repair_dense(_):
+                def matmul(a, b):
+                    return reach_blockmm.bool_matmul(
+                        a, b, impl=cfg.dense_matmul_impl)
+                lab, _fits = scc.scc_dense_region(src, dst, live, region,
+                                                  cfg.dense_capacity,
+                                                  matmul=matmul)
+                return lab, jnp.int32(TIER_DENSE)
+
+            fits_dense = region_v <= cfg.dense_capacity
+
+            def dispatch(_, fits=fits_dense, below=repair_dense,
+                         above=dispatch):
+                return jax.lax.cond(fits, below, above, None)
+
+        new_lab, tier = dispatch(None)
+        repair = RepairStats(tier=tier, region_vertices=region_v,
+                             region_edges=region_e)
+        return jnp.where(region, new_lab, ccid), repair
+
+    if cfg.repair_gate:
+        # In-graph repair gate: the region is M_del ∪ (FW ∩ BW), FW/BW are
+        # seeded only by straddling inserts, so `no straddle and no
+        # deletion-affected member` proves the region EMPTY -- every tier's
+        # masked pass would be the identity on ccid.  Skipping is therefore
+        # exact (bit-identical labels), not merely conservative; the
+        # conservative direction (repair may run on a batch that turns out
+        # structure-preserving, e.g. a RemoveEdge inside an SCC that stays
+        # strongly connected) errs safe.  lax.cond keeps it one compiled
+        # program: a structure-preserving step costs O(batch + NV) instead
+        # of O(region fixpoint).
+        need_repair = jnp.any(m_del) | jnp.any(straddle)
+
+        def skip_repair(_):
+            return ccid, gs.repair_skipped()
+
+        ccid, repair = jax.lax.cond(need_repair, run_repair, skip_repair,
+                                    None)
     else:
-        fw, _ = reach.forward_reach(src, dst, live, seed_f, v_alive,
-                                    cfg.max_inner, spec=cfg.label_spec)
-        bw, _ = reach.backward_reach(src, dst, live, seed_b, v_alive,
-                                     cfg.max_inner, spec=cfg.label_spec)
-    region = (m_del | (fw & bw)) & v_alive
-    region_v = jnp.sum(region).astype(jnp.int32)
-    region_e = jnp.sum(live & region[src] & region[dst]).astype(jnp.int32)
+        ccid, repair = run_repair(None)
 
-    # Tiered repair dispatch: the region is the same for every tier; each
-    # tier is a cheaper execution of the identical masked static-SCC pass.
-    # Tiers nest smallest-first via lax.cond (one compiled program per cfg
-    # -- tier choice is a runtime branch, never a recompile).
-    def repair_full(_):
-        lab = scc.scc_static(src, dst, live, region,
-                             max_outer=cfg.max_outer,
-                             max_inner=cfg.max_inner,
-                             spec=cfg.label_spec,
-                             shortcut=cfg.shortcut)
-        return lab, jnp.int32(TIER_FULL)
-
-    dispatch = repair_full
-
-    # (2) compact sparse: region fits the bounded compact COO.  Edge slots
-    # come from the geometric bucket registry; the smallest bucket that
-    # holds the region's live edges wins (lax.switch over static shapes).
-    e_buckets = tuple(b for b in cfg.region_edge_buckets
-                      if b < cfg.edge_capacity)
-    if 0 < cfg.region_vertex_capacity < nv and e_buckets:
-        vcap = cfg.region_vertex_capacity
-
-        def compact_branch(ecap):
-            def run(_):
-                lab, _fits = scc.scc_compact_region(
-                    src, dst, live, region, vcap, ecap,
-                    max_outer=cfg.max_outer, max_inner=cfg.max_inner,
-                    shortcut=cfg.shortcut)
-                return lab, jnp.int32(TIER_COMPACT)
-            return run
-
-        branches = [compact_branch(b) for b in e_buckets]
-        bucket_idx = jnp.minimum(
-            jnp.sum((region_e > jnp.asarray(e_buckets, jnp.int32))
-                    .astype(jnp.int32)), len(e_buckets) - 1)
-        fits_compact = (region_v <= vcap) & (region_e <= e_buckets[-1])
-
-        def repair_compact(_):
-            return jax.lax.switch(bucket_idx, branches, None)
-
-        def dispatch(_, fits=fits_compact, below=repair_compact,
-                     above=dispatch):
-            return jax.lax.cond(fits, below, above, None)
-
-    # (1) dense MXU: small enough to densify; the adjacency closure runs
-    # through the injected reach_blockmm boolean mat-mul (Pallas on TPU,
-    # interpret-mode validation on CPU, jnp oracle under impl='xla').
-    if cfg.dense_capacity > 0:
-        def repair_dense(_):
-            def matmul(a, b):
-                return reach_blockmm.bool_matmul(
-                    a, b, impl=cfg.dense_matmul_impl)
-            lab, _fits = scc.scc_dense_region(src, dst, live, region,
-                                              cfg.dense_capacity,
-                                              matmul=matmul)
-            return lab, jnp.int32(TIER_DENSE)
-
-        fits_dense = region_v <= cfg.dense_capacity
-
-        def dispatch(_, fits=fits_dense, below=repair_dense,
-                     above=dispatch):
-            return jax.lax.cond(fits, below, above, None)
-
-    new_lab, tier = dispatch(None)
-    repair = RepairStats(tier=tier, region_vertices=region_v,
-                         region_edges=region_e)
-
-    ccid = jnp.where(region, new_lab, ccid)
     ccid = jnp.where(v_alive, ccid, nv)
 
     new_state = gs.GraphState(
@@ -320,6 +357,55 @@ def apply_batch_inflight(state: gs.GraphState, ops: OpBatch,
     implement donation).
     """
     fn = _apply_batch_donated if donate else apply_batch_async
+    return fn(state, ops, cfg)
+
+
+# --------------------------------------------------------------------------
+# Fused multi-chunk scan engine
+# --------------------------------------------------------------------------
+
+def _apply_batch_scan_impl(state: gs.GraphState, ops: OpBatch,
+                           cfg: gs.GraphConfig):
+    """K stacked bucket-shaped chunks through the full 5-phase step inside
+    ONE compiled program.
+
+    ``ops`` carries ``int32[K, B]`` leaves (K same-bucket chunks stacked
+    along a scan axis); ``lax.scan`` threads the :class:`GraphState` carry
+    through the K steps and stacks the per-step outputs, so the host pays
+    one dispatch (and later one transfer) per *super-chunk* instead of per
+    chunk.  Each scan step is the unmodified ``_apply_batch_impl`` -- the
+    linearization, per-op results, overflow accounting, and labels are
+    bit-identical to K sequential ``apply_batch`` calls.
+
+    Returns ``(new_state, ok: bool[K, B], ovf_delta: int32[K],
+    RepairStats with int32[K] leaves)``; all three trailing outputs are
+    dedicated buffers (never aliased to the carry), so a donating caller
+    can hand ``state`` to the next super-chunk and still resolve them.
+    """
+
+    def body(st, op):
+        st, ok, ovf, repair = _apply_batch_impl(st, op, cfg)
+        return st, (ok, ovf, repair)
+
+    state, (ok, ovf, repair) = jax.lax.scan(body, state, ops)
+    return state, ok, ovf, repair
+
+
+apply_batch_scan = jax.jit(_apply_batch_scan_impl, static_argnames=("cfg",))
+_apply_batch_scan_donated = jax.jit(_apply_batch_scan_impl,
+                                    static_argnames=("cfg",),
+                                    donate_argnums=(0,))
+
+
+def apply_batch_scan_inflight(state: gs.GraphState, ops: OpBatch,
+                              cfg: gs.GraphConfig, *, donate: bool = False):
+    """Dispatch one K-chunk super-chunk without forcing any host sync.
+
+    The scan analogue of :func:`apply_batch_inflight`: one jit entry per
+    ``(K, bucket, cfg)`` from the service's scan-length registry, so the
+    compile count stays bounded by ``buckets x scan_lengths`` per config.
+    """
+    fn = _apply_batch_scan_donated if donate else apply_batch_scan
     return fn(state, ops, cfg)
 
 

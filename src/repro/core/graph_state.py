@@ -31,6 +31,33 @@ from repro.core import edge_table as et
 # Sentinel label meaning "no SCC / dead vertex".  Any value >= n_vertices works.
 INT32_MAX = jnp.iinfo(jnp.int32).max
 
+# Repair-tier codes reported in RepairStats.tier, ordered by preference:
+# the phase-5 dispatcher picks the smallest tier the affected region fits,
+# and TIER_SKIP records that the repair gate proved the step needed no
+# repair at all (the region was empty, so every tier would be a no-op).
+TIER_DENSE = 0     # region densified, closed on the MXU (reach_blockmm)
+TIER_COMPACT = 1   # region compacted to bounded COO, sparse fixpoints there
+TIER_FULL = 2      # full-table sparse fixpoints (overflow fallback)
+TIER_SKIP = 3      # repair gate: structure-preserving step, phase 5 skipped
+TIER_NAMES = ("dense", "compact", "full", "skipped")
+
+
+class RepairStats(NamedTuple):
+    """Per-step repair telemetry (device scalars; stacked to int32[K]
+    leaves by the ``apply_batch_scan`` entry and resolved lazily by the
+    service next to the overflow delta)."""
+    tier: jax.Array             # int32[]  TIER_DENSE..TIER_SKIP
+    region_vertices: jax.Array  # int32[]  |M_del ∪ (FW ∩ BW)| this step
+    region_edges: jax.Array     # int32[]  live intra-region edges this step
+
+
+def repair_skipped() -> RepairStats:
+    """The stats a gated (structure-preserving) step reports: no tier ran,
+    no region was materialized."""
+    return RepairStats(tier=jnp.int32(TIER_SKIP),
+                       region_vertices=jnp.int32(0),
+                       region_edges=jnp.int32(0))
+
 
 @dataclasses.dataclass(frozen=True)
 class GraphConfig:
@@ -68,6 +95,14 @@ class GraphConfig:
     # Shiloach-Vishkin pointer doubling in the coloring sweep: label
     # chains collapse in O(log diameter) rounds (§Perf knob)
     shortcut: bool = False
+    # in-graph repair gate: wrap all of phase 5 (the FW/BW sweeps and the
+    # tiered masked static-SCC pass) in a lax.cond on a cheap on-device
+    # predicate computed from the batch -- a step whose region is provably
+    # empty (no straddling insert, no deletion-affected class) costs
+    # O(batch) instead of O(region fixpoint).  The predicate is exact for
+    # skipping (empty region == repair is a no-op), so gated and ungated
+    # runs are bit-identical; gating only changes RepairStats (TIER_SKIP).
+    repair_gate: bool = True
 
     def __post_init__(self):
         assert self.edge_capacity & (self.edge_capacity - 1) == 0, (

@@ -32,21 +32,29 @@ snapshot queries
     the batched analogue of the paper's wait-free reader guarantee -- and
     every query result is stamped with the generation it was computed at.
 
-concurrent-reader pipeline
-    The updater path no longer forces a device->host sync per step: a
-    chunk's bucket batches are dispatched through
-    ``dynamic.apply_batch_inflight`` (async dispatch, optional buffer
-    donation between steps), and the only host sync -- the per-step
-    overflow delta -- is resolved behind a bounded in-flight window.  A
-    chunk whose window stays overflow-free commits in one shot; any
-    overflow aborts the fast path and the chunk re-runs on the serial
-    grow-and-replay path from the untouched committed snapshot, so results
-    are bit-identical either way.  The committed snapshot is
-    double-buffered against donation (the pipeline steps off a private
-    device copy), which is what lets a :class:`repro.core.broker.QueryBroker`
-    serve readers from ``service.state`` while the next update step is
-    still executing.  See ``docs/ARCHITECTURE.md`` for the full request
-    lifecycle and ``docs/SERVICE_API.md`` for the consistency contract.
+concurrent-reader pipeline + fused scan engine
+    The updater path no longer forces a device->host sync (or even a
+    dispatch) per step: runs of same-bucket batches are stacked into
+    *super-chunks* from a geometric scan-length registry and dispatched
+    through ``dynamic.apply_batch_scan_inflight`` -- one fused
+    ``lax.scan`` program per (scan length, bucket, cfg), one dispatch
+    and one deferred ``jax.device_get`` of the stacked
+    (ok, overflow, RepairStats) tuple per super-chunk, optional buffer
+    donation between super-chunks -- resolved behind a bounded in-flight
+    window.  A chunk whose window stays overflow-free commits in one
+    shot; overflow aborts the fast path and the serial grow-and-replay
+    path replays from the first chunk of the offending super-chunk
+    (resolved-clean prefix kept) when its input state is still alive,
+    else from the untouched committed snapshot -- results are
+    bit-identical every way.  The committed snapshot is double-buffered
+    against donation (the pipeline steps off a private device copy),
+    which is what lets a :class:`repro.core.broker.QueryBroker` serve
+    readers from ``service.state`` while the next update step is still
+    executing.  With ``proactive_grow`` the service additionally
+    rehashes ahead of a chunk whose deduped AddEdge lanes cannot fit,
+    keeping growth waves off the dispatch critical path.  See
+    ``docs/ARCHITECTURE.md`` for the full request lifecycle and
+    ``docs/SERVICE_API.md`` for the consistency contract.
 """
 from __future__ import annotations
 
@@ -178,7 +186,9 @@ class SCCService:
                  max_edge_capacity: int | None = None,
                  compact_tomb_frac: float = 0.25,
                  inflight_window: int = 8,
-                 donate: bool | None = None):
+                 donate: bool | None = None,
+                 scan_lengths: Sequence[int] = (1, 4, 16),
+                 proactive_grow: bool = False):
         from repro.launch.stream import BucketedScheduler
         self._cfg = cfg
         self._state = gs.empty(cfg) if state is None else state
@@ -186,13 +196,33 @@ class SCCService:
         self._grow_factor = grow_factor
         self._max_edge_capacity = max_edge_capacity
         self._compact_tomb_frac = compact_tomb_frac
-        # concurrent pipeline: how many dispatched steps may be in flight
-        # before the oldest overflow delta is resolved (0 = serial path
-        # only, the pre-pipeline behaviour); donation defaults to on
-        # wherever XLA implements it (not CPU).
+        # concurrent pipeline: how many dispatched super-chunks may be in
+        # flight before the oldest (ok, ovf, repair) tuple is resolved
+        # (0 = serial path only, the pre-pipeline behaviour); donation
+        # defaults to on wherever XLA implements it (not CPU).
         self._inflight_window = inflight_window
         self._donate = (jax.default_backend() != "cpu"
                         ) if donate is None else donate
+        # scan-length registry (geometric, like the bucket registry): a
+        # run of K same-bucket chunks is cut into the largest registered
+        # lengths and each group runs as ONE fused lax.scan dispatch with
+        # one deferred host transfer.  1 is always in the registry, so no
+        # super-chunk is ever padded with NOP steps (generation counting
+        # stays identical to the serial path).
+        self._scan_lengths = tuple(sorted({int(s) for s in scan_lengths}
+                                          | {1}))
+        # proactive growth: rehash ahead of a chunk whose AddEdge lanes
+        # cannot possibly fit the current table (live + adds > capacity),
+        # instead of letting the chunk overflow and replay.  Pure
+        # heuristic -- reactive grow-and-replay remains the correctness
+        # backstop -- but it keeps growth off the dispatch critical path
+        # (no doomed pipelined execution, no serial re-run, fewer step
+        # recompiles per growth wave).
+        self._proactive_grow = proactive_grow
+        # host-side upper bound on the live edge count (true live never
+        # exceeds capacity, so this needs no boot sync); tightened
+        # whenever a rehash or the proactive probe pays a sync anyway
+        self._live_ub = cfg.edge_capacity
         self._committed = self._state
         # update-path serialization (many GraphClient sessions may share
         # one service) + commit notification for consistency-level waits
@@ -201,12 +231,16 @@ class SCCService:
         # telemetry
         self._compiled: set = set()
         self.grow_count = 0
+        self.proactive_grows = 0
         self.replayed_ops = 0
         self.compaction_count = 0
         self.pipelined_chunks = 0
         self.fallback_chunks = 0
+        self.scanned_chunks = 0
+        self.scan_dispatches = 0
         # per-step repair-tier telemetry (dynamic.RepairStats resolved
-        # lazily, next to the overflow delta)
+        # lazily, next to the overflow delta; "skipped" counts steps the
+        # repair gate proved structure-preserving)
         self.repair_tier_steps = {name: 0 for name in dynamic.TIER_NAMES}
         self.repair_region_v_max = 0
         self.repair_region_e_max = 0
@@ -229,17 +263,20 @@ class SCCService:
     @property
     def compile_count(self) -> int:
         """Distinct (step-path, batch-shape, graph-config) entries stepped
-        so far -- an upper bound on *update-step* compiles.  The pipelined
-        fast path and the serial replay path are counted as separate
-        entries, so the bound is ``2 x len(buckets)`` per graph config
-        (the serial entries only ever materialize on chunks that
-        overflowed; on non-donating backends both paths actually share
-        one jit entry, so real compiles come in under the bound).  Repair
-        tiers never mint entries: tier dispatch is a runtime branch
-        inside the one compiled step program.  Table
-        rehashes (one per target capacity) and query batches (one per
-        query shape) have their own, separately-cached jit entries not
-        counted here."""
+        so far -- an upper bound on *update-step* compiles.  Per graph
+        config the entries are: one fused-scan program per (scan length
+        > 1, bucket) pair, one single-step pipelined program per bucket
+        (super-chunks of length 1 reuse it), and one serial
+        grow-and-replay program per bucket -- the bound is
+        ``len(buckets) x (len(scan_lengths) + 1)`` per config.  The
+        serial entries only ever materialize on chunks that overflowed;
+        on non-donating backends the single-step pipelined and serial
+        paths actually share one jit entry, so real compiles come in
+        under the bound.  Repair tiers and the repair gate never mint
+        entries: both are runtime branches inside the one compiled step
+        program.  Table rehashes (one per target capacity) and query
+        batches (one per query shape) have their own, separately-cached
+        jit entries not counted here."""
         return len(self._compiled)
 
     # ---------------------------------------------------------- updates ---
@@ -261,6 +298,23 @@ class SCCService:
             ok = self._apply_chunk(kind, u, v)
             return ok, self.gen
 
+    _STAT_ATTRS = ("grow_count", "proactive_grows", "replayed_ops",
+                   "compaction_count", "pipelined_chunks",
+                   "fallback_chunks", "scanned_chunks", "scan_dispatches",
+                   "repair_region_v_max", "repair_region_e_max")
+
+    def _stats_snapshot(self) -> dict:
+        snap = {a: getattr(self, a) for a in self._STAT_ATTRS}
+        snap["_compiled"] = set(self._compiled)
+        snap["repair_tier_steps"] = dict(self.repair_tier_steps)
+        return snap
+
+    def _stats_restore(self, snap: dict):
+        for a in self._STAT_ATTRS:
+            setattr(self, a, snap[a])
+        self._compiled = snap["_compiled"]
+        self.repair_tier_steps = snap["repair_tier_steps"]
+
     def _apply_chunk(self, kind, u, v) -> np.ndarray:
         """Apply a variable-length op stream chunk; returns ok: bool[N].
 
@@ -269,49 +323,61 @@ class SCCService:
         match the documented per-batch linearization applied bucket by
         bucket.
 
-        Fast path: all batches are dispatched as in-flight device steps
-        (no per-batch host sync; buffers donated step-to-step when the
-        backend supports it) and the chunk commits after one deferred
-        overflow check.  Any overflow aborts the fast path and the chunk
-        re-runs on the serial grow-and-replay path from the untouched
-        committed snapshot -- the two paths compute identical results, so
-        callers cannot observe which one ran.
+        Fast path: the bucket batches are grouped into scan-length
+        super-chunks and dispatched as fused in-flight ``lax.scan`` steps
+        (one dispatch and one deferred host transfer per super-chunk;
+        buffers donated super-chunk-to-super-chunk when the backend
+        supports it) and the chunk commits after the deferred overflow
+        checks drain clean.  Overflow anywhere aborts the fast path and
+        the chunk re-runs on the serial grow-and-replay path, replaying
+        only from the first chunk of the offending super-chunk when its
+        input state is still alive (always, unless donation consumed it
+        -- then from the untouched committed snapshot).  Every path
+        computes identical results, so callers cannot observe which ran.
         """
         kind = np.asarray(kind, np.int32)
         u = np.asarray(u, np.int32)
         v = np.asarray(v, np.int32)
         with self._apply_lock:
             entry_state, entry_cfg = self._state, self._cfg
-            entry_stats = (set(self._compiled), self.grow_count,
-                           self.replayed_ops, self.compaction_count,
-                           self.pipelined_chunks, self.fallback_chunks,
-                           dict(self.repair_tier_steps),
-                           self.repair_region_v_max,
-                           self.repair_region_e_max)
+            entry_stats = self._stats_snapshot()
             try:
-                ok = None
+                if self._proactive_grow:
+                    self._maybe_grow_proactive(kind, u, v)
+                # the chunk's base: after any proactive growth (a replay
+                # from scratch must not undo the rehash, only the ops)
+                base_state, base_cfg = self._state, self._cfg
+                ok, replay = None, (0, None)
                 if self._inflight_window > 0:
-                    ok = self._apply_pipelined(kind, u, v)
-                if ok is None:  # overflow (or pipeline off): serial path
+                    ok, replay = self._apply_pipelined(kind, u, v)
+                if replay is not None:  # overflow (or pipeline off)
+                    start, restore = replay
                     self.fallback_chunks += 1
-                    self._state, self._cfg = entry_state, entry_cfg
-                    ok = np.zeros(kind.shape[0], bool)
-                    for sl, ops in self._sched.chunks(kind, u, v):
+                    if restore is None:  # donated / pipeline off: restart
+                        start = 0
+                        self._state, self._cfg = base_state, base_cfg
+                        ok = np.zeros(kind.shape[0], bool)
+                    else:  # prefix super-chunks stay applied
+                        self._state = restore
+                    for sl, ops in self._sched.chunks(kind[start:],
+                                                      u[start:], v[start:]):
                         n_real = sl.stop - sl.start
-                        ok[sl] = self._apply_padded(ops)[:n_real]
+                        ok[start + sl.start:start + sl.start + n_real] = \
+                            self._apply_padded(ops)[:n_real]
                 else:
                     self.pipelined_chunks += 1
+                # inserts can only add this chunk's AddEdge lanes; keep
+                # the host-side live bound current without a sync
+                self._live_ub = min(
+                    self._cfg.edge_capacity,
+                    self._live_ub + int(np.sum(kind == dynamic.ADD_EDGE)))
                 self._maybe_compact()
             except Exception:
                 # all-or-nothing chunk: never let a half-applied batch, a
                 # cfg that no longer matches the table, or telemetry for
                 # aborted work leak into the next chunk's commit
                 self._state, self._cfg = entry_state, entry_cfg
-                (self._compiled, self.grow_count, self.replayed_ops,
-                 self.compaction_count, self.pipelined_chunks,
-                 self.fallback_chunks, self.repair_tier_steps,
-                 self.repair_region_v_max,
-                 self.repair_region_e_max) = entry_stats
+                self._stats_restore(entry_stats)
                 raise
             with self._commit_cv:
                 self._committed = self._state
@@ -336,55 +402,172 @@ class SCCService:
                     self._commit_cv.wait(remaining)
             return self.gen
 
-    def _apply_pipelined(self, kind, u, v) -> np.ndarray | None:
-        """Dispatch the whole chunk without per-batch host syncs.
+    def _maybe_grow_proactive(self, kind: np.ndarray, u: np.ndarray,
+                              v: np.ndarray):
+        """Grow ahead of a chunk whose AddEdge lanes cannot all fit.
 
-        Steps are enqueued back-to-back; each step's overflow delta is a
-        dedicated output resolved only once ``inflight_window`` newer
-        steps have been dispatched (or at drain).  Returns the per-op ok
-        vector, or ``None`` if any step overflowed -- in which case
-        nothing was committed and the caller replays the chunk on the
-        serial grow-and-replay path.
-
-        When donating, the pipeline steps off a private device copy of the
-        committed snapshot (double buffering): readers keep a valid
-        ``self._committed`` while XLA reuses the pipeline's own buffers
-        step-to-step.
+        Heuristic trigger, exact effect.  The chunk's AddEdge keys are
+        deduped and probed against the table (re-adds of live edges can
+        never take a slot), so a steady-state re-add chunk never
+        triggers a spurious rehash; the chunk's remove lanes are
+        subtracted as a crude proxy for same-chunk frees (edge removals
+        and vertex-kill incident trims land *before* the adds in each
+        batch's phase order, so churn-heavy mixes keep fitting the
+        table).  The cheap host-side live upper bound short-circuits
+        the device probe in the common no-pressure case.  The effect is
+        exact (rehash preserves every live edge) and a missed or
+        under-prediction is harmless: reactive grow-and-replay still
+        backstops any probe-bound overflow.
         """
-        state = self._committed
+        adds = kind == dynamic.ADD_EDGE
+        n_add_raw = int(np.sum(adds))
+        if n_add_raw == 0:
+            return
+        if self._live_ub + n_add_raw <= self._cfg.edge_capacity:
+            return  # cannot overflow even if every add is new: no sync
+        live = int(et.fill_stats(self._state.edges)[0])
+        self._live_ub = live  # refresh the bound while we paid the sync
+        n_rem = int(np.sum((kind == dynamic.REM_EDGE)
+                           | (kind == dynamic.REM_VERTEX)))
+        keys = np.unique(np.stack([u[adds], v[adds]], axis=1), axis=0)
+        if live + keys.shape[0] - n_rem <= self._cfg.edge_capacity:
+            return  # crude estimate fits: skip the table probe
+        # the crude estimate indicates growth: confirm by probing the
+        # deduped keys against the table, so re-adds of live edges never
+        # trigger a rehash.  Padded to a power-of-two lane count so the
+        # probe's cached XLA shapes stay bounded per capacity.
+        n_keys = keys.shape[0]
+        n_pad = 1 << max(0, (n_keys - 1).bit_length())
+        ku = np.full(n_pad, -1, np.int32)
+        kv = np.full(n_pad, -1, np.int32)
+        ku[:n_keys] = keys[:, 0]
+        kv[:n_keys] = keys[:, 1]
+        found, _ = et.lookup(self._state.edges, jnp.asarray(ku),
+                             jnp.asarray(kv), self._cfg.max_probes)
+        n_new = int(np.sum(~np.asarray(found)[:n_keys]))
+        predicted = live + n_new - n_rem
+        if predicted <= self._cfg.edge_capacity:
+            return
+        cap = self._cfg.edge_capacity
+        while cap < 2 * predicted:  # land at <= 50% load
+            cap *= self._grow_factor
+        if self._max_edge_capacity:
+            while cap > self._max_edge_capacity:
+                cap //= self._grow_factor
+            if cap <= self._cfg.edge_capacity:
+                return  # capped out: let the reactive path report it
+        self.grow(cap)
+        self.proactive_grows += 1
+
+    class _InFlight(NamedTuple):
+        """One dispatched super-chunk awaiting its deferred resolution."""
+        slices: list          # chunk slices covered, in scan order
+        ok: object            # bool[K, B] (or bool[B] when K == 1) device
+        ovf: object           # int32[K] (or int32[]) device
+        rstats: object        # RepairStats, int32[K] (or []) leaves
+        entry: object         # input GraphState; None when donated away
+        scanned: bool         # ran through the fused scan program
+
+    def _apply_pipelined(self, kind, u, v
+                         ) -> tuple:
+        """Dispatch the whole chunk as fused super-chunks, no per-batch
+        host syncs.
+
+        The bucket batches are grouped by the scan-length registry; each
+        group of K > 1 runs as ONE ``dynamic.apply_batch_scan`` dispatch
+        (singletons reuse the single-step in-flight entry).  A
+        super-chunk's (ok, overflow, repair) outputs are resolved in ONE
+        ``jax.device_get`` only once ``inflight_window`` newer
+        super-chunks have been dispatched (or at drain).
+
+        Returns ``(ok, replay)``: ``replay`` is ``None`` when the whole
+        chunk applied cleanly (``self._state`` advanced, ``ok``
+        complete), else ``(start, state)`` -- the caller must re-run ops
+        from chunk offset ``start`` on the serial grow-and-replay path.
+        ``state`` is the offending super-chunk's input state (its prefix
+        is already applied and ``ok[:start]`` filled), or ``None`` when
+        donation consumed it, in which case the whole chunk must restart
+        (``start`` is then ignored).
+
+        When donating, the pipeline steps off a private device copy of
+        the current state (double buffering): readers keep a valid
+        ``self._committed`` while XLA reuses the pipeline's own buffers
+        super-chunk-to-super-chunk.  On non-donating backends each
+        in-flight record keeps its input state alive (at most
+        ``inflight_window + 1`` states) -- the partial-replay anchor.
+        """
+        state = self._state
         if self._donate:
             state = jax.tree_util.tree_map(jnp.copy, state)
-        pending = []  # (chunk slice, in-flight ok device array)
-        repair = []  # in-flight dynamic.RepairStats per step
-        window: collections.deque = collections.deque()  # ovf deltas
-        for sl, ops in self._sched.chunks(kind, u, v):
-            self._compiled.add(
-                ("pipelined", int(ops.kind.shape[0]), self._cfg))
-            state, ok_dev, ovf, rstats = dynamic.apply_batch_inflight(
-                state, ops, self._cfg, donate=self._donate)
-            pending.append((sl, ok_dev))
-            repair.append(rstats)
-            window.append(ovf)
-            if len(window) > self._inflight_window:
-                if int(window.popleft()) != 0:
-                    return None
-        while window:
-            if int(window.popleft()) != 0:
-                return None
-        self._state = state
-        for rstats in repair:  # everything already executed: cheap syncs
-            self._record_repair(rstats)
         ok = np.zeros(kind.shape[0], bool)
-        for sl, ok_dev in pending:
-            ok[sl] = np.asarray(ok_dev)[: sl.stop - sl.start]
-        return ok
+        pending: collections.deque = collections.deque()
+        # telemetry of resolved-clean super-chunks, committed only for
+        # work that stays applied: recording eagerly would double-count
+        # the prefix when a donated pipeline aborts and the whole chunk
+        # replays through _apply_padded (which records its own steps)
+        repair_rows: list = []
+        scanned = 0
 
-    def _record_repair(self, rstats: dynamic.RepairStats):
-        self.repair_tier_steps[dynamic.TIER_NAMES[int(rstats.tier)]] += 1
-        self.repair_region_v_max = max(self.repair_region_v_max,
-                                       int(rstats.region_vertices))
-        self.repair_region_e_max = max(self.repair_region_e_max,
-                                       int(rstats.region_edges))
+        def resolve_oldest():
+            """One host transfer for the oldest super-chunk; returns the
+            record iff it overflowed (else applies its ok rows/stats)."""
+            nonlocal scanned
+            rec = pending.popleft()
+            ok_h, ovf_h, r_h = jax.device_get((rec.ok, rec.ovf,
+                                               rec.rstats))
+            if np.any(ovf_h):
+                return rec
+            for sl, row in zip(rec.slices, np.atleast_2d(ok_h)):
+                ok[sl] = row[: sl.stop - sl.start]
+            repair_rows.extend(zip(np.atleast_1d(r_h.tier),
+                                   np.atleast_1d(r_h.region_vertices),
+                                   np.atleast_1d(r_h.region_edges)))
+            if rec.scanned:
+                scanned += len(rec.slices)
+            return None
+
+        def commit_telemetry():
+            for t, rv, re_ in repair_rows:
+                self._record_repair(int(t), int(rv), int(re_))
+            self.scanned_chunks += scanned
+
+        bad = None
+        for slices, ops in self._sched.super_chunks(kind, u, v,
+                                                    self._scan_lengths):
+            k, b = len(slices), int(ops.kind.shape[1])
+            entry = None if self._donate else state
+            if k == 1:
+                self._compiled.add(("pipelined", b, self._cfg))
+                state, ok_dev, ovf, rstats = dynamic.apply_batch_inflight(
+                    state, dynamic.OpBatch(ops.kind[0], ops.u[0],
+                                           ops.v[0]),
+                    self._cfg, donate=self._donate)
+            else:
+                self._compiled.add(("scan", k, b, self._cfg))
+                state, ok_dev, ovf, rstats = \
+                    dynamic.apply_batch_scan_inflight(
+                        state, ops, self._cfg, donate=self._donate)
+                self.scan_dispatches += 1
+            pending.append(self._InFlight(slices, ok_dev, ovf, rstats,
+                                          entry, k > 1))
+            if len(pending) > self._inflight_window:
+                bad = resolve_oldest()
+                if bad is not None:
+                    break
+        while bad is None and pending:
+            bad = resolve_oldest()
+        if bad is not None:
+            if bad.entry is not None:  # prefix stays applied: record it
+                commit_telemetry()
+            return ok, (bad.slices[0].start, bad.entry)
+        self._state = state
+        commit_telemetry()
+        return ok, None
+
+    def _record_repair(self, tier: int, region_v: int, region_e: int):
+        self.repair_tier_steps[dynamic.TIER_NAMES[tier]] += 1
+        self.repair_region_v_max = max(self.repair_region_v_max, region_v)
+        self.repair_region_e_max = max(self.repair_region_e_max, region_e)
 
     def _apply_padded(self, ops: dynamic.OpBatch, depth: int = 0
                       ) -> np.ndarray:
@@ -392,10 +575,13 @@ class SCCService:
             raise RuntimeError("grow-and-replay did not converge; "
                                "max_edge_capacity too small for workload?")
         self._compiled.add((int(ops.kind.shape[0]), self._cfg))
-        self._state, ok, ovf, rstats = dynamic.apply_batch_async(
+        self._state, ok_dev, ovf_dev, rstats = dynamic.apply_batch_async(
             self._state, ops, self._cfg)
-        ok = np.asarray(ok).copy()
-        self._record_repair(rstats)
+        # one coalesced host transfer for the step's whole telemetry tuple
+        ok_h, ovf, r_h = jax.device_get((ok_dev, ovf_dev, rstats))
+        ok = np.array(ok_h)  # own the buffer: replay writes into it below
+        self._record_repair(int(r_h.tier), int(r_h.region_vertices),
+                            int(r_h.region_edges))
         if int(ovf) == 0:
             return ok
         failed = self._failed_add_lanes(ops, ok)
@@ -465,6 +651,7 @@ class SCCService:
             table = _rehash(self._state.edges, cap, self._cfg.max_probes)
             live_after, _ = et.fill_stats(table)
             if int(live_after) == int(live_before):
+                self._live_ub = int(live_after)  # sync already paid
                 return table, cap
             cap *= self._grow_factor
         raise RuntimeError("table migration kept losing edges; "
@@ -539,14 +726,18 @@ class SCCService:
             "edge_capacity": self._cfg.edge_capacity,
             "overflow_total": int(self._committed.overflow),
             "grows": self.grow_count,
+            "proactive_grows": self.proactive_grows,
             "replayed_ops": self.replayed_ops,
             "compactions": self.compaction_count,
             "compile_count": self.compile_count,
             "pipelined_chunks": self.pipelined_chunks,
             "fallback_chunks": self.fallback_chunks,
+            "scanned_chunks": self.scanned_chunks,
+            "scan_dispatches": self.scan_dispatches,
             "repair_dense_steps": self.repair_tier_steps["dense"],
             "repair_compact_steps": self.repair_tier_steps["compact"],
             "repair_full_steps": self.repair_tier_steps["full"],
+            "repair_skipped_steps": self.repair_tier_steps["skipped"],
             "repair_region_v_max": self.repair_region_v_max,
             "repair_region_e_max": self.repair_region_e_max,
         }

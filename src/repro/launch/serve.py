@@ -82,9 +82,12 @@ def serve_smscc(mod, steps: int, nv: int = 2048, chunk: int = 256,
     cfg = mod.config(n_vertices=nv, edge_capacity=max(1024, nv),
                      max_probes=64, max_outer=64, max_inner=128)
     # boot with every vertex slot live (singleton SCCs) so the update mix
-    # lands immediately instead of bouncing off dead endpoints
+    # lands immediately instead of bouncing off dead endpoints; serving
+    # runs the full fused update engine (scan super-chunks + growth
+    # rehashes ahead of chunks that cannot fit)
     svc = SCCService(cfg, buckets=(64, chunk),
-                     state=gs.all_singletons(cfg))
+                     state=gs.all_singletons(cfg),
+                     scan_lengths=mod.SCAN_LENGTHS, proactive_grow=True)
     if readers > 0:
         rep = stream.run_concurrent_stream(
             svc, n_ops=steps * chunk, readers=readers, add_frac=0.7,

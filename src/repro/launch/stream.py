@@ -68,6 +68,49 @@ class BucketedScheduler:
             pv[:n] = v[sl]
             yield sl, dynamic.make_ops(pk, pu, pv)
 
+    def super_chunks(self, kind, u, v,
+                     scan_lengths: Sequence[int] = (1, 4, 16)
+                     ) -> Iterator[Tuple[List[slice], dynamic.OpBatch]]:
+        """Group the bucket plan into stacked *super-chunks* for the fused
+        ``dynamic.apply_batch_scan`` entry.
+
+        Maximal runs of equal-bucket plan entries are cut greedily into
+        the largest ``scan_lengths`` that fit (the registry always
+        includes 1, so no run is ever NOP-step padded -- a super-chunk
+        contains only real plan entries and the linearization is exactly
+        the per-bucket order of :meth:`chunks`).  Yields
+        ``([slice, ...], OpBatch)`` where the batch carries
+        ``int32[K, B]`` leaves, one stacked row per covered slice.
+        Compile shapes stay bounded by ``len(buckets) x
+        len(scan_lengths)`` per graph config.
+        """
+        lens = tuple(sorted({int(s) for s in scan_lengths} | {1}))
+        assert all(s > 0 for s in lens), "scan lengths must be positive"
+        kind = np.asarray(kind, np.int32)
+        u = np.asarray(u, np.int32)
+        v = np.asarray(v, np.int32)
+        plan = self.plan(kind.shape[0])
+        i = 0
+        while i < len(plan):
+            b = plan[i][1]
+            j = i
+            while j < len(plan) and plan[j][1] == b:
+                j += 1
+            while i < j:  # cut the equal-bucket run [i, j) into scan steps
+                k = max(s for s in lens if s <= j - i)
+                group = plan[i:i + k]
+                pk = np.full((k, b), dynamic.NOP, np.int32)
+                pu = np.zeros((k, b), np.int32)
+                pv = np.zeros((k, b), np.int32)
+                for r, (sl, _) in enumerate(group):
+                    n = sl.stop - sl.start
+                    pk[r, :n] = kind[sl]
+                    pu[r, :n] = u[sl]
+                    pv[r, :n] = v[sl]
+                yield ([sl for sl, _ in group],
+                       dynamic.make_ops(pk, pu, pv))
+                i += k
+
 
 class StreamReport(dict):
     """Flat metrics dict with a pretty printer."""
