@@ -124,3 +124,96 @@ def restore(directory: str, tree_like: Any, step: int | None = None):
         leaves.append(jax.numpy.asarray(arr, dtype=like.dtype)
                       if hasattr(like, "dtype") else arr)
     return tdef.unflatten(leaves), step
+
+
+# ------------------------------------------------- graph snapshots ------
+# Durability-layer extension (see docs/SERVICE_API.md): a graph snapshot
+# is an ordinary step-fenced checkpoint whose step IS the committed
+# generation, carrying the GraphState pytree plus a JSON meta leaf that
+# records everything recovery needs to resume a *bit-identical* run: the
+# GraphConfig fields (edge_capacity changes under growth!) and the
+# service knobs that steer growth/compaction decisions.  Replaying the
+# WAL tail on top of the restored state with the same knobs reproduces
+# the exact generation trajectory and table layout of the uninterrupted
+# run -- which is what the crash-injection tests assert.
+
+
+def _graph_template(cfg):
+    """A dtype-correct GraphState skeleton for ``restore`` (shapes come
+    from the checkpoint file, only dtypes matter here)."""
+    from repro.core import edge_table as et
+    from repro.core import graph_state as gs
+    z32 = np.zeros((), np.int32)
+    return gs.GraphState(
+        v_alive=np.zeros((), bool), ccid=z32,
+        edges=et.EdgeTable(src=z32, dst=z32,
+                           state=np.zeros((), np.int8)),
+        n_ccs=z32, gen=z32, overflow=z32)
+
+
+def save_graph_snapshot(directory: str, state, meta: dict,
+                        keep: int = 3) -> str:
+    """Checkpoint a committed GraphState at generation ``meta['gen']``.
+
+    ``meta`` must carry ``gen``, a ``cfg`` dict of GraphConfig fields,
+    and a ``service`` dict of decision-relevant service knobs."""
+    assert {"gen", "cfg", "service"} <= meta.keys()
+    blob = np.frombuffer(json.dumps(meta).encode(), np.uint8)
+    tree = {"graph": state, "meta": blob}
+    return save(directory, int(meta["gen"]), tree, keep)
+
+
+def load_graph_meta(directory: str, step: int | None = None):
+    """(meta dict, step) of a graph snapshot, or (None, None)."""
+    if step is None:
+        step = latest_step(directory)
+    if step is None:
+        return None, None
+    data = np.load(os.path.join(directory, f"ckpt_{step}.npz"))
+    key = next(k for k in data.files if k.endswith("meta"))
+    return json.loads(bytes(bytearray(data[key]))), step
+
+
+def _candidate_steps(directory: str) -> list:
+    """Snapshot steps to try, newest first: LATEST's pick, then every
+    on-disk step in descending order (recovery falls through corrupt or
+    unreadable newer snapshots to older intact ones)."""
+    if not os.path.isdir(directory):
+        return []
+    steps = sorted(
+        (int(re.findall(r"\d+", f)[0]) for f in os.listdir(directory)
+         if re.fullmatch(r"ckpt_\d+\.npz", f)), reverse=True)
+    head = latest_step(directory)
+    if head is not None and head in steps:
+        steps.remove(head)
+        steps.insert(0, head)
+    return steps
+
+
+def restore_graph_snapshot(directory: str, step: int | None = None):
+    """Restore ``(state, cfg, meta, step)`` from the latest (or given)
+    graph snapshot; ``(None, None, None, None)`` when none exists.
+
+    Without an explicit ``step``, an unreadable newest snapshot (torn
+    npz payload, dangling LATEST) is skipped in favour of the next
+    older one -- the WAL tail replay covers the difference."""
+    from repro.core import graph_state as gs
+    candidates = [step] if step is not None else \
+        _candidate_steps(directory)
+    for s in candidates:
+        try:
+            meta, s = load_graph_meta(directory, s)
+            if meta is None:
+                continue
+            cfg = gs.GraphConfig(
+                **{**meta["cfg"], "region_edge_buckets":
+                   tuple(meta["cfg"]["region_edge_buckets"])})
+            tree, _ = restore(directory,
+                              {"graph": _graph_template(cfg),
+                               "meta": np.zeros((), np.uint8)}, s)
+            return tree["graph"], cfg, meta, s
+        except Exception:
+            if step is not None:
+                raise  # an explicitly requested step must not degrade
+            continue
+    return None, None, None, None

@@ -1,0 +1,313 @@
+"""Durable writer for the streaming SCC service: WAL + async snapshots.
+
+``SCCService`` keeps the whole committed history in process memory; a
+crash loses every acknowledged generation.  :class:`DurableService` is
+the durable writer role of the replication story (docs/SERVICE_API.md
+§Durability): every update chunk is appended to a segmented, CRC-framed
+write-ahead log (:mod:`repro.ckpt.oplog`) and fsynced *before* it is
+applied, and the committed state is checkpointed periodically off the
+apply path via :mod:`repro.ckpt.checkpoint` graph snapshots.  Recovery
+(:meth:`DurableService.open`) restores the latest intact snapshot and
+replays the WAL tail -- and because every growth/compaction decision of
+the service is a deterministic function of (state, chunk, decision
+knobs), the recovered run is **bit-identical** to the uninterrupted one
+at every committed generation: same labels, same table layout, same
+generation trajectory.  The crash-injection suite
+(``tests/test_durability.py``) holds this equality under truncation at
+arbitrary WAL byte offsets and mid-snapshot crashes.
+
+Protocol per update chunk (all under the service ``_apply_lock``)::
+
+    append(gen_before, chunk) -> fsync batch -> apply -> commit
+                                       |          `-- on error: rollback
+                                       |              (truncate record)
+                                       `-- crash here replays the chunk
+                                           on recovery (never acked, so
+                                           convergence, not loss)
+
+A fresh service writes a synchronous generation-0 boot snapshot, so
+read replicas (:mod:`repro.core.replicas`) can always bootstrap from a
+snapshot + tail instead of special-casing an empty store.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from typing import Sequence
+
+import numpy as np
+
+from repro.ckpt import checkpoint, oplog
+from repro.core import graph_state as gs
+from repro.core.service import SCCService
+
+__all__ = ["DurableService", "decision_kwargs", "scratch_replay",
+           "wal_dir", "snap_dir"]
+
+
+def wal_dir(directory: str) -> str:
+    return os.path.join(directory, "wal")
+
+
+def snap_dir(directory: str) -> str:
+    return os.path.join(directory, "snap")
+
+
+def _cfg_meta(cfg: gs.GraphConfig) -> dict:
+    d = dataclasses.asdict(cfg)
+    assert d.pop("label_spec") is None, \
+        "durable snapshots do not serialize label_spec meshes"
+    d["label_spec"] = None
+    d["region_edge_buckets"] = list(cfg.region_edge_buckets)
+    return d
+
+
+def decision_kwargs(meta: dict) -> dict:
+    """SCCService kwargs recovery/replicas must reuse from a snapshot's
+    meta so replay reproduces the writer's growth/compaction decisions
+    (and hence its exact generation trajectory and table layout)."""
+    svc = meta["service"]
+    return {
+        "buckets": tuple(svc["buckets"]),
+        "grow_factor": svc["grow_factor"],
+        "max_edge_capacity": svc["max_edge_capacity"],
+        "compact_tomb_frac": svc["compact_tomb_frac"],
+        "proactive_grow": svc["proactive_grow"],
+    }
+
+
+def scratch_replay(directory: str, from_step: int = 0,
+                   to_gen: int | None = None) -> SCCService:
+    """Independent recovery oracle: replay the FULL WAL on top of the
+    snapshot at ``from_step`` (default: the generation-0 boot snapshot)
+    through a plain in-memory service.  Comparing this against
+    :meth:`DurableService.open` (latest snapshot + tail) checks the two
+    recovery paths agree bit-for-bit -- the crash-smoke's ground truth
+    when the uninterrupted writer is gone (it was SIGKILLed)."""
+    st, cfg, meta, _ = checkpoint.restore_graph_snapshot(
+        snap_dir(directory), step=from_step)
+    if st is None:
+        raise FileNotFoundError(f"no snapshot {from_step} in {directory!r}")
+    svc = SCCService(cfg, state=st, **decision_kwargs(meta))
+    for rec in oplog.read_log(wal_dir(directory), from_gen=svc.gen):
+        if to_gen is not None and svc.gen >= to_gen:
+            break
+        if rec.gen_before < svc.gen:
+            continue
+        if rec.gen_before != svc.gen:
+            raise RuntimeError(f"WAL gap at generation {svc.gen}")
+        svc._apply_ops(rec.kind, rec.u, rec.v)
+    return svc
+
+
+class DurableService(SCCService):
+    """SCCService whose commits survive the process.
+
+    Construct directly for a *fresh* store (boot snapshot is written
+    synchronously at the initial generation); use :meth:`open` to
+    recover an existing one (or transparently create it).
+    """
+
+    def __init__(self, cfg: gs.GraphConfig, directory: str, *,
+                 state: gs.GraphState | None = None,
+                 sync_every: int = 1, segment_bytes: int = 4 << 20,
+                 snapshot_every: int = 256, snapshot_keep: int = 3,
+                 trim_on_snapshot: bool = True,
+                 boot_snapshot: bool = True, _defer_wal: bool = False,
+                 **service_kwargs):
+        super().__init__(cfg, state=state, **service_kwargs)
+        self._dir = directory
+        self._wal_path = wal_dir(directory)
+        self._snap_path = snap_dir(directory)
+        os.makedirs(self._wal_path, exist_ok=True)
+        os.makedirs(self._snap_path, exist_ok=True)
+        self._sync_every = sync_every
+        self._segment_bytes = segment_bytes
+        self._snapshot_every = int(snapshot_every)
+        self._snapshot_keep = snapshot_keep
+        self._trim_on_snapshot = trim_on_snapshot
+        self._snap_thread: threading.Thread | None = None
+        self._last_snap_gen = -1
+        self.snapshot_count = 0
+        self.replayed_wal_records = 0
+        self._wal: oplog.OpLogWriter | None = None
+        if boot_snapshot and \
+                checkpoint.latest_step(self._snap_path) is None:
+            self.snapshot_now()
+        if not _defer_wal:
+            self._attach_wal()
+
+    # ---------------------------------------------------------- opening ---
+
+    @classmethod
+    def open(cls, directory: str, cfg: gs.GraphConfig | None = None, *,
+             state: gs.GraphState | None = None, to_gen: int | None = None,
+             sync_every: int = 1, segment_bytes: int = 4 << 20,
+             snapshot_every: int = 256, snapshot_keep: int = 3,
+             trim_on_snapshot: bool = True,
+             **service_kwargs) -> "DurableService":
+        """Recover (or create) the durable store at ``directory``.
+
+        Recovery restores the latest intact snapshot, reconstructs the
+        service with the snapshot's decision knobs (perf-only kwargs --
+        ``inflight_window``, ``scan_lengths``, ``donate`` -- may be
+        passed and differ freely: they never change results or the
+        generation trajectory), replays the WAL tail, and reopens the
+        log for appending.  ``to_gen`` stops the replay at the first
+        committed generation ``>= to_gen`` and leaves the service
+        *read-only* (no WAL attached) -- the time-travel hook the
+        crash-injection tests use to compare against the uninterrupted
+        run at an arbitrary generation.
+        """
+        st, rcfg, meta, _ = checkpoint.restore_graph_snapshot(
+            snap_dir(directory))
+        durable_kw = dict(sync_every=sync_every,
+                          segment_bytes=segment_bytes,
+                          snapshot_every=snapshot_every,
+                          snapshot_keep=snapshot_keep,
+                          trim_on_snapshot=trim_on_snapshot)
+        if st is None:
+            if cfg is None:
+                raise FileNotFoundError(
+                    f"no snapshot under {directory!r} and no GraphConfig "
+                    f"given for a fresh store")
+            return cls(cfg, directory, state=state, **durable_kw,
+                       **service_kwargs)
+        kwargs = {**service_kwargs, **decision_kwargs(meta)}
+        self = cls(rcfg, directory, state=st, boot_snapshot=False,
+                   _defer_wal=True, **durable_kw, **kwargs)
+        self._last_snap_gen = int(meta["gen"])
+        self._replay(to_gen)
+        if to_gen is None:
+            self._attach_wal()
+        return self
+
+    def _replay(self, to_gen: int | None):
+        """Apply the WAL tail on top of the restored snapshot (the
+        ``_wal is None`` guard in ``_apply_chunk`` keeps replay from
+        re-logging itself)."""
+        for rec in oplog.read_log(self._wal_path, from_gen=self.gen):
+            if to_gen is not None and self.gen >= to_gen:
+                break
+            if rec.gen_before < self.gen:
+                continue  # already inside the snapshot
+            if rec.gen_before != self.gen:
+                raise RuntimeError(
+                    f"WAL gap: record expects generation "
+                    f"{rec.gen_before}, store is at {self.gen}")
+            self._apply_chunk(rec.kind, rec.u, rec.v)
+            self.replayed_wal_records += 1
+
+    def _attach_wal(self):
+        oplog.repair_tail(self._wal_path)
+        self._wal = oplog.OpLogWriter(
+            self._wal_path, segment_bytes=self._segment_bytes,
+            sync_every=self._sync_every, start_gen=self.gen)
+
+    # ----------------------------------------------------------- updates --
+
+    def _apply_chunk(self, kind, u, v) -> np.ndarray:
+        if self._wal is None:  # recovery replay / read-only time travel
+            return super()._apply_chunk(kind, u, v)
+        kind = np.asarray(kind, np.int32)
+        u = np.asarray(u, np.int32)
+        v = np.asarray(v, np.int32)
+        with self._apply_lock:
+            # write-ahead: the record must be durable before any effect
+            # of the chunk can commit; a crash after the append replays
+            # an unacknowledged chunk, which converges (never diverges)
+            self._wal.append(self.gen, kind, u, v)
+            try:
+                ok = super()._apply_chunk(kind, u, v)
+            except Exception:
+                self._wal.rollback_last()
+                raise
+            self._wal.maybe_rotate(self.gen)
+            self._maybe_snapshot()
+            return ok
+
+    def sync(self):
+        """Force-fsync any batched WAL appends (the ``sync_every > 1``
+        durability window closes here)."""
+        if self._wal is not None:
+            with self._apply_lock:
+                self._wal.sync()
+
+    # --------------------------------------------------------- snapshots --
+
+    def _snapshot_meta(self, cfg: gs.GraphConfig, gen: int) -> dict:
+        return {
+            "gen": int(gen),
+            "cfg": _cfg_meta(cfg),
+            "service": {
+                "buckets": list(self._sched.buckets),
+                "grow_factor": self._grow_factor,
+                "max_edge_capacity": self._max_edge_capacity,
+                "compact_tomb_frac": self._compact_tomb_frac,
+                "proactive_grow": self._proactive_grow,
+            },
+        }
+
+    def _write_snapshot(self, state: gs.GraphState, cfg: gs.GraphConfig,
+                        gen: int):
+        checkpoint.save_graph_snapshot(
+            self._snap_path, state, self._snapshot_meta(cfg, gen),
+            keep=self._snapshot_keep)
+        self.snapshot_count += 1
+        if self._trim_on_snapshot:
+            oplog.trim(self._wal_path, gen)
+
+    def _maybe_snapshot(self):
+        """Kick an async snapshot of the committed state every
+        ``snapshot_every`` generations (0 disables).  The state pytree is
+        immutable, so the background thread needs no coordination with
+        the update path beyond capturing (state, cfg, gen) coherently --
+        which the caller's ``_apply_lock`` provides."""
+        if self._snapshot_every <= 0:
+            return
+        if self.gen - max(self._last_snap_gen, 0) < self._snapshot_every:
+            return
+        if self._snap_thread is not None and self._snap_thread.is_alive():
+            return  # one snapshot in flight at a time; next commit retries
+        state, cfg, gen = self._committed, self._cfg, self.gen
+        self._last_snap_gen = gen
+        self._snap_thread = threading.Thread(
+            target=self._write_snapshot, args=(state, cfg, gen),
+            name="scc-snapshotter", daemon=True)
+        self._snap_thread.start()
+
+    def snapshot_now(self) -> int:
+        """Synchronously snapshot the committed state; returns its gen."""
+        with self._apply_lock:
+            state, cfg, gen = self._committed, self._cfg, self.gen
+            self._last_snap_gen = gen
+        self._write_snapshot(state, cfg, gen)
+        return gen
+
+    def close(self, snapshot: bool = False):
+        """Flush + close the WAL (optionally snapshotting first) and wait
+        out any in-flight background snapshot."""
+        if snapshot:
+            self.snapshot_now()
+        if self._snap_thread is not None:
+            self._snap_thread.join()
+            self._snap_thread = None
+        if self._wal is not None:
+            self._wal.close()
+            self._wal = None
+
+    # -------------------------------------------------------------- misc --
+
+    @property
+    def directory(self) -> str:
+        return self._dir
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out.update(self._wal.stats() if self._wal is not None
+                   else {"wal_appended": 0})
+        out.update(snapshots=self.snapshot_count,
+                   last_snapshot_gen=self._last_snap_gen,
+                   replayed_wal_records=self.replayed_wal_records)
+        return out

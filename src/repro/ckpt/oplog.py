@@ -1,0 +1,371 @@
+"""Write-ahead typed-op log for the streaming SCC service.
+
+Durability layer of the paper's on-line mode: every update chunk a
+:class:`repro.ckpt.durable.DurableService` commits is first appended here
+as ONE record -- the chunk is the service's atomicity unit (all-or-nothing
+under ``_apply_lock``), so the log's record granularity matches the commit
+granularity exactly and replaying a record prefix always lands on a
+committed generation boundary.
+
+Log layout (``<dir>/wal_<seq>.seg``, monotonically increasing ``seq``)::
+
+    segment  := header record*
+    header   := MAGIC("SCCWAL01") u64(base_gen)
+    record   := u32(REC_MAGIC) u32(len(payload)) u32(crc32(payload)) payload
+    payload  := i64(gen_before) u32(n_ops)
+                i32[n_ops](kind) i32[n_ops](u) i32[n_ops](v)
+
+All integers little-endian.  ``gen_before`` is the committed generation
+the chunk was applied on top of; successive records carry strictly
+increasing ``gen_before`` (every chunk bumps the generation at least
+once), which is what lets recovery seek the replay point for any
+snapshot generation by a plain scan.
+
+Crash safety:
+
+* a record is torn iff the file ends mid-record or the CRC mismatches;
+  readers treat the first invalid record as end-of-segment (the valid
+  prefix is kept -- ``read_segment`` reports whether the tail was clean);
+* the writer appends with configurable fsync batching (``sync_every``
+  records per fsync; 1 = fsync every commit) and can atomically
+  ``rollback_last()`` (truncate) when the in-memory apply of the logged
+  chunk fails, so failed chunks never survive into recovery;
+* segment rotation closes the current file after ``segment_bytes`` and
+  opens ``wal_<seq+1>.seg`` whose header carries the current generation,
+  so whole segments can be dropped by :func:`trim` once a snapshot
+  covers them;
+* :class:`LogTailer` is the replica-side incremental reader: it remembers
+  its (segment, offset) cursor, re-polls a torn tail (the writer may
+  simply not have finished the record yet), and only advances to the
+  next segment once one exists -- a torn record followed by a newer
+  segment means real corruption and raises.
+"""
+from __future__ import annotations
+
+import os
+import re
+import struct
+import zlib
+from typing import Iterator, List, NamedTuple, Tuple
+
+import numpy as np
+
+__all__ = ["OpLogWriter", "LogTailer", "OpRecord", "read_segment",
+           "read_log", "list_segments", "repair_tail", "trim",
+           "SEG_HEADER_BYTES"]
+
+_SEG_MAGIC = b"SCCWAL01"
+_REC_MAGIC = 0xA11C0DE5
+_REC_HDR = struct.Struct("<III")          # magic, payload len, crc32
+_PAYLOAD_HDR = struct.Struct("<qI")       # gen_before, n_ops
+_SEG_HDR = struct.Struct("<8sq")          # magic, base_gen
+SEG_HEADER_BYTES = _SEG_HDR.size
+
+_SEG_RE = re.compile(r"wal_(\d{8})\.seg")
+
+
+class OpRecord(NamedTuple):
+    """One durably logged update chunk."""
+    gen_before: int
+    kind: np.ndarray  # int32[n]
+    u: np.ndarray     # int32[n]
+    v: np.ndarray     # int32[n]
+
+
+def _seg_path(directory: str, seq: int) -> str:
+    return os.path.join(directory, f"wal_{seq:08d}.seg")
+
+
+def list_segments(directory: str) -> List[Tuple[int, str]]:
+    """Sorted [(seq, path)] of the directory's segment files."""
+    out = []
+    if not os.path.isdir(directory):
+        return out
+    for name in os.listdir(directory):
+        m = _SEG_RE.fullmatch(name)
+        if m:
+            out.append((int(m.group(1)), os.path.join(directory, name)))
+    return sorted(out)
+
+
+def segment_base_gen(path: str) -> int:
+    with open(path, "rb") as f:
+        hdr = f.read(SEG_HEADER_BYTES)
+    magic, base_gen = _SEG_HDR.unpack(hdr)
+    if magic != _SEG_MAGIC:
+        raise ValueError(f"bad WAL segment header in {path!r}")
+    return base_gen
+
+
+def _encode_record(gen_before: int, kind, u, v) -> bytes:
+    kind = np.ascontiguousarray(kind, "<i4")
+    u = np.ascontiguousarray(u, "<i4")
+    v = np.ascontiguousarray(v, "<i4")
+    assert kind.shape == u.shape == v.shape and kind.ndim == 1
+    payload = (_PAYLOAD_HDR.pack(int(gen_before), kind.shape[0])
+               + kind.tobytes() + u.tobytes() + v.tobytes())
+    return _REC_HDR.pack(_REC_MAGIC, len(payload),
+                         zlib.crc32(payload)) + payload
+
+
+def _decode_payload(payload: bytes) -> OpRecord:
+    gen_before, n = _PAYLOAD_HDR.unpack_from(payload, 0)
+    arrs = np.frombuffer(payload, "<i4", count=3 * n,
+                         offset=_PAYLOAD_HDR.size)
+    return OpRecord(gen_before, arrs[:n].copy(), arrs[n:2 * n].copy(),
+                    arrs[2 * n:].copy())
+
+
+def _scan_records(buf: bytes, offset: int
+                  ) -> Iterator[Tuple[int, OpRecord]]:
+    """Yield (end_offset, record) for every complete valid record from
+    ``offset``; stops (without raising) at the first torn/invalid one."""
+    n = len(buf)
+    while offset + _REC_HDR.size <= n:
+        magic, plen, crc = _REC_HDR.unpack_from(buf, offset)
+        if magic != _REC_MAGIC:
+            return
+        end = offset + _REC_HDR.size + plen
+        if end > n:
+            return
+        payload = buf[offset + _REC_HDR.size:end]
+        if zlib.crc32(payload) != crc or plen < _PAYLOAD_HDR.size:
+            return
+        yield end, _decode_payload(payload)
+        offset = end
+
+
+def read_segment(path: str) -> Tuple[List[OpRecord], bool, int]:
+    """Read one segment; returns ``(records, clean, valid_end)``.
+
+    ``clean`` is False when the file ends in a torn/invalid record;
+    ``valid_end`` is the byte offset of the end of the valid prefix
+    (what a tail repair would truncate to)."""
+    with open(path, "rb") as f:
+        buf = f.read()
+    if len(buf) < SEG_HEADER_BYTES or \
+            buf[:len(_SEG_MAGIC)] != _SEG_MAGIC:
+        return [], False, 0
+    records = []
+    end = SEG_HEADER_BYTES
+    for end, rec in _scan_records(buf, SEG_HEADER_BYTES):
+        records.append(rec)
+    return records, end == len(buf), end
+
+
+def read_log(directory: str, from_gen: int = 0) -> List[OpRecord]:
+    """All replayable records with ``gen_before >= from_gen``, in order.
+
+    Stops at the first torn record *of the last segment* (normal crash
+    tail).  A torn record in a non-final segment means the suffix of the
+    log is unreachable; the records after it are dropped (they were
+    never acknowledged as a contiguous history) -- recovery converges to
+    the longest valid prefix.
+    """
+    out: List[OpRecord] = []
+    for _, path in list_segments(directory):
+        records, clean, _ = read_segment(path)
+        out.extend(r for r in records if r.gen_before >= from_gen)
+        if not clean:
+            break
+    return out
+
+
+def repair_tail(directory: str) -> int:
+    """Truncate the final segment to its valid record prefix.
+
+    Recovery MUST call this before opening a new writer segment: readers
+    treat a torn record as end-of-log only while it is the last thing in
+    the log, so leaving torn bytes behind a newer segment would orphan
+    every later record.  Returns the number of bytes dropped."""
+    dropped = 0
+    while True:
+        segs = list_segments(directory)
+        if not segs:
+            return dropped
+        _, path = segs[-1]
+        _, clean, valid_end = read_segment(path)
+        if clean:
+            return dropped
+        size = os.path.getsize(path)
+        if valid_end < SEG_HEADER_BYTES:
+            # not even a valid header survived: the segment holds no
+            # acknowledged data -- a 0-byte stub would still read as
+            # torn and orphan any segment a new writer opens after it
+            os.remove(path)
+            dropped += size
+            continue
+        with open(path, "r+b") as f:
+            f.truncate(valid_end)
+            f.flush()
+            os.fsync(f.fileno())
+        return dropped + (size - valid_end)
+
+
+def trim(directory: str, min_gen: int) -> int:
+    """Drop whole segments no longer needed to replay from ``min_gen``:
+    segment i may go iff segment i+1 exists and starts at or below
+    ``min_gen`` (every record with ``gen_before >= min_gen`` then still
+    lives in later segments).  Returns the number of files removed."""
+    segs = list_segments(directory)
+    removed = 0
+    for (_, path), (_, nxt) in zip(segs, segs[1:]):
+        if segment_base_gen(nxt) <= min_gen:
+            os.remove(path)
+            removed += 1
+        else:
+            break
+    return removed
+
+
+class OpLogWriter:
+    """Appender with fsync batching, rotation, and tail rollback."""
+
+    def __init__(self, directory: str, *, segment_bytes: int = 4 << 20,
+                 sync_every: int = 1, start_gen: int = 0):
+        os.makedirs(directory, exist_ok=True)
+        self._dir = directory
+        self._segment_bytes = int(segment_bytes)
+        self._sync_every = max(1, int(sync_every))
+        self._unsynced = 0
+        self._last_span: Tuple[int, int] | None = None  # (start, end)
+        segs = list_segments(directory)
+        self._seq = segs[-1][0] if segs else 0
+        self._f = None
+        self._open_segment(self._seq + 1, start_gen)
+        self.appended = 0
+        self.syncs = 0
+        self.rotations = 0
+        self.rollbacks = 0
+
+    def _open_segment(self, seq: int, base_gen: int):
+        if self._f is not None:
+            self.sync()
+            self._f.close()
+        self._seq = seq
+        self._f = open(_seg_path(self._dir, seq), "xb")
+        self._f.write(_SEG_HDR.pack(_SEG_MAGIC, int(base_gen)))
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self._pos = SEG_HEADER_BYTES
+        self._last_span = None
+
+    @property
+    def path(self) -> str:
+        return _seg_path(self._dir, self._seq)
+
+    def append(self, gen_before: int, kind, u, v) -> None:
+        """Durably append one chunk record (write-ahead: call BEFORE
+        applying; fsync per ``sync_every`` appends)."""
+        rec = _encode_record(gen_before, kind, u, v)
+        start = self._pos
+        self._f.write(rec)
+        self._pos += len(rec)
+        self._last_span = (start, self._pos)
+        self.appended += 1
+        self._unsynced += 1
+        if self._unsynced >= self._sync_every:
+            self.sync()
+
+    def rollback_last(self) -> None:
+        """Truncate the last appended record (the apply of its chunk
+        failed -- a failed chunk must not survive into recovery)."""
+        if self._last_span is None:
+            raise RuntimeError("no record to roll back in this segment")
+        start, _ = self._last_span
+        self._f.flush()
+        self._f.truncate(start)
+        self._f.seek(start)
+        os.fsync(self._f.fileno())
+        self._pos = start
+        self._last_span = None
+        self._unsynced = 0
+        self.rollbacks += 1
+
+    def maybe_rotate(self, gen: int) -> bool:
+        """Rotate to a fresh segment (header stamped ``gen``) once the
+        current one exceeds ``segment_bytes``; call between chunks."""
+        if self._pos < self._segment_bytes:
+            return False
+        self._open_segment(self._seq + 1, gen)
+        self.rotations += 1
+        return True
+
+    def sync(self) -> None:
+        if self._unsynced == 0:
+            return
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self._unsynced = 0
+        self.syncs += 1
+
+    def close(self) -> None:
+        if self._f is not None:
+            self.sync()
+            self._f.close()
+            self._f = None
+
+    def stats(self) -> dict:
+        return {"wal_appended": self.appended, "wal_syncs": self.syncs,
+                "wal_rotations": self.rotations,
+                "wal_rollbacks": self.rollbacks,
+                "wal_segment": self._seq, "wal_bytes": self._pos}
+
+
+class LogTailer:
+    """Replica-side incremental reader: poll for newly completed records.
+
+    Keeps a (segment seq, byte offset) cursor.  A torn record at the
+    cursor is *pending*, not corrupt -- the writer may still be flushing
+    it -- unless a newer segment already exists, which means the writer
+    moved on and the bytes will never complete: that raises.  Segments
+    removed underneath the cursor (``trim`` racing a slow tailer) raise
+    ``FileNotFoundError``; the owner resyncs from a newer snapshot.
+    """
+
+    def __init__(self, directory: str, from_gen: int = 0):
+        self._dir = directory
+        self._from_gen = int(from_gen)
+        segs = list_segments(directory)
+        if not segs:
+            raise FileNotFoundError(f"no WAL segments in {directory!r}")
+        # start at the last segment whose base_gen <= from_gen: every
+        # record with gen_before >= from_gen lives at or after it
+        start = 0
+        for i, (_, path) in enumerate(segs):
+            if segment_base_gen(path) <= self._from_gen:
+                start = i
+        self._seq = segs[start][0]
+        self._offset = SEG_HEADER_BYTES
+        self.polled_records = 0
+
+    @property
+    def cursor(self) -> Tuple[int, int]:
+        return self._seq, self._offset
+
+    def poll(self, max_records: int | None = None) -> List[OpRecord]:
+        """Return records completed since the last poll (possibly [])."""
+        out: List[OpRecord] = []
+        while max_records is None or len(out) < max_records:
+            path = _seg_path(self._dir, self._seq)
+            with open(path, "rb") as f:   # raises if trimmed underneath
+                buf = f.read()
+            for end, rec in _scan_records(buf, self._offset):
+                self._offset = end
+                if rec.gen_before >= self._from_gen:
+                    out.append(rec)
+                if max_records is not None and len(out) >= max_records:
+                    break
+            if max_records is not None and len(out) >= max_records:
+                break  # stopped early, not torn: keep the cursor here
+            nxt = _seg_path(self._dir, self._seq + 1)
+            if not os.path.exists(nxt):
+                break
+            if self._offset < len(buf):
+                raise IOError(
+                    f"WAL segment {path!r} has a torn record at offset "
+                    f"{self._offset} but a newer segment exists")
+            self._seq += 1
+            self._offset = SEG_HEADER_BYTES
+        self.polled_records += len(out)
+        return out

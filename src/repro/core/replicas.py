@@ -1,0 +1,313 @@
+"""Read replicas over the durable WAL: restore a snapshot, tail the log,
+serve QueryBroker traffic.
+
+The paper's readers are wait-free against one shared-memory object; the
+replication layer scales that read path past one process: a
+:class:`Replica` bootstraps from the writer's latest graph snapshot
+(written by :class:`repro.ckpt.durable.DurableService` -- a fresh store
+always has a generation-0 boot snapshot), then *tails* the write-ahead
+log, applying each record through the standard service update path.
+Because records replay with the writer's own decision knobs (bucket
+registry, growth policy -- carried in the snapshot meta), a replica's
+state is bit-identical to the writer's at every committed generation it
+passes through, so its :class:`repro.core.broker.QueryBroker` serves the
+exact same consistency contract: `AT_LEAST(gen)` answers only after the
+replica has tailed past ``gen`` (the broker's gen-wait defers early
+arrivals), and per-reader generation stamps stay monotone.
+
+:class:`ReplicaSet` fans N replicas behind one broker-shaped facade
+(``submit``/``resolve``/``stats``/``stop``): each query batch routes to
+a replica that already satisfies its consistency floor when one exists
+(freshest-first; round-robin among the qualified), falling back to the
+most caught-up replica otherwise -- with staggered tail cycles this
+hides replication lag, which is where the replica-count throughput
+scaling in ``benchmarks/bench_stream.py`` comes from.  A replica that
+finds the log trimmed underneath its cursor (the writer snapshotted and
+dropped old segments) resyncs from the newest snapshot and keeps going.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Sequence
+
+from repro.ckpt import checkpoint, oplog
+from repro.ckpt.durable import decision_kwargs, snap_dir, wal_dir
+from repro.core.broker import QueryBroker
+from repro.core.service import SCCService
+
+__all__ = ["Replica", "ReplicaSet"]
+
+
+class Replica:
+    """One read replica: snapshot-restored service + WAL tailer + broker.
+
+    ``auto_tail=False`` (tests) disables the background threads; drive
+    the replica manually with :meth:`tail_once` and inline broker
+    flushes.
+    """
+
+    def __init__(self, directory: str, replica_id: int = 0, *,
+                 query_buckets: Sequence[int] = (64, 256, 1024),
+                 poll_interval: float = 0.002, poll_offset: float = 0.0,
+                 max_records_per_poll: int | None = 64,
+                 auto_tail: bool = True, **service_kwargs):
+        self._dir = directory
+        self.replica_id = replica_id
+        self._poll_interval = poll_interval
+        self._poll_offset = poll_offset
+        self._max_records = max_records_per_poll
+        self._service_kwargs = service_kwargs
+        st, cfg, meta, _ = checkpoint.restore_graph_snapshot(
+            snap_dir(directory))
+        if st is None:
+            raise FileNotFoundError(
+                f"no graph snapshot under {directory!r} -- replicas "
+                f"bootstrap from the writer's boot snapshot")
+        # the WRITER's decision knobs: replaying records through the same
+        # bucketed update path reproduces its exact gen trajectory
+        self._svc = SCCService(cfg, state=st,
+                               **decision_kwargs(meta), **service_kwargs)
+        self._tailer = oplog.LogTailer(wal_dir(directory),
+                                       from_gen=self._svc.gen)
+        self.broker = QueryBroker(self._svc, buckets=query_buckets)
+        self.applied_records = 0
+        self.apply_failures = 0
+        self.resyncs = 0
+        self.error: BaseException | None = None
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        if auto_tail:
+            self.broker.start()
+            self._thread = threading.Thread(
+                target=self._run, name=f"scc-replica-{replica_id}",
+                daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------ state ---
+
+    @property
+    def service(self) -> SCCService:
+        return self._svc
+
+    @property
+    def gen(self) -> int:
+        return self._svc.gen
+
+    def wait_for_gen(self, gen: int, timeout: float | None = None) -> int:
+        return self._svc.wait_for_gen(gen, timeout)
+
+    def next_tick_eta(self) -> float:
+        """Seconds until this replica's next scheduled WAL pull
+        (``inf`` without a tail thread) -- the routing signal for
+        requests no replica can answer yet: any replica reaches a
+        durable record at its next tick, so the soonest tick wins."""
+        if self._thread is None:
+            return float("inf")
+        now = time.monotonic()
+        period = self._poll_interval
+        phase = (now - self._poll_offset) / period
+        return (int(phase) + 1) * period + self._poll_offset - now
+
+    # ---------------------------------------------------------- tailing ---
+
+    def tail_once(self, max_records: int | None = -1) -> int:
+        """Apply newly completed WAL records; returns how many.  The
+        default batch cap is the constructor's ``max_records_per_poll``;
+        pass ``None`` for an unbounded pull."""
+        if max_records == -1:
+            max_records = self._max_records
+        try:
+            records = self._tailer.poll(max_records)
+        except (FileNotFoundError, IOError):
+            # segments trimmed underneath the cursor (or writer-side
+            # corruption): jump forward via the newest snapshot
+            self._resync()
+            return 0
+        n = 0
+        for rec in records:
+            if rec.gen_before < self._svc.gen:
+                continue  # already covered by the snapshot we booted from
+            if rec.gen_before > self._svc.gen:
+                self._resync()  # gap: our segment window moved on
+                return n
+            try:
+                self._svc._apply_ops(rec.kind, rec.u, rec.v)
+            except Exception:
+                # the writer hit the same deterministic failure and rolled
+                # the record back (all-or-nothing chunks); our cursor now
+                # points past truncated bytes -- re-seat it at our gen.
+                # A record that keeps failing in place is a real fault.
+                self.apply_failures += 1
+                if self.apply_failures > 3 + self.applied_records:
+                    raise
+                self._tailer = oplog.LogTailer(wal_dir(self._dir),
+                                               from_gen=self._svc.gen)
+                return n
+            self.applied_records += 1
+            n += 1
+        return n
+
+    def _resync(self):
+        """Fast-forward from the newest snapshot (only ever forward --
+        a snapshot older than our state is ignored)."""
+        st, cfg, meta, _ = checkpoint.restore_graph_snapshot(
+            snap_dir(self._dir))
+        if st is None:
+            return
+        if int(meta["gen"]) > self._svc.gen:
+            svc = self._svc
+            with svc._apply_lock:
+                svc._state, svc._cfg = st, cfg
+                svc._live_ub = cfg.edge_capacity
+                with svc._commit_cv:
+                    svc._committed = st
+                    svc._commit_cv.notify_all()
+        self._tailer = oplog.LogTailer(wal_dir(self._dir),
+                                       from_gen=self._svc.gen)
+        self.resyncs += 1
+
+    def _run(self):
+        """Pull loop on a wall-clock-aligned grid: ticks land at
+        ``k * poll_interval + poll_offset``, so a ReplicaSet can stagger
+        its members' pull phases evenly across the period -- the
+        freshness wait a reader sees drops from ~period/2 (one replica)
+        to ~period/2N (N staggered replicas), which is the lag-hiding
+        the replica-scaling bench measures.  Each tick is ONE unbounded
+        pull -- the durable prefix as of tick time; records appended
+        while it applies wait for the next tick (chasing them would
+        degenerate into busy-tailing whenever the writer is active)."""
+        period = self._poll_interval
+        while not self._stop.is_set():
+            try:
+                self.tail_once(max_records=None)
+            except BaseException as e:  # surfaced via stats/stop
+                self.error = e
+                return
+            now = time.monotonic()
+            phase = (now - self._poll_offset) / period
+            next_tick = (int(phase) + 1) * period + self._poll_offset
+            self._stop.wait(max(1e-4, next_tick - now))
+
+    def stop(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self.broker.stop()
+        if self.error is not None:
+            raise self.error
+
+    def stats(self) -> dict:
+        out = {f"replica{self.replica_id}_{k}": val
+               for k, val in self.broker.stats().items()}
+        out[f"replica{self.replica_id}_gen"] = self.gen
+        out[f"replica{self.replica_id}_applied"] = self.applied_records
+        out[f"replica{self.replica_id}_resyncs"] = self.resyncs
+        return out
+
+
+class ReplicaSet:
+    """Broker-shaped facade over N replicas with freshness-aware routing.
+
+    Drop-in where a :class:`QueryBroker` is expected (a
+    :class:`repro.api.GraphClient` takes it as its ``broker``, typically
+    with the *writer* service as the update path -- writes go to the
+    writer, reads to the replicas, and READ_YOUR_WRITES floors flow
+    through ``min_gen`` to a replica that has tailed far enough).
+    """
+
+    def __init__(self, directory: str, n: int = 2, *,
+                 query_buckets: Sequence[int] = (64, 256, 1024),
+                 poll_interval: float = 0.002,
+                 auto_tail: bool = True, **replica_kwargs):
+        assert n >= 1
+        self.replicas: List[Replica] = [
+            Replica(directory, i, query_buckets=query_buckets,
+                    poll_interval=poll_interval,
+                    poll_offset=i * poll_interval / n,
+                    auto_tail=auto_tail, **replica_kwargs)
+            for i in range(n)]
+        self._rr = itertools.count()
+        self._owner: Dict[Future, QueryBroker] = {}
+        self._lock = threading.Lock()
+        self.routed_fresh = 0
+        self.routed_stale = 0
+
+    # ------------------------------------------------- broker interface ---
+
+    def submit(self, kind: str, u, v=None, min_gen: int = 0) -> Future:
+        fresh = [r for r in self.replicas if r.gen >= min_gen]
+        if fresh:
+            rep = fresh[next(self._rr) % len(fresh)]
+            self.routed_fresh += 1
+        else:
+            # nobody fresh yet.  The floor comes from an acked write, so
+            # its WAL record is already durable: EVERY tailing replica
+            # will cover it at its next pull tick -- route to the replica
+            # whose tick lands first (staggered sets: ~period/N away),
+            # not the currently-most-caught-up one (it pulled most
+            # recently, so its next tick is the FURTHEST away).  Without
+            # tail threads (manual tests) etas are inf and the key falls
+            # back to the most caught-up replica.
+            rep = min(self.replicas,
+                      key=lambda r: (r.next_tick_eta(), -r.gen))
+            self.routed_stale += 1
+        fut = rep.broker.submit(kind, u, v, min_gen=min_gen)
+        with self._lock:
+            self._owner[fut] = rep.broker
+        return fut
+
+    def resolve(self, fut: Future, min_gen: int = 0):
+        with self._lock:
+            broker = self._owner.pop(fut, None)
+        if broker is None or broker.dispatching:
+            return fut.result()
+        return broker.resolve(fut, min_gen=min_gen)
+
+    @property
+    def dispatching(self) -> bool:
+        return any(r.broker.dispatching for r in self.replicas)
+
+    def stop(self):
+        errors = []
+        for r in self.replicas:
+            try:
+                r.stop()
+            except BaseException as e:
+                errors.append(e)
+        if errors:
+            raise errors[0]
+
+    def __enter__(self) -> "ReplicaSet":
+        return self
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # -------------------------------------------------------- telemetry ---
+
+    @property
+    def min_gen(self) -> int:
+        return min(r.gen for r in self.replicas)
+
+    def wait_all_for_gen(self, gen: int, timeout: float | None = None):
+        """Block until every replica has tailed to ``gen`` (test/bench
+        convergence barrier)."""
+        for r in self.replicas:
+            r.wait_for_gen(gen, timeout)
+        return self.min_gen
+
+    def stats(self) -> dict:
+        out = {"replicas": len(self.replicas),
+               "routed_fresh": self.routed_fresh,
+               "routed_stale": self.routed_stale,
+               "served": sum(r.broker.served for r in self.replicas),
+               "flushes": sum(r.broker.flushes for r in self.replicas),
+               "gen_waits": sum(r.broker.gen_waits
+                                for r in self.replicas)}
+        for r in self.replicas:
+            out.update(r.stats())
+        return out

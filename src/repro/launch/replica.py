@@ -1,0 +1,269 @@
+"""Replicated serving driver: durable writer + N read replicas.
+
+Three entry points:
+
+* **default** -- a self-contained demo/bench core
+  (:func:`run_replicated_stream`): a :class:`repro.ckpt.durable.
+  DurableService` writer ingests an *arrival-paced* (open-loop) update
+  stream while closed-loop reader sessions run read-your-writes rounds
+  against a :class:`repro.core.replicas.ReplicaSet`: each round commits
+  one small "touch" update through the writer, then queries at
+  ``Consistency.AT_LEAST(max(token, last_gen))`` -- the session's RYW
+  token joined with its monotone-reads floor.  The serving regime is
+  latency-bound, not compute-bound: the touch write guarantees every
+  read round must wait out the replication lag of *some* replica
+  (replicas pull the WAL on a staggered fixed cadence), so the set's
+  soonest-ticking member hides most of the lag -- expected freshness
+  wait drops from ~poll/2 at one replica to ~poll/2N at N -- and
+  serving throughput scales with replica count even on a single core.
+  ``benchmarks/bench_stream.py`` records this section.
+
+* ``--writer-child`` -- the crash-injection smoke's victim process: an
+  ingest-only durable writer that prints its committed generation per
+  chunk; the harness (``scripts/ci.sh``, ``tests/test_durability.py``)
+  SIGKILLs it at an arbitrary moment.
+
+* ``--verify-recovery`` -- recover the store
+  (:meth:`DurableService.open` = latest snapshot + WAL tail) and check
+  it bit-for-bit against the independent scratch oracle (generation-0
+  boot snapshot + full WAL, :func:`repro.ckpt.durable.scratch_replay`).
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import numpy as np
+
+__all__ = ["run_replicated_stream", "writer_child", "verify_recovery"]
+
+
+def _writer_config(nv: int, edge_capacity: int | None = None):
+    from repro import configs
+    mod = configs.get("smscc")
+    return mod.config(n_vertices=nv,
+                      edge_capacity=edge_capacity or max(1024, nv),
+                      max_probes=64, max_outer=64, max_inner=128)
+
+
+def run_replicated_stream(directory: str, *, replicas: int = 2,
+                          n_ops: int = 640, chunk: int = 32,
+                          pace_s: float = 0.080, readers: int = 2,
+                          n_queries: int = 96, nv: int = 512,
+                          poll_interval: float = 0.150,
+                          sync_every: int = 1, seed: int = 0,
+                          add_frac: float = 0.7):
+    """Paced replicated serving: returns a StreamReport.
+
+    ``pace_s`` is the update arrival period (open-loop ingest: the
+    writer never back-pressures the stream) and ``poll_interval`` the
+    replicas' WAL pull cadence -- the replication-lag bottleneck the
+    replica count hides.  Readers are closed-loop read-your-writes
+    sessions: each round commits one touch write through the writer
+    (RYW token), then queries the ReplicaSet at
+    ``AT_LEAST(max(token, last_gen))``.  The floor is freshly
+    committed, so some replica must pull the WAL past it before the
+    round can complete: round latency = touch + replication wait +
+    query, and the wait is where staggered replicas buy throughput
+    (soonest tick ~poll/2N away instead of ~poll/2).  The combined
+    floor also keeps per-reader stamps monotone across replicas --
+    replicas can run *ahead* of the writer's committed generation (a
+    WAL record is durable before the writer's own apply commits), so a
+    writer-derived floor alone would not prevent a stamp regression
+    when consecutive rounds land on differently-advanced replicas.
+    """
+    from repro.api import AddEdge, Consistency, GraphClient, RemoveEdge, \
+        SameSCC
+    from repro.ckpt.durable import DurableService
+    from repro.core import graph_state as gs
+    from repro.core.replicas import ReplicaSet
+    from repro.launch.stream import StreamReport, typed_op_stream
+
+    # provision capacity for the whole run: a growth step mid-run would
+    # recompile on the writer AND every replica at once (1-core stall)
+    cfg = _writer_config(nv, edge_capacity=2048)
+    writer = DurableService(
+        cfg, directory, state=gs.all_singletons(cfg), buckets=(8, chunk),
+        proactive_grow=True, sync_every=sync_every, snapshot_every=0)
+    rset = ReplicaSet(directory, replicas, query_buckets=(n_queries,),
+                      poll_interval=poll_interval)
+    updater = GraphClient(writer)
+    stop = threading.Event()
+    q_counts = [0] * readers
+    touch_counts = [0] * readers
+    errors: list = []
+
+    def reader(i: int):
+        rclient = GraphClient(writer, broker=rset)  # reads -> replicas
+        wclient = GraphClient(writer)               # session's own writes
+        rng = np.random.default_rng(seed + 7919 * (i + 1))
+        u0, v0 = 2 * i, 2 * i + 1
+        flip = False
+        last_gen = 0
+        try:
+            while not stop.is_set():
+                op = RemoveEdge(u0, v0) if flip else AddEdge(u0, v0)
+                flip = not flip
+                token = wclient.submit_many([op])[0].gen
+                touch_counts[i] += 1
+                floor = max(token, last_gen)  # RYW + monotone-reads
+                qu = rng.integers(0, nv, n_queries)
+                qv = rng.integers(0, nv, n_queries)
+                res = rclient.submit_many(
+                    [SameSCC(int(a), int(b)) for a, b in zip(qu, qv)],
+                    consistency=Consistency.AT_LEAST(floor))
+                gen = res[0].gen
+                if gen < floor:
+                    raise AssertionError(
+                        f"reader {i}: stamp {gen} below floor {floor}")
+                last_gen = gen
+                q_counts[i] += n_queries
+        except Exception as e:
+            errors.append(e)
+
+    # compile warmup off the clock: one stream chunk (bucket `chunk`),
+    # one touch write (bucket 8), one replica-served query flush
+    updater.submit_many(typed_op_stream(nv, chunk, step=1 << 20,
+                                        add_frac=add_frac, seed=seed))
+    warm_floor = GraphClient(writer).submit_many([AddEdge(0, 1)])[0].gen
+    GraphClient(writer, broker=rset).submit_many(
+        [SameSCC(0, 1)], consistency=Consistency.AT_LEAST(warm_floor))
+
+    threads = [threading.Thread(target=reader, args=(i,), daemon=True)
+               for i in range(readers)]
+    applied = accepted = step = 0
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    try:
+        next_due = t0
+        while applied < n_ops:
+            n = min(chunk, n_ops - applied)
+            ops = typed_op_stream(nv, n, step=step, add_frac=add_frac,
+                                  seed=seed)
+            results = updater.submit_many(ops)
+            accepted += sum(r.value for r in results)
+            applied += n
+            step += 1
+            next_due += pace_s
+            delay = next_due - time.perf_counter()
+            if delay > 0 and applied < n_ops:
+                time.sleep(delay)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+        rs_stats = rset.stats()
+        rset.stop()
+        writer.close()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    queries = sum(q_counts)
+    touches = sum(touch_counts)
+    rep = StreamReport(
+        replicas=replicas, readers=readers, ops=applied,
+        accepted=accepted, touches=touches, queries=queries,
+        wall_s=round(wall, 4),
+        pace_ms=round(pace_s * 1e3, 1),
+        poll_ms=round(poll_interval * 1e3, 1),
+        ops_per_s=int(applied / wall),
+        queries_per_s=int(queries / wall),
+        combined_per_s=int((applied + touches + queries) / wall),
+        routed_fresh=rs_stats["routed_fresh"],
+        routed_stale=rs_stats["routed_stale"],
+        replica_gen_waits=rs_stats["gen_waits"],
+    )
+    return rep
+
+
+def writer_child(directory: str, *, nv: int = 256, steps: int = 10_000,
+                 chunk: int = 64, seed: int = 0, pace_s: float = 0.0,
+                 snapshot_every: int = 0):
+    """Crash-smoke victim: durable ingest loop, one 'gen <g>' line per
+    committed chunk on stdout (the harness watches for progress, then
+    SIGKILLs this process mid-stream)."""
+    from repro.api import GraphClient
+    from repro.ckpt.durable import DurableService
+    from repro.core import graph_state as gs
+    from repro.launch.stream import typed_op_stream
+
+    cfg = _writer_config(nv)
+    svc = DurableService(
+        cfg, directory, state=gs.all_singletons(cfg), buckets=(chunk,),
+        proactive_grow=True, sync_every=1, segment_bytes=16 << 10,
+        snapshot_every=snapshot_every, snapshot_keep=1_000_000,
+        trim_on_snapshot=False)  # keep the full WAL: the verifier's
+    #                              scratch oracle replays from gen 0
+    client = GraphClient(svc)
+    for step in range(steps):
+        ops = typed_op_stream(nv, chunk, step=step, add_frac=0.7,
+                              seed=seed)
+        client.submit_many(ops)
+        print(f"gen {svc.gen}", flush=True)
+        if pace_s:
+            time.sleep(pace_s)
+
+
+def verify_recovery(directory: str) -> dict:
+    """Recover the (possibly crash-torn) store and prove the two
+    independent recovery paths agree bit-for-bit; returns a summary
+    dict, raises on any divergence."""
+    import jax
+
+    from repro.ckpt.durable import DurableService, scratch_replay
+
+    recovered = DurableService.open(directory, snapshot_every=0)
+    oracle = scratch_replay(directory)
+    if recovered.gen != oracle.gen:
+        raise AssertionError(
+            f"recovery diverged: snapshot+tail at gen {recovered.gen}, "
+            f"scratch replay at gen {oracle.gen}")
+    for a, b in zip(jax.tree_util.tree_leaves(recovered.state),
+                    jax.tree_util.tree_leaves(oracle.state)):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            raise AssertionError("recovery diverged: state leaves differ")
+    summary = {"gen": recovered.gen,
+               "replayed_records": recovered.replayed_wal_records,
+               "live_edges": recovered.stats()["live_edges"]}
+    recovered.close()
+    return summary
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", required=True, help="durable store root")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=64)
+    ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--nv", type=int, default=1024)
+    ap.add_argument("--readers", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--writer-child", action="store_true",
+                    help="run the crash-smoke victim writer")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="writer-child: async snapshot period in gens")
+    ap.add_argument("--verify-recovery", action="store_true",
+                    help="recover the store and check both recovery "
+                         "paths agree bit-for-bit")
+    args = ap.parse_args()
+    if args.writer_child:
+        writer_child(args.dir, nv=args.nv, steps=args.steps,
+                     chunk=args.chunk, seed=args.seed,
+                     snapshot_every=args.snapshot_every)
+        return
+    if args.verify_recovery:
+        summary = verify_recovery(args.dir)
+        print("recovery OK: " + " | ".join(f"{k}={v}"
+                                           for k, v in summary.items()))
+        return
+    rep = run_replicated_stream(args.dir, replicas=args.replicas,
+                                n_ops=args.steps * args.chunk,
+                                chunk=args.chunk, nv=args.nv,
+                                readers=args.readers, seed=args.seed)
+    print(rep.pretty())
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,8 @@ streaming SCC service on the host mesh.
     python -m repro.launch.serve --arch mind --smoke
     python -m repro.launch.serve --arch smscc --steps 64
     python -m repro.launch.serve --arch smscc --steps 64 --readers 2
+    python -m repro.launch.serve --arch smscc --steps 20 --readers 2 \
+        --replicas 2 --dir /tmp/scc-store
 """
 from __future__ import annotations
 
@@ -69,15 +71,30 @@ def serve_mind(mod, steps: int):
 
 
 def serve_smscc(mod, steps: int, nv: int = 2048, chunk: int = 256,
-                readers: int = 0):
+                readers: int = 0, replicas: int = 0,
+                directory: str | None = None):
     """The paper's on-line mode: a typed GraphClient update stream +
     wait-free query batches over the committed snapshot, via the SCC
     service layer.  With ``readers > 0`` the queries move off the update
     thread into per-reader client sessions over one QueryBroker that
-    overlaps the update pipeline."""
+    overlaps the update pipeline.  With ``replicas > 0`` the store goes
+    durable instead: a WAL-backed writer plus N read replicas tailing
+    the log serve the readers' read-your-writes rounds
+    (:func:`repro.launch.replica.run_replicated_stream`; requires
+    ``directory`` for the durable store)."""
     from repro.core import graph_state as gs
     from repro.core.service import SCCService
     from repro.launch import stream
+
+    if replicas > 0:
+        from repro.launch.replica import run_replicated_stream
+        if directory is None:
+            raise SystemExit("--replicas needs --dir (durable store root)")
+        rep = run_replicated_stream(
+            directory, replicas=replicas, n_ops=steps * 32,
+            readers=max(readers, 1))
+        print(rep.pretty())
+        return
 
     cfg = mod.config(n_vertices=nv, edge_capacity=max(1024, nv),
                      max_probes=64, max_outer=64, max_inner=128)
@@ -112,6 +129,11 @@ def main():
     ap.add_argument("--readers", type=int, default=0,
                     help="smscc only: concurrent reader threads (0 = "
                          "serial query interleaving)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="smscc only: serve reads from N WAL-tailing "
+                         "replicas over a durable writer (needs --dir)")
+    ap.add_argument("--dir", dest="directory", default=None,
+                    help="smscc only: durable store root for --replicas")
     args = ap.parse_args()
     mod = configs.get(args.arch)
     if mod.FAMILY == "lm":
@@ -119,7 +141,8 @@ def main():
     elif mod.FAMILY == "recsys":
         serve_mind(mod, args.steps)
     elif mod.FAMILY == "smscc":
-        serve_smscc(mod, args.steps, readers=args.readers)
+        serve_smscc(mod, args.steps, readers=args.readers,
+                    replicas=args.replicas, directory=args.directory)
     else:
         raise SystemExit(f"no serve path for family {mod.FAMILY}")
 

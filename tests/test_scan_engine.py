@@ -396,3 +396,52 @@ def test_compile_count_bounded_by_buckets_times_scan_lengths():
     bound = 2 * (2 + 1)  # buckets x (scan lengths + serial)
     assert svc.compile_count <= bound
     assert any(key[0] == "scan" for key in svc._compiled)
+
+
+# --------------------------------------------- bulk expiry (ROADMAP 5c) ---
+
+
+def test_bulk_expiry_sliding_window_matches_oracle_and_gates():
+    """Sliding-window maintenance: every step inserts a fresh edge batch
+    and bulk-expires the batch from W steps ago as ONE REM_EDGE chunk.
+    The engine agrees with the sequential oracle throughout (acks,
+    labels, edge set), and the repair gate's deletion predicate earns
+    its keep on the expiry chunks specifically: expiries that only
+    drop absent or intra-SCC-redundant edges skip repair (TIER_SKIP),
+    expiries that break a cycle run a real tier."""
+    from collections import deque
+
+    cfg_g, _ = cfg_pair()
+    svc = SCCService(cfg_g, buckets=(8,), proactive_grow=True,
+                     state=gs.all_singletons(cfg_g))
+    oracle = SeqSCC(NV)
+    for i in range(NV):
+        assert oracle.add_vertex(i)
+
+    rng = np.random.default_rng(29)
+    window, expiry_tiers = deque(), []
+    for step_no in range(16):
+        u = rng.integers(0, NV, 8).astype(np.int32)
+        v = rng.integers(0, NV, 8).astype(np.int32)
+        kind = np.full(8, dynamic.ADD_EDGE, np.int32)
+        ok = svc.apply(kind, u, v)
+        assert ok.tolist() == oracle_replay(oracle, svc._sched,
+                                            kind, u, v).tolist(), step_no
+        window.append((u, v))
+        if len(window) > 3:  # the window slides: evict the oldest batch
+            eu, ev = window.popleft()
+            kind = np.full(8, dynamic.REM_EDGE, np.int32)
+            before = dict(svc.repair_tier_steps)
+            ok = svc.apply(kind, eu, ev)
+            assert ok.tolist() == oracle_replay(
+                oracle, svc._sched, kind, eu, ev).tolist(), step_no
+            expiry_tiers.append(
+                {k: svc.repair_tier_steps[k] - before[k] for k in before})
+        assert np.asarray(svc.state.ccid).tolist() == oracle.ccid(), step_no
+        assert svc.edge_set() == oracle.edges, step_no
+
+    skipped = sum(d["skipped"] for d in expiry_tiers)
+    real = sum(d[k] for d in expiry_tiers
+               for k in ("dense", "compact", "full"))
+    assert skipped > 0, "no expiry chunk was proved structure-preserving"
+    assert real > 0, "no expiry chunk ran a real repair tier"
