@@ -568,6 +568,19 @@ def _dicts(rows, header):
     return [dict(zip(header, r)) for r in rows]
 
 
+def _kernel_impl_info(nv, edge_capacity):
+    """What the ``'auto'`` sparse_impl resolved to for this run's shapes
+    -- recorded so a trajectory point taken on a TPU host (Pallas sweeps)
+    is never compared against a CPU point (XLA oracle) by accident."""
+    from repro.kernels.frontier_expand import ops as frontier_ops
+    from repro.kernels.hash_probe import ops as hash_probe_ops
+    return {
+        "sparse_impl": "auto",
+        "frontier_expand": frontier_ops.resolve_impl("auto", nv),
+        "hash_probe": hash_probe_ops.resolve_impl("auto", edge_capacity),
+    }
+
+
 def append_report(path, report):
     """Append-friendly perf trajectory: ``{"runs": [...]}`` with one
     labelled entry per recorded run.  A pre-schema single-run file (the
@@ -619,8 +632,9 @@ def main():
         # covers table growth; chunk = 4 x the large bucket so the scan
         # engine's K=4 super-chunks are exercised end-to-end
         buckets = (32, 128)
-        rows = run(nv=256, edge_capacity=256, n_ops=1024, chunk=512,
-                   buckets=buckets, n_queries=256,
+        nv_used, cap_used = 256, 256
+        rows = run(nv=nv_used, edge_capacity=cap_used, n_ops=1024,
+                   chunk=512, buckets=buckets, n_queries=256,
                    mixes=("update_heavy", "query_heavy"))
         overlap = run_overlap(nv=256, edge_capacity=1024, n_ops=1024,
                               chunk=128, buckets=buckets, n_queries=256,
@@ -635,7 +649,8 @@ def main():
     elif args.full:
         buckets = (1024, 4096)
         # chunk = 4 x the large bucket: the mixes run K=4 super-chunks
-        rows = run(nv=2 ** 17, edge_capacity=2 ** 18, n_ops=2 ** 17,
+        nv_used, cap_used = 2 ** 17, 2 ** 18
+        rows = run(nv=nv_used, edge_capacity=cap_used, n_ops=2 ** 17,
                    chunk=2 ** 14, buckets=buckets, n_queries=2 ** 15)
         overlap = run_overlap(nv=2 ** 17, edge_capacity=2 ** 18,
                               n_ops=2 ** 17, chunk=4096,
@@ -651,6 +666,7 @@ def main():
                                               n_ops=1920, nv=2048)
     else:
         buckets = (128, 512)
+        nv_used, cap_used = 4096, 4096
         rows = run(buckets=buckets, chunk=2048)
         overlap = run_overlap(buckets=buckets, readers=args.readers)
         overhead, overhead_frac = run_client_overhead(buckets=buckets)
@@ -682,6 +698,7 @@ def main():
             },
             "repair_tiers": repair_rep,
             "replicas": replicas_rep,
+            "kernel_impl": _kernel_impl_info(nv_used, cap_used),
         }
         append_report(args.json, report)
         print(f"appended run '{report['label']}' to {args.json}")

@@ -47,6 +47,41 @@ if bad:
     sys.exit(1)
 PYEOF
 
+echo "== sparse gate: every core/ sweep call site must thread impl= =="
+# the frontier_expand / hash_probe kernels only reach the dataflow when
+# the call site forwards the configured impl -- a bare sweep call in
+# core/ silently pins the XLA oracle everywhere, including real TPUs
+python - <<'PYEOF'
+import pathlib, re, sys
+
+SWEEPS = ("forward_reach", "backward_reach", "fused_fw_bw_reach",
+          "propagate_min_labels", "propagate_min_prio",
+          "multi_forward_reach", "is_reachable",
+          "scc_static", "scc_compact_region")
+PAT = re.compile(
+    r"(?<![\w.])(?:reach\.|scc\.)?(?:%s)\(" % "|".join(SWEEPS))
+ET_PAT = re.compile(r"(?<![\w.])et\.(?:lookup|insert|remove|rehash|"
+                    r"compact)\(")
+bad = []
+for p in sorted(pathlib.Path("src/repro/core").rglob("*.py")):
+    text = p.read_text()
+    for pat in (PAT, ET_PAT):
+        for m in pat.finditer(text):
+            head = text[:m.start()].rstrip()
+            if head.endswith("def"):  # the definition itself
+                continue
+            i, depth = m.end(), 1  # span the whole (multi-line) call
+            while i < len(text) and depth:
+                depth += (text[i] == "(") - (text[i] == ")")
+                i += 1
+            if "impl=" not in text[m.end():i]:
+                bad.append(f"{p}:{text.count(chr(10), 0, m.start()) + 1}")
+if bad:
+    print("core/ sparse-sweep call site without an impl= hook:",
+          *bad, file=sys.stderr)
+    sys.exit(1)
+PYEOF
+
 echo "== api gate: no raw engine call sites outside src/repro/core =="
 # the typed repro.api.GraphClient is the only public surface: raw
 # (kind, u, v) .apply( chunks and string-kind broker submit( calls must
@@ -148,6 +183,28 @@ assert overlap_ratio >= 1.25, (
     f"reader/updater overlap eroded: concurrent combined "
     f"{conc_row['combined_per_s']} ops/s is only {overlap_ratio:.2f}x "
     f"the serial baseline {serial_row['combined_per_s']} (floor 1.25x)")
+# sparse-kernel-era gates (PR 7): the run must record which sparse impl
+# it measured, the compact tier's median repair step must stay within an
+# absolute ceiling (generous 3x over the committed pr6 6.58ms point, to
+# ride out container speed variance), and the query-heavy mix must hold
+# a floor relative to the committed pr6-durability trajectory point
+# (0.6x in-gate: single-shot smoke throughput jitters across CI
+# containers; the acceptance review compares the appended runs 1:1)
+assert rep.get("kernel_impl", {}).get("frontier_expand") in (
+    "pallas", "pallas_interpret", "xla"), (
+    "run is missing kernel_impl provenance")
+compact_med = rt["median_step_s"]["compact"]["tiered_s"]
+assert compact_med <= 0.020, (
+    f"compact-tier median repair step regressed: {compact_med:.4f}s "
+    f"> 0.020s ceiling (pr6-durability committed 0.00658s)")
+pr6 = next((r for r in trajectory["runs"]
+            if r.get("label") == "pr6-durability"), None)
+if pr6 is not None:
+    qh = next(r for r in rep["mixes"] if r["mix"] == "query_heavy")
+    qh6 = next(r for r in pr6["mixes"] if r["mix"] == "query_heavy")
+    assert qh["combined_per_s"] >= 0.6 * qh6["combined_per_s"], (
+        f"query-heavy mix fell below the pr6-durability floor: "
+        f"{qh['combined_per_s']} < 0.6 x {qh6['combined_per_s']} ops/s")
 # replica-scaling gate: 2 WAL-tailing read replicas must deliver >= 1.5x
 # the combined throughput of 1 on the read-your-writes round workload
 rs = rep["replicas"]
@@ -163,7 +220,9 @@ print("perf-trajectory gates OK:",
       f"repair speedup {rt['compact_vs_full_speedup']}x,",
       f"tier hits {rt['tier_counts']},",
       f"overlap {overlap_ratio:.2f}x,",
-      f"replica scaling {rs['scaling']}x")
+      f"replica scaling {rs['scaling']}x,",
+      f"compact median {compact_med * 1e3:.2f}ms,",
+      f"sparse impl {rep['kernel_impl']['frontier_expand']}")
 PYEOF
     echo "== documented serving entry point (examples/dynamic_scc_serving.py --smoke) =="
     python examples/dynamic_scc_serving.py --smoke

@@ -161,7 +161,8 @@ def _apply_batch_impl(state: gs.GraphState, ops: OpBatch,
     ends_ok = v_alive[jnp.clip(ops.u, 0, nv - 1)] & \
         v_alive[jnp.clip(ops.v, 0, nv - 1)]
     edges, removed = et.remove(edges, ops.u, ops.v, cfg.max_probes,
-                               enable=is_reme & ends_ok)
+                               enable=is_reme & ends_ok,
+                               impl=cfg.sparse_impl)
     ok = jnp.where(removed, True, ok)
     same_class = ccid[jnp.clip(ops.u, 0, nv - 1)] == \
         ccid[jnp.clip(ops.v, 0, nv - 1)]
@@ -186,7 +187,8 @@ def _apply_batch_impl(state: gs.GraphState, ops: OpBatch,
         v_alive[jnp.clip(ops.v, 0, nv - 1)]
     enable = is_adde & ends_ok
     edges, inserted, dropped = et.insert(edges, ops.u, ops.v,
-                                         cfg.max_probes, enable=enable)
+                                         cfg.max_probes, enable=enable,
+                                         impl=cfg.sparse_impl)
     ok = jnp.where(inserted, True, ok)
     # overflow accounting straight from the table's own probe-exhaustion
     # report -- the host must grow the table and replay these lanes.
@@ -211,12 +213,15 @@ def _apply_batch_impl(state: gs.GraphState, ops: OpBatch,
         if cfg.fuse_fwbw:
             fw, bw, _ = reach.fused_fw_bw_reach(
                 src, dst, live, seed_f, seed_b, v_alive, cfg.max_inner,
-                spec=cfg.label_spec)
+                spec=cfg.label_spec, impl=cfg.sparse_impl)
         else:
             fw, _ = reach.forward_reach(src, dst, live, seed_f, v_alive,
-                                        cfg.max_inner, spec=cfg.label_spec)
+                                        cfg.max_inner, spec=cfg.label_spec,
+                                        impl=cfg.sparse_impl)
             bw, _ = reach.backward_reach(src, dst, live, seed_b, v_alive,
-                                         cfg.max_inner, spec=cfg.label_spec)
+                                         cfg.max_inner,
+                                         spec=cfg.label_spec,
+                                         impl=cfg.sparse_impl)
         region = (m_del | (fw & bw)) & v_alive
         region_v = jnp.sum(region).astype(jnp.int32)
         region_e = jnp.sum(live & region[src] & region[dst]
@@ -232,7 +237,8 @@ def _apply_batch_impl(state: gs.GraphState, ops: OpBatch,
                                  max_outer=cfg.max_outer,
                                  max_inner=cfg.max_inner,
                                  spec=cfg.label_spec,
-                                 shortcut=cfg.shortcut)
+                                 shortcut=cfg.shortcut,
+                                 impl=cfg.sparse_impl)
             return lab, jnp.int32(TIER_FULL)
 
         dispatch = repair_full
@@ -251,7 +257,7 @@ def _apply_batch_impl(state: gs.GraphState, ops: OpBatch,
                     lab, _fits = scc.scc_compact_region(
                         src, dst, live, region, vcap, ecap,
                         max_outer=cfg.max_outer, max_inner=cfg.max_inner,
-                        shortcut=cfg.shortcut)
+                        shortcut=cfg.shortcut, impl=cfg.sparse_impl)
                     return lab, jnp.int32(TIER_COMPACT)
                 return run
 
@@ -415,6 +421,7 @@ def recompute(state: gs.GraphState, cfg: gs.GraphConfig) -> gs.GraphState:
     src, dst, live = gs.edge_coo(state)
     lab = scc.scc_static(src, dst, live, state.v_alive,
                          max_outer=cfg.max_outer, max_inner=cfg.max_inner,
-                         spec=cfg.label_spec, shortcut=cfg.shortcut)
+                         spec=cfg.label_spec, shortcut=cfg.shortcut,
+                         impl=cfg.sparse_impl)
     ccid = jnp.where(state.v_alive, lab, cfg.n_vertices)
     return gs.recount_ccs(state._replace(ccid=ccid, gen=state.gen + 1))

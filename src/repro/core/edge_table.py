@@ -23,6 +23,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.hash_probe import ops as hash_probe
+
 EMPTY = jnp.int8(0)
 LIVE = jnp.int8(1)
 TOMB = jnp.int8(2)
@@ -54,17 +56,24 @@ def _hash(u: jax.Array, v: jax.Array, capacity: int) -> jax.Array:
     return (h & jnp.uint32(capacity - 1)).astype(jnp.int32)
 
 
-def lookup(table: EdgeTable, u: jax.Array, v: jax.Array, max_probes: int
-           ) -> Tuple[jax.Array, jax.Array]:
+def lookup(table: EdgeTable, u: jax.Array, v: jax.Array, max_probes: int,
+           *, impl: str = "xla") -> Tuple[jax.Array, jax.Array]:
     """Batched membership probe.
 
     Returns ``(found: bool[B], slot: int32[B])``; ``slot`` is the LIVE slot
     of the key when found, else the first EMPTY/TOMB slot seen (insertion
     point), else -1 when the probe bound was exhausted.
+
+    ``impl`` picks the probe engine (GraphConfig.sparse_impl semantics):
+    the sequential fori_loop below is the ``'xla'`` oracle; the Pallas
+    panel sweep (:mod:`repro.kernels.hash_probe`) is bit-identical to it.
     """
     cap = table.src.shape[0]
     base = _hash(u, v, cap)
     b = u.shape[0]
+    if hash_probe.resolve_impl(impl, cap) != "xla":
+        return hash_probe.probe(table.src, table.dst, table.state, base,
+                                u, v, max_probes=max_probes, impl=impl)
 
     def body(i, carry):
         done, found, slot, free = carry
@@ -92,7 +101,7 @@ def lookup(table: EdgeTable, u: jax.Array, v: jax.Array, max_probes: int
 
 
 def insert(table: EdgeTable, u: jax.Array, v: jax.Array, max_probes: int,
-           enable: jax.Array | None = None
+           enable: jax.Array | None = None, *, impl: str = "xla"
            ) -> Tuple[EdgeTable, jax.Array, jax.Array]:
     """Batched insert.  Returns ``(table, inserted: bool[B], failed: bool[B])``.
 
@@ -129,7 +138,10 @@ def insert(table: EdgeTable, u: jax.Array, v: jax.Array, max_probes: int,
     dup = jnp.zeros((b,), jnp.bool_).at[order].set(dup_sorted)
     enable = enable & ~dup
 
-    found, _ = lookup(table, u, v, max_probes)
+    # membership probe through the impl hook; the claim loop below stays
+    # XLA -- it is an inherently serial linearization (scatter-min winner
+    # per round), not a sweep
+    found, _ = lookup(table, u, v, max_probes, impl=impl)
     want = enable & ~found
 
     base = _hash(u, v, cap)
@@ -164,13 +176,13 @@ def insert(table: EdgeTable, u: jax.Array, v: jax.Array, max_probes: int,
 
 
 def remove(table: EdgeTable, u: jax.Array, v: jax.Array, max_probes: int,
-           enable: jax.Array | None = None
+           enable: jax.Array | None = None, *, impl: str = "xla"
            ) -> Tuple[EdgeTable, jax.Array]:
     """Batched remove (logical delete -> TOMB).  Returns (table, removed[B])."""
     b = u.shape[0]
     if enable is None:
         enable = jnp.ones((b,), jnp.bool_)
-    found, slot = lookup(table, u, v, max_probes)
+    found, slot = lookup(table, u, v, max_probes, impl=impl)
     hit = found & enable
     # duplicate removals of the same key in one batch target the same slot;
     # both see LIVE pre-state, but sequentially only the first succeeds.
@@ -198,7 +210,8 @@ def remove_incident(table: EdgeTable, v_mask: jax.Array) -> Tuple[EdgeTable, jax
         state=jnp.where(kill, TOMB, table.state)), kill
 
 
-def rehash(table: EdgeTable, new_capacity: int, max_probes: int) -> EdgeTable:
+def rehash(table: EdgeTable, new_capacity: int, max_probes: int,
+           *, impl: str = "xla") -> EdgeTable:
     """Migrate every LIVE entry into a fresh table of ``new_capacity``.
 
     The grow half of grow-and-replay: the host detects probe-bound overflow
@@ -212,14 +225,15 @@ def rehash(table: EdgeTable, new_capacity: int, max_probes: int) -> EdgeTable:
     live = table.state == LIVE
     fresh = empty(new_capacity)
     fresh, _, _ = insert(fresh, table.src, table.dst, max_probes,
-                         enable=live)
+                         enable=live, impl=impl)
     return fresh
 
 
-def compact(table: EdgeTable, max_probes: int) -> EdgeTable:
+def compact(table: EdgeTable, max_probes: int, *, impl: str = "xla"
+            ) -> EdgeTable:
     """GC pass: rebuild the table without tombstones (hazard-pointer
     analogue) -- rehash at the current capacity."""
-    return rehash(table, table.src.shape[0], max_probes)
+    return rehash(table, table.src.shape[0], max_probes, impl=impl)
 
 
 def fill_stats(table: EdgeTable):

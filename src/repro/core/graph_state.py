@@ -73,6 +73,17 @@ class GraphConfig:
     # 'auto' = Pallas MXU kernel on TPU / interpret-mode validation on CPU,
     # 'pallas' / 'pallas_interpret' force those, 'xla' = jnp oracle fallback
     dense_matmul_impl: str = "auto"
+    # which implementation backs the *sparse* hot loop: every FW/BW
+    # fixpoint round (kernels.frontier_expand segment-min) and every
+    # edge-table probe (kernels.hash_probe fused sweep).  'auto' = Pallas
+    # on TPU within the kernels' size ceilings, XLA scatter/probe-loop
+    # otherwise; 'pallas' / 'pallas_interpret' force the kernel; 'xla' is
+    # the differential oracle the fuzz suites A/B against.  Unlike
+    # dense_matmul_impl, CPU 'auto' resolves to 'xla' (not interpret):
+    # these sweeps are always-on, and interpret-executing them would
+    # regress every step by orders of magnitude -- the interpret path is
+    # exercised by the forced-impl test suites instead.
+    sparse_impl: str = "auto"
     # compact-sparse repair tier: >0 (and < n_vertices) compacts affected
     # regions of at most this many vertices into bounded sub-arrays so each
     # fixpoint round costs O(region) instead of O(table capacity)
@@ -115,6 +126,8 @@ class GraphConfig:
         assert all(b > 0 for b in self.region_edge_buckets), (
             "region_edge_buckets must be positive")
         assert self.region_vertex_capacity >= 0
+        assert self.sparse_impl in ("auto", "pallas", "pallas_interpret",
+                                    "xla"), self.sparse_impl
 
 
 class GraphState(NamedTuple):
@@ -155,7 +168,8 @@ def from_arrays(cfg: GraphConfig, src, dst, n_active_vertices=None) -> GraphStat
     v_alive = (jnp.arange(nv) < n_active_vertices)
     # overflow = keys the table itself reports dropped on probe exhaustion
     # (duplicates in the input are found / deduped, so they do not count).
-    table, _, failed = et.insert(state.edges, src, dst, cfg.max_probes)
+    table, _, failed = et.insert(state.edges, src, dst, cfg.max_probes,
+                                 impl=cfg.sparse_impl)
     state = state._replace(
         v_alive=v_alive,
         edges=table,

@@ -18,11 +18,24 @@ Three execution paths:
 
 Every function is a pure jit-able map; fixpoints are ``lax.while_loop`` with
 an explicit ``changed`` flag plus an iteration cap (static bound).
+
+Every sweep's per-round reduction is ONE primitive -- a segment-min of
+uint32 edge messages into destination vertices (booleans ride the
+min-semiring: reached -> 0, blocked -> SENTINEL) -- routed through
+:func:`repro.kernels.frontier_expand.ops.frontier_min`.  ``impl`` selects
+the engine per GraphConfig.sparse_impl: the XLA scatter-min oracle or the
+Pallas panel kernel, bit-identical by construction and by the
+differential fuzz suite (tests/test_sparse_kernels.py).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.frontier_expand import ops as frontier
+
+SENT = frontier.SENTINEL  # uint32 min-semiring identity
+ZERO_U32 = jnp.uint32(0)
 
 
 def _fixpoint(body, init, max_iters: int):
@@ -52,7 +65,7 @@ def _constrain(x, spec):
 
 
 def forward_reach(src, dst, live, seeds, allowed, max_iters: int,
-                  spec=None):
+                  spec=None, impl: str = "xla"):
     """bool[NV]: vertices reachable from ``seeds`` along live edges, staying
     inside ``allowed`` (both endpoints).  Seeds outside ``allowed`` are
     dropped.  Returns (reached, rounds).  ``spec`` optionally pins the
@@ -61,23 +74,24 @@ def forward_reach(src, dst, live, seeds, allowed, max_iters: int,
     reached0 = _constrain(seeds & allowed, spec)
 
     def body(reached):
-        msg = reached[src] & live & allowed[dst]
-        new = jnp.zeros((nv,), jnp.bool_).at[dst].max(msg)
-        nxt = _constrain(reached | (new & allowed), spec)
+        msg = jnp.where(reached[src] & live, ZERO_U32, SENT)
+        incoming = frontier.frontier_min(dst, msg, nv, impl=impl)
+        nxt = _constrain(reached | ((incoming == 0) & allowed), spec)
         return nxt, jnp.any(nxt != reached)
 
     return _fixpoint(body, reached0, max_iters)
 
 
 def backward_reach(src, dst, live, seeds, allowed, max_iters: int,
-                   spec=None):
+                   spec=None, impl: str = "xla"):
     """Reachability along *reversed* edges (paper's DFSBW / incoming list)."""
     return forward_reach(dst, src, live, seeds, allowed, max_iters,
-                         spec=spec)
+                         spec=spec, impl=impl)
 
 
 def propagate_min_labels(src, dst, live, labels, allowed, max_iters: int,
-                         spec=None, shortcut: bool = False):
+                         spec=None, shortcut: bool = False,
+                         impl: str = "xla"):
     """Forward min-label propagation to fixpoint (the 'coloring' sweep).
 
     labels[v] converges to min(labels[u] : u ⇝ v within allowed, incl. v).
@@ -93,11 +107,17 @@ def propagate_min_labels(src, dst, live, labels, allowed, max_iters: int,
     """
     nv = labels.shape[0]
     sentinel = jnp.iinfo(labels.dtype).max
+    # labels ride the kernel's uint32 min-semiring: non-negative int32
+    # labels order-embed into uint32, and clamping the incoming minimum
+    # back to the dtype sentinel makes the round-trip exact
+    assert jnp.iinfo(labels.dtype).bits <= 32, labels.dtype
 
     def body(lab):
-        ok = live & allowed[src] & allowed[dst]
-        msg = jnp.where(ok, lab[src], sentinel)
-        incoming = jnp.full((nv,), sentinel, lab.dtype).at[dst].min(msg)
+        msg = jnp.where(live & allowed[src], lab[src].astype(jnp.uint32),
+                        SENT)
+        incoming = frontier.frontier_min(dst, msg, nv, impl=impl)
+        incoming = jnp.minimum(incoming, jnp.uint32(sentinel)).astype(
+            lab.dtype)
         nxt = jnp.where(allowed, jnp.minimum(lab, incoming), lab)
         if shortcut:
             hop = nxt[jnp.clip(nxt, 0, nv - 1)]
@@ -109,20 +129,21 @@ def propagate_min_labels(src, dst, live, labels, allowed, max_iters: int,
     return _fixpoint(body, labels, max_iters)
 
 
-def multi_forward_reach(src, dst, live, seeds, allowed, max_iters: int):
+def multi_forward_reach(src, dst, live, seeds, allowed, max_iters: int,
+                        impl: str = "xla"):
     """Batched reachability: seeds/result are bool[B, NV].
 
-    One gather/scatter per round moves all B frontiers simultaneously --
-    this is the sparse counterpart of the dense block-matmul kernel (there
-    the B dimension feeds the MXU).
+    One gather/segment-min per round moves all B frontiers simultaneously
+    -- the B axis is the kernel's frontier dimension (and, on the dense
+    tier, what feeds the MXU).
     """
     nv = seeds.shape[1]
     reached0 = seeds & allowed[None, :]
 
     def body(reached):
-        msg = reached[:, src] & (live & allowed[dst])[None, :]
-        new = jnp.zeros_like(reached).at[:, dst].max(msg)
-        nxt = reached | (new & allowed[None, :])
+        msg = jnp.where(reached[:, src] & live[None, :], ZERO_U32, SENT)
+        incoming = frontier.frontier_min(dst, msg, nv, impl=impl)
+        nxt = reached | ((incoming == 0) & allowed[None, :])
         return nxt, jnp.any(nxt != reached)
 
     return _fixpoint(body, reached0, max_iters)
@@ -150,7 +171,8 @@ def _unprio(p):
     return (p * jnp.uint32(P_INV)).astype(jnp.int32)
 
 
-def propagate_min_prio(src, dst, live, active, max_iters: int, spec=None):
+def propagate_min_prio(src, dst, live, active, max_iters: int, spec=None,
+                       impl: str = "xla"):
     """Witness propagation with pointer doubling under hashed priorities.
 
     Returns (witness int32[NV], rounds): witness[v] = the vertex with
@@ -165,9 +187,8 @@ def propagate_min_prio(src, dst, live, active, max_iters: int, spec=None):
     lab0 = jnp.where(active, _prio(vid), PRIO_SENT)
 
     def body(lab):
-        ok = live & active[src] & active[dst]
-        msg = jnp.where(ok, lab[src], PRIO_SENT)
-        incoming = jnp.full((nv,), PRIO_SENT, jnp.uint32).at[dst].min(msg)
+        msg = jnp.where(live & active[src], lab[src], PRIO_SENT)
+        incoming = frontier.frontier_min(dst, msg, nv, impl=impl)
         nxt = jnp.where(active, jnp.minimum(lab, incoming), lab)
         # pointer jump through the witness vertex
         w = jnp.clip(_unprio(nxt), 0, nv - 1)
@@ -183,7 +204,7 @@ def propagate_min_prio(src, dst, live, active, max_iters: int, spec=None):
 
 
 def fused_fw_bw_reach(src, dst, live, seed_f, seed_b, allowed,
-                      max_iters: int, spec=None):
+                      max_iters: int, spec=None, impl: str = "xla"):
     """FW(seed_f) and BW(seed_b) in ONE fixpoint over a stacked [2, NV]
     frontier -- the two sweeps of the paper's repair run simultaneously,
     so the round count is max(d_fw, d_bw) instead of d_fw + d_bw and each
@@ -195,11 +216,12 @@ def fused_fw_bw_reach(src, dst, live, seed_f, seed_b, allowed,
             reached0, jax.sharding.PartitionSpec(None, *spec))
 
     def body(reached):
-        msg_f = reached[0][src] & live & allowed[dst]
-        msg_b = reached[1][dst] & live & allowed[src]
-        new_f = jnp.zeros((nv,), jnp.bool_).at[dst].max(msg_f)
-        new_b = jnp.zeros((nv,), jnp.bool_).at[src].max(msg_b)
-        nxt = reached | (jnp.stack([new_f, new_b]) & allowed[None, :])
+        msg_f = jnp.where(reached[0][src] & live, ZERO_U32, SENT)
+        msg_b = jnp.where(reached[1][dst] & live, ZERO_U32, SENT)
+        inc_f = frontier.frontier_min(dst, msg_f, nv, impl=impl)
+        inc_b = frontier.frontier_min(src, msg_b, nv, impl=impl)
+        new = jnp.stack([inc_f == 0, inc_b == 0])
+        nxt = reached | (new & allowed[None, :])
         if spec is not None:
             nxt = jax.lax.with_sharding_constraint(
                 nxt, jax.sharding.PartitionSpec(None, *spec))
@@ -209,9 +231,11 @@ def fused_fw_bw_reach(src, dst, live, seed_f, seed_b, allowed,
     return reached[0], reached[1], rounds
 
 
-def is_reachable(src, dst, live, u, v, allowed, max_iters: int):
+def is_reachable(src, dst, live, u, v, allowed, max_iters: int,
+                 impl: str = "xla"):
     """Paper's ``isReachable`` (used by AddEdge step 4): scalar u ⇝ v?"""
     nv = allowed.shape[0]
     seeds = jnp.zeros((nv,), jnp.bool_).at[u].set(True)
-    reached, _ = forward_reach(src, dst, live, seeds, allowed, max_iters)
+    reached, _ = forward_reach(src, dst, live, seeds, allowed, max_iters,
+                               impl=impl)
     return reached[v]

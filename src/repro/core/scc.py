@@ -71,9 +71,9 @@ def trim(src, dst, live, unassigned, vid, ccid, max_iters: int):
 
 
 @partial(jax.jit, static_argnames=("max_outer", "max_inner", "spec",
-                                   "shortcut"))
+                                   "shortcut", "impl"))
 def scc_static(src, dst, live, active, *, max_outer: int, max_inner: int,
-               spec=None, shortcut: bool = False):
+               spec=None, shortcut: bool = False, impl: str = "xla"):
     """SCC labels of the subgraph induced by ``active`` over live edges.
 
     Returns int32[NV]: min-member-id label for active vertices, INT32_MAX
@@ -106,9 +106,11 @@ def scc_static(src, dst, live, active, *, max_outer: int, max_inner: int,
         # O(diameter) rounds.
         if shortcut:
             fwd, _ = reach.propagate_min_prio(
-                src, dst, live, unassigned, max_inner, spec=spec)
+                src, dst, live, unassigned, max_inner, spec=spec,
+                impl=impl)
             bwd, _ = reach.propagate_min_prio(
-                dst, src, live, unassigned, max_inner, spec=spec)
+                dst, src, live, unassigned, max_inner, spec=spec,
+                impl=impl)
             done = unassigned & (fwd == bwd) & (fwd < nv)
             # canonical label = min member id of each witness group
             grp = jnp.where(done, fwd, nv)
@@ -118,9 +120,11 @@ def scc_static(src, dst, live, active, *, max_outer: int, max_inner: int,
         else:
             init = jnp.where(unassigned, vid, INT32_MAX)
             fwd, _ = reach.propagate_min_labels(
-                src, dst, live, init, unassigned, max_inner, spec=spec)
+                src, dst, live, init, unassigned, max_inner, spec=spec,
+                impl=impl)
             bwd, _ = reach.propagate_min_labels(
-                dst, src, live, init, unassigned, max_inner, spec=spec)
+                dst, src, live, init, unassigned, max_inner, spec=spec,
+                impl=impl)
             done = unassigned & (fwd == bwd)
             ccid = jnp.where(done, fwd, ccid)
         unassigned = unassigned & ~done
@@ -194,7 +198,7 @@ def compact_region(src, dst, live, region_mask, v_capacity: int,
 
 def scc_compact_region(src, dst, live, region_mask, v_capacity: int,
                        e_capacity: int, *, max_outer: int, max_inner: int,
-                       shortcut: bool = False):
+                       shortcut: bool = False, impl: str = "xla"):
     """SCC labels of the region via the compact-sparse tier.
 
     Gathers the region once into static ``(v_capacity, e_capacity)``
@@ -202,7 +206,8 @@ def scc_compact_region(src, dst, live, region_mask, v_capacity: int,
     trim/color/backward round costs O(region) gathers and scatters instead
     of O(table capacity).  Returns ``(ccid int32[NV], fits bool[])`` --
     labels valid where ``region_mask`` (INT32_MAX sentinel elsewhere) and
-    bit-identical to ``scc_static(src, dst, live, region_mask, ...)``: both
+    bit-identical to :func:`scc_static` on the uncompacted
+    ``(src, dst, live, region_mask)`` operands: both
     produce canonical min-member-id labels and the compact enumeration is
     order-preserving.
     """
@@ -212,7 +217,7 @@ def scc_compact_region(src, dst, live, region_mask, v_capacity: int,
     # no spec: the whole point is that compact operands are small enough to
     # stay replicated, round after round
     clab = scc_static(csrc, cdst, celive, valid, max_outer=max_outer,
-                      max_inner=max_inner, shortcut=shortcut)
+                      max_inner=max_inner, shortcut=shortcut, impl=impl)
     # a slot scc_static left unassigned (sentinel; only possible when
     # max_outer was exhausted) must stay the sentinel globally too, exactly
     # as the full-sparse tier would report it -- never a clipped real id

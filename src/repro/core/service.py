@@ -81,13 +81,15 @@ class Snapshot(NamedTuple):
     gen: int
 
 
-@partial(jax.jit, static_argnames=("new_capacity", "max_probes"))
-def _rehash(table: et.EdgeTable, new_capacity: int, max_probes: int):
-    return et.rehash(table, new_capacity, max_probes)
+@partial(jax.jit, static_argnames=("new_capacity", "max_probes", "impl"))
+def _rehash(table: et.EdgeTable, new_capacity: int, max_probes: int,
+            impl: str = "xla"):
+    return et.rehash(table, new_capacity, max_probes, impl=impl)
 
 
-@partial(jax.jit, static_argnames=("max_inner",))
-def _reachable_batch(state: gs.GraphState, u, v, max_inner: int):
+@partial(jax.jit, static_argnames=("max_inner", "impl"))
+def _reachable_batch(state: gs.GraphState, u, v, max_inner: int,
+                     impl: str = "xla"):
     """bool[Q]: u[i] ⇝ v[i] over live edges (u==v and alive counts)."""
     nv = state.ccid.shape[0]
     uu = jnp.clip(u, 0, nv - 1)
@@ -97,7 +99,8 @@ def _reachable_batch(state: gs.GraphState, u, v, max_inner: int):
         jnp.arange(u.shape[0]), uu].set(True)
     from repro.core import reach
     reached, _ = reach.multi_forward_reach(src, dst, live, seeds,
-                                           state.v_alive, max_inner)
+                                           state.v_alive, max_inner,
+                                           impl=impl)
     ok = state.v_alive[uu] & state.v_alive[vv]
     return ok & reached[jnp.arange(u.shape[0]), vv]
 
@@ -144,7 +147,8 @@ def reachable_on(state: gs.GraphState, cfg: gs.GraphConfig, u, v
                  ) -> np.ndarray:
     """bool[Q]: u[i] ⇝ v[i] on a pinned snapshot."""
     res = _reachable_batch(state, jnp.asarray(u, jnp.int32),
-                           jnp.asarray(v, jnp.int32), cfg.max_inner)
+                           jnp.asarray(v, jnp.int32), cfg.max_inner,
+                           impl=cfg.sparse_impl)
     return np.asarray(res) & _ids_in_range(u, cfg.n_vertices) \
         & _ids_in_range(v, cfg.n_vertices)
 
@@ -443,7 +447,8 @@ class SCCService:
         ku[:n_keys] = keys[:, 0]
         kv[:n_keys] = keys[:, 1]
         found, _ = et.lookup(self._state.edges, jnp.asarray(ku),
-                             jnp.asarray(kv), self._cfg.max_probes)
+                             jnp.asarray(kv), self._cfg.max_probes,
+                             impl=self._cfg.sparse_impl)
         n_new = int(np.sum(~np.asarray(found)[:n_keys]))
         predicted = live + n_new - n_rem
         if predicted <= self._cfg.edge_capacity:
@@ -621,7 +626,8 @@ class SCCService:
         if not cand.any():
             return cand
         found, _ = et.lookup(self._state.edges, ops.u, ops.v,
-                             self._cfg.max_probes)
+                             self._cfg.max_probes,
+                             impl=self._cfg.sparse_impl)
         return cand & ~np.asarray(found)
 
     def grow(self, new_capacity: int | None = None):
@@ -648,7 +654,8 @@ class SCCService:
                 raise RuntimeError(
                     f"edge table would exceed max_edge_capacity "
                     f"({cap} > {self._max_edge_capacity})")
-            table = _rehash(self._state.edges, cap, self._cfg.max_probes)
+            table = _rehash(self._state.edges, cap, self._cfg.max_probes,
+                            impl=self._cfg.sparse_impl)
             live_after, _ = et.fill_stats(table)
             if int(live_after) == int(live_before):
                 self._live_ub = int(live_after)  # sync already paid
@@ -717,8 +724,22 @@ class SCCService:
         return set(zip(src.tolist(), dst.tolist()))
 
     def stats(self) -> dict:
+        from repro.kernels.frontier_expand import ops as frontier_ops
+        from repro.kernels.hash_probe import ops as hash_probe_ops
+        from repro.kernels.reach_blockmm import ops as blockmm_ops
         live, tomb = et.fill_stats(self._committed.edges)
         return {
+            # what each kernel hook actually resolves to on this backend
+            # at the current capacities ('auto' is size-dependent)
+            "kernel_impl": {
+                "sparse_impl": self._cfg.sparse_impl,
+                "frontier_expand": frontier_ops.resolve_impl(
+                    self._cfg.sparse_impl, self._cfg.n_vertices),
+                "hash_probe": hash_probe_ops.resolve_impl(
+                    self._cfg.sparse_impl, self._cfg.edge_capacity),
+                "dense_matmul": blockmm_ops._resolve(
+                    self._cfg.dense_matmul_impl),
+            },
             "gen": self.gen,
             "n_ccs": int(self._committed.n_ccs),
             "live_edges": int(live),

@@ -1,6 +1,10 @@
 # Pallas TPU kernels for the compute hot-spots, each with an ops.py jit'd
 # wrapper and a ref.py pure-jnp oracle (validated via interpret=True on CPU):
 #   reach_blockmm   boolean-semiring blocked mat-mul (paper's dense repair)
+#   frontier_expand segment-min frontier expansion (sparse FW/BW sweeps)
+#   hash_probe      fused open-addressing probe sweep (edge-table lookups)
 #   flash_attention blocked online-softmax GQA attention (LM hot path)
 #   embedding_bag   one-hot-matmul embedding bag (recsys hot path)
-from repro.kernels import embedding_bag, flash_attention, reach_blockmm  # noqa: F401
+from repro.kernels import (  # noqa: F401
+    embedding_bag, flash_attention, frontier_expand, hash_probe,
+    reach_blockmm)

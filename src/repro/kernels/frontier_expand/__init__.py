@@ -1,0 +1,3 @@
+"""Pallas frontier-expansion kernel: segment-min of edge messages."""
+from repro.kernels.frontier_expand.ops import (  # noqa: F401
+    AUTO_MAX_NV, SENTINEL, frontier_min, resolve_impl)

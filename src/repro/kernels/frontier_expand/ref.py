@@ -1,0 +1,20 @@
+"""jnp oracle for the frontier-expansion segment-min.
+
+This IS the sweep the repo shipped before the kernel existed -- one
+edge-parallel scatter-min per round -- kept verbatim as the ``'xla'``
+differential baseline (and the production CPU path, where a scatter beats
+any panel sweep).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SENTINEL = 0xFFFFFFFF  # uint32 identity of the min-semiring
+
+
+def frontier_min(dst, msg, nv: int):
+    """out[f, v] = min(msg[f, e] : dst[e] == v), SENTINEL where no edge
+    lands.  dst: int32[E]; msg: uint32[F, E] -> uint32[F, NV]."""
+    f = msg.shape[0]
+    return jnp.full((f, nv), SENTINEL, jnp.uint32).at[:, dst].min(
+        msg.astype(jnp.uint32))

@@ -1,0 +1,3 @@
+"""Pallas hash-probe kernel: fused open-addressing lookup sweep."""
+from repro.kernels.hash_probe.ops import (  # noqa: F401
+    AUTO_MAX_CAP, probe, resolve_impl)

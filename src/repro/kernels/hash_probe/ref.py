@@ -1,0 +1,44 @@
+"""jnp oracle for the hash-probe kernel.
+
+A verbatim mirror of :func:`repro.core.edge_table.lookup`'s bounded probe
+walk, factored out of the table (it takes the hashed ``base`` instead of
+hashing) so the kernel suite can differential-test against it without an
+edge_table import cycle.  edge_table's own ``'xla'`` path keeps its
+original loop; equivalence of all three is asserted by
+tests/test_sparse_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EMPTY, LIVE, TOMB = 0, 1, 2
+
+
+def probe(src, dst, state, base, u, v, *, max_probes: int):
+    """(found: bool[B], slot: int32[B]) -- slot is the LIVE hit slot when
+    found, else the first EMPTY/TOMB slot seen (insertion point), else -1
+    on probe exhaustion.  Probing stops at a hit or a truly EMPTY slot."""
+    cap = src.shape[0]
+    b = u.shape[0]
+
+    def body(i, carry):
+        done, found, slot, free = carry
+        pos = (base + i) & (cap - 1)
+        st = state[pos]
+        hit = (st == LIVE) & (src[pos] == u) & (dst[pos] == v)
+        is_empty = st == EMPTY
+        is_free = st != LIVE
+        free = jnp.where((~done) & is_free & (free < 0), pos, free)
+        slot = jnp.where((~done) & hit, pos, slot)
+        found = found | ((~done) & hit)
+        done = done | hit | is_empty
+        return done, found, slot, free
+
+    done = jnp.zeros((b,), jnp.bool_)
+    found = jnp.zeros((b,), jnp.bool_)
+    slot = jnp.full((b,), -1, jnp.int32)
+    free = jnp.full((b,), -1, jnp.int32)
+    done, found, slot, free = jax.lax.fori_loop(
+        0, max_probes, body, (done, found, slot, free))
+    return found, jnp.where(found, slot, free)

@@ -1,5 +1,16 @@
-"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracle,
-swept over shapes and dtypes per the mandate."""
+"""Per-kernel correctness: Pallas vs pure-jnp oracle, swept over shapes
+and dtypes per the mandate.
+
+Every test parametrizes over ``IMPLS``: interpret mode always runs (that
+is how the Pallas dataflow is exercised in tier-1 on CPU -- nothing
+silently falls back to the oracle), and the native ``'pallas'`` impl
+joins the sweep automatically on a real TPU backend.  Only the large
+shapes carry the ``slow`` marker (pytest.ini excludes ``-m "not slow"``
+from tier-1); every kernel keeps at least one fast interpret case.
+
+The two sparse kernels (frontier_expand / hash_probe) have their own
+differential fuzz harness in tests/test_sparse_kernels.py.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,44 +21,57 @@ from repro.kernels import embedding_bag as eb
 from repro.kernels import flash_attention as fa
 from repro.kernels import reach_blockmm as rb
 
+IMPLS = ["pallas_interpret"] + (
+    ["pallas"] if jax.default_backend() == "tpu" else [])
+
+slow = pytest.mark.slow
+
 
 # ---------------------------------------------------------------- reach ---
-@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (128, 128, 128),
-                                   (64, 256, 128), (200, 130, 70)])
-def test_bool_matmul_shapes(m, k, n):
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("m,k,n", [
+    (8, 8, 8),
+    pytest.param(128, 128, 128, marks=slow),
+    pytest.param(64, 256, 128, marks=slow),
+    (200, 130, 70),
+])
+def test_bool_matmul_shapes(m, k, n, impl):
     rng = np.random.default_rng(m + k + n)
     a = jnp.asarray(rng.random((m, k)) < 0.1)
     b = jnp.asarray(rng.random((k, n)) < 0.1)
-    got = rb.bool_matmul(a, b, block=128, impl="pallas_interpret")
+    got = rb.bool_matmul(a, b, block=128, impl=impl)
     want = rb.ref.bool_matmul(a, b)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-@pytest.mark.parametrize("block", [8, 32, 128])
-def test_bool_matmul_blocks(block):
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("block", [8, 32, pytest.param(128, marks=slow)])
+def test_bool_matmul_blocks(block, impl):
     rng = np.random.default_rng(block)
     a = jnp.asarray(rng.random((96, 96)) < 0.05)
     b = jnp.asarray(rng.random((96, 96)) < 0.05)
-    got = rb.bool_matmul(a, b, block=block, impl="pallas_interpret")
+    got = rb.bool_matmul(a, b, block=block, impl=impl)
     np.testing.assert_array_equal(np.asarray(got),
                                   np.asarray(rb.ref.bool_matmul(a, b)))
 
 
-def test_frontier_step_and_closure():
+@pytest.mark.parametrize("impl", IMPLS)
+def test_frontier_step_and_closure(impl):
     rng = np.random.default_rng(0)
     n = 40
     adj = jnp.asarray(rng.random((n, n)) < 0.08)
     f = jnp.zeros((n, 4), bool).at[jnp.asarray([3, 11, 17, 29]),
                                    jnp.arange(4)].set(True)
-    got = rb.frontier_step(adj, f, block=32, impl="pallas_interpret")
+    got = rb.frontier_step(adj, f, block=32, impl=impl)
     want = rb.ref.frontier_step(adj, f)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
-    clo_k = rb.closure(adj, block=32, impl="pallas_interpret")
+    clo_k = rb.closure(adj, block=32, impl=impl)
     clo_r = rb.ref.closure(adj)
     np.testing.assert_array_equal(np.asarray(clo_k), np.asarray(clo_r))
 
 
-def test_closure_feeds_dense_scc():
+@pytest.mark.parametrize("impl", IMPLS)
+def test_closure_feeds_dense_scc(impl):
     """kernel closure plugged into scc_dense_region == its jnp fallback."""
     rng = np.random.default_rng(1)
     nv, e = 24, 70
@@ -57,7 +81,7 @@ def test_closure_feeds_dense_scc():
     region = jnp.ones((nv,), bool)
 
     def pallas_mm(a, b):
-        return rb.bool_matmul(a, b, block=32, impl="pallas_interpret")
+        return rb.bool_matmul(a, b, block=32, impl=impl)
 
     lab_k, _ = scc.scc_dense_region(src, dst, live, region, nv,
                                     matmul=pallas_mm)
@@ -66,84 +90,90 @@ def test_closure_feeds_dense_scc():
 
 
 # ----------------------------------------------------------- attention ---
+@pytest.mark.parametrize("impl", IMPLS)
 @pytest.mark.parametrize("s,d,causal,window", [
-    (64, 32, True, 0), (64, 32, False, 0), (96, 16, True, 24),
-    (130, 32, True, 0), (70, 64, True, 16),
+    (64, 32, True, 0), (64, 32, False, 0),
+    pytest.param(96, 16, True, 24, marks=slow),
+    pytest.param(130, 32, True, 0, marks=slow),
+    (70, 64, True, 16),
 ])
-def test_flash_vs_ref(s, d, causal, window):
+def test_flash_vs_ref(s, d, causal, window, impl):
     rng = np.random.default_rng(s + d)
     q = jnp.asarray(rng.normal(size=(1, 2, s, d)).astype(np.float32))
     k = jnp.asarray(rng.normal(size=(1, 2, s, d)).astype(np.float32))
     v = jnp.asarray(rng.normal(size=(1, 2, s, d)).astype(np.float32))
     got = fa.mha(q, k, v, causal=causal, window=window, bq=32, bk=32,
-                 impl="pallas_interpret")
+                 impl=impl)
     want = fa.ref.mha(q, k, v, causal=causal, window=window)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
 
 
-def test_flash_gqa_grouping():
+@pytest.mark.parametrize("impl", IMPLS)
+def test_flash_gqa_grouping(impl):
     rng = np.random.default_rng(7)
     q = jnp.asarray(rng.normal(size=(2, 4, 64, 16)).astype(np.float32))
     k = jnp.asarray(rng.normal(size=(2, 2, 64, 16)).astype(np.float32))
     v = jnp.asarray(rng.normal(size=(2, 2, 64, 16)).astype(np.float32))
-    got = fa.mha(q, k, v, causal=True, bq=32, bk=32,
-                 impl="pallas_interpret")
+    got = fa.mha(q, k, v, causal=True, bq=32, bk=32, impl=impl)
     want = fa.ref.mha(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
 
 
-def test_flash_bf16():
+@pytest.mark.parametrize("impl", IMPLS)
+def test_flash_bf16(impl):
     rng = np.random.default_rng(9)
     mk = lambda: jnp.asarray(
         rng.normal(size=(1, 1, 64, 32)).astype(np.float32)).astype(
             jnp.bfloat16)
     q, k, v = mk(), mk(), mk()
-    got = fa.mha(q, k, v, causal=True, bq=32, bk=32,
-                 impl="pallas_interpret")
+    got = fa.mha(q, k, v, causal=True, bq=32, bk=32, impl=impl)
     want = fa.ref.mha(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                rtol=3e-2, atol=3e-2)
 
 
-def test_flash_fully_masked_rows_finite():
+@pytest.mark.parametrize("impl", IMPLS)
+def test_flash_fully_masked_rows_finite(impl):
     """window smaller than block -> early rows see few keys; no NaNs."""
     q = jnp.ones((1, 1, 64, 16), jnp.float32)
     k = jnp.ones((1, 1, 64, 16), jnp.float32)
     v = jnp.ones((1, 1, 64, 16), jnp.float32)
-    out = fa.mha(q, k, v, causal=True, window=4, bq=32, bk=32,
-                 impl="pallas_interpret")
+    out = fa.mha(q, k, v, causal=True, window=4, bq=32, bk=32, impl=impl)
     assert np.isfinite(np.asarray(out)).all()
 
 
 # -------------------------------------------------------- embedding bag ---
-@pytest.mark.parametrize("b,l,v,d", [(4, 6, 50, 16), (16, 32, 300, 64),
-                                     (3, 5, 129, 8)])
-def test_embedding_bag_vs_ref(b, l, v, d):
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("b,l,v,d", [
+    (4, 6, 50, 16),
+    pytest.param(16, 32, 300, 64, marks=slow),
+    (3, 5, 129, 8),
+])
+def test_embedding_bag_vs_ref(b, l, v, d, impl):
     rng = np.random.default_rng(b * l)
     table = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
     ids = jnp.asarray(rng.integers(-1, v, (b, l)), jnp.int32)
-    got = eb.embedding_bag(table, ids, bb=4, bv=64,
-                           impl="pallas_interpret")
+    got = eb.embedding_bag(table, ids, bb=4, bv=64, impl=impl)
     want = eb.ref.embedding_bag(table, ids)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
 
 
-def test_embedding_bag_weighted_and_mean():
+@pytest.mark.parametrize("impl", IMPLS)
+def test_embedding_bag_weighted_and_mean(impl):
     rng = np.random.default_rng(3)
     table = jnp.asarray(rng.normal(size=(40, 8)).astype(np.float32))
     ids = jnp.asarray(rng.integers(-1, 40, (5, 7)), jnp.int32)
     w = jnp.asarray(rng.random((5, 7)).astype(np.float32))
-    got = eb.embedding_bag(table, ids, weights=w, bb=4, bv=32,
-                           impl="pallas_interpret")
+    got = eb.embedding_bag(table, ids, weights=w, bb=4, bv=32, impl=impl)
     want = eb.ref.embedding_bag(table, ids, weights=w)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
     got_m = eb.embedding_bag(table, ids, mode="mean", bb=4, bv=32,
-                             impl="pallas_interpret")
+                             impl=impl)
     want_m = eb.ref.embedding_bag(table, ids, mode="mean")
     np.testing.assert_allclose(np.asarray(got_m), np.asarray(want_m),
                                rtol=1e-5, atol=1e-5)
