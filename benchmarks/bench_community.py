@@ -19,7 +19,7 @@ from repro.api import CommunityOf, CommunitySizes, GraphClient, SameSCC, \
     updates_from_arrays
 from repro.core.broker import QueryBroker
 from repro.core.service import SCCService
-from repro.data import pipeline
+from repro.launch import workload
 from benchmarks import common
 
 
@@ -38,7 +38,7 @@ def run(nv=2048, batches=(64, 256, 1024, 4096), iters=3, quick=False):
               zip(rng.integers(0, nv, n_same), rng.integers(0, nv, n_same))]
         qs += [CommunityOf(int(a)) for a in rng.integers(0, nv, n_comm)]
         qs += [CommunitySizes()]
-        ops = pipeline.op_stream(nv, max(u, 1), step=2, add_frac=0.5)
+        ops = workload.op_stream(nv, max(u, 1), step=2, add_frac=0.5)
         typed_u = updates_from_arrays(ops.kind, ops.u, ops.v)
 
         svc = SCCService(cfg, buckets=(max(u, 1),), state=state0)

@@ -8,7 +8,7 @@ from __future__ import annotations
 import argparse
 
 from repro.core import baselines, dynamic
-from repro.data import pipeline
+from repro.launch import workload
 from benchmarks import common
 
 
@@ -20,13 +20,13 @@ def run(nv=2048, batches=(16, 64, 256, 1024), seq_ops=64, iters=3,
     rows = []
     for name, fn in (("seq", baselines.sequential_apply),
                      ("coarse", baselines.coarse_apply)):
-        ops = pipeline.op_stream(nv, seq_ops, step=0, add_frac=1.0)
+        ops = workload.op_stream(nv, seq_ops, step=0, add_frac=1.0)
         t, _ = common.time_fn(lambda o: fn(state0, o, cfg), ops,
                               iters=iters)
         rows.append(("incremental", name, seq_ops,
                      round(seq_ops / t, 1), round(t * 1e3, 2)))
     for b in batches:
-        ops = pipeline.op_stream(nv, b, step=1, add_frac=1.0)
+        ops = workload.op_stream(nv, b, step=1, add_frac=1.0)
         t, _ = common.time_fn(
             lambda o: dynamic.apply_batch(state0, o, cfg), ops,
             iters=iters)

@@ -16,7 +16,7 @@ import jax
 import numpy as np
 
 from repro.core import dynamic, graph_state as gs
-from repro.data import pipeline
+from repro.launch import workload
 from benchmarks import common
 
 
@@ -29,7 +29,7 @@ def run(quick=False):
     ring = np.arange(nv)
     st = gs.from_arrays(cfg, ring, (ring + 1) % nv)
     st = dynamic.recompute(st, cfg)
-    ops = pipeline.op_stream(nv, 256, step=0, add_frac=0.5)
+    ops = workload.op_stream(nv, 256, step=0, add_frac=0.5)
     t_local, _ = common.time_fn(
         lambda: dynamic.apply_batch(st, ops, cfg), iters=3)
     t_full, _ = common.time_fn(lambda: dynamic.recompute(st, cfg), iters=3)

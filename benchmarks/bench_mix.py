@@ -21,7 +21,7 @@ import argparse
 from repro.api import GraphClient, updates_from_arrays
 from repro.core import baselines, dynamic
 from repro.core.service import SCCService
-from repro.data import pipeline
+from repro.launch import workload
 from benchmarks import common
 
 
@@ -36,7 +36,7 @@ def run(mix=50, nv=2048, batches=(16, 64, 256, 1024), seq_ops=64,
     # baselines: per-op application of a seq_ops-long stream
     for name, fn in (("seq", baselines.sequential_apply),
                      ("coarse", baselines.coarse_apply)):
-        ops = pipeline.op_stream(nv, seq_ops, step=0, add_frac=add_frac,
+        ops = workload.op_stream(nv, seq_ops, step=0, add_frac=add_frac,
                                  include_vertex_ops=include_vertex_ops)
         t, _ = common.time_fn(lambda o: fn(state0, o, cfg), ops,
                               iters=iters)
@@ -45,7 +45,7 @@ def run(mix=50, nv=2048, batches=(16, 64, 256, 1024), seq_ops=64,
 
     # SMSCC batched
     for b in batches:
-        ops = pipeline.op_stream(nv, b, step=1, add_frac=add_frac,
+        ops = workload.op_stream(nv, b, step=1, add_frac=add_frac,
                                  include_vertex_ops=include_vertex_ops)
         t, _ = common.time_fn(
             lambda o: dynamic.apply_batch(state0, o, cfg), ops,
@@ -57,7 +57,7 @@ def run(mix=50, nv=2048, batches=(16, 64, 256, 1024), seq_ops=64,
     # session (sustained-service semantics, so repeated timing iterations
     # legitimately mutate the service)
     for b in batches:
-        ops = pipeline.op_stream(nv, b, step=1, add_frac=add_frac,
+        ops = workload.op_stream(nv, b, step=1, add_frac=add_frac,
                                  include_vertex_ops=include_vertex_ops)
         typed = updates_from_arrays(ops.kind, ops.u, ops.v)
         svc = SCCService(cfg, buckets=(b,), state=state0)

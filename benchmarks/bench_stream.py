@@ -305,7 +305,7 @@ def run_client_overhead(nv=4096, edge_capacity=4096, n_ops=8192,
     noise)."""
     from repro.api import GraphClient, SameSCC
     from repro.core.broker import QueryBroker
-    from repro.data import pipeline
+    from repro.launch import workload
 
     smscc = configs.get("smscc")
 
@@ -317,7 +317,7 @@ def run_client_overhead(nv=4096, edge_capacity=4096, n_ops=8192,
     n_chunks = n_ops // chunk
     raw, typed, qpairs, typed_q = [], [], [], []
     for step in range(n_chunks):
-        ops = pipeline.op_stream(nv, chunk, step=step, add_frac=0.5,
+        ops = workload.op_stream(nv, chunk, step=step, add_frac=0.5,
                                  seed=seed)
         arrs = (np.asarray(ops.kind), np.asarray(ops.u),
                 np.asarray(ops.v))
@@ -550,6 +550,139 @@ def run_replicas(counts=(1, 2), min_scaling=1.5, **stream_kw):
     return rows, report
 
 
+def run_tenancy(n_tenants=6, steps=20, nv=256, chunk=16,
+                min_speedup=2.0):
+    """Multi-tenant section (PR-8): the same N per-tenant workloads
+    driven once through N *sequential* single-tenant
+    :class:`SCCService` instances and once through ONE
+    :class:`repro.tenancy.MultiTenantService` (vmapped
+    :class:`~repro.tenancy.engine.TenantEngine` behind the admission
+    :class:`~repro.tenancy.queue.WorkQueue`, one submitter thread per
+    tenant).
+
+    The multi-tenant path coalesces the T tenants' same-shape chunks
+    into one vmapped dispatch and pays ONE host sync per wave (ok/ovf
+    refs + fill-stats ride the same transfer), where the sequential
+    baseline pays per chunk: a dispatch, the commit-gen sync, and the
+    compaction-probe fill-stats sync.  Sized for the many-small-tenants
+    serving regime (small per-tenant chunks) where that fixed per-chunk
+    cost dominates the sequential path.  Asserts aggregate multi-tenant
+    ops/s >= ``min_speedup`` x the sequential baseline, the engine's
+    compiled-entry registry stayed under its
+    ``(tenant_batches x scan_lengths x buckets x cfgs)`` bound, and the
+    final per-tenant labellings are **bit-identical** between the two
+    paths (tenancy is an execution strategy, not a semantics change).
+
+    Reports per-tenant p50/p95 submit->resolve latency (the serving-
+    fairness axis), queue depth / flush causes / pool hit rate, and
+    stacked-lane occupancy."""
+    import threading
+
+    from repro.launch import workload
+    from repro.tenancy import MultiTenantService
+
+    mod = configs.get("smscc")
+    cfg = mod.config(n_vertices=nv, edge_capacity=max(nv, 256),
+                     max_probes=64, max_outer=64, max_inner=64)
+    buckets = (chunk,)
+
+    def chunks_for(i):
+        out = []
+        for step in range(steps):
+            ops = workload.op_stream(
+                nv, chunk, step=step,
+                add_frac=1.0 if step == 0 else 0.7, seed=1000 + i)
+            out.append((np.asarray(ops.kind, np.int32),
+                        np.asarray(ops.u, np.int32),
+                        np.asarray(ops.v, np.int32)))
+        return out
+
+    workloads = [chunks_for(i) for i in range(n_tenants)]
+    timed_ops = n_tenants * (steps - 1) * chunk
+
+    # --- sequential baseline: N independent single-tenant services ----
+    seq = [SCCService(cfg, buckets=buckets, scan_lengths=SCAN_LENGTHS)
+           for _ in range(n_tenants)]
+    for svc, wl in zip(seq, workloads):     # warm the jit caches
+        svc._apply_chunk(*wl[0])
+    t0 = time.perf_counter()
+    for svc, wl in zip(seq, workloads):
+        for k, u, v in wl[1:]:
+            svc._apply_chunk(k, u, v)
+    seq_wall = time.perf_counter() - t0
+
+    # --- multi-tenant: one engine + queue, a submitter per tenant -----
+    mts = MultiTenantService(cfg, buckets=buckets,
+                             scan_lengths=SCAN_LENGTHS,
+                             tenant_batches=(1, 2, n_tenants),
+                             coalesce_ops=n_tenants * chunk,
+                             flush_deadline_s=0.01)
+    tids = [mts.create_tenant() for _ in range(n_tenants)]
+    sessions = [mts.session(tid) for tid in tids]
+
+    def drive_one(sess, wl, lo, hi):
+        for k, u, v in wl[lo:hi]:
+            sess._apply_ops(k, u, v)
+
+    def fan_out(lo, hi):
+        ts = [threading.Thread(target=drive_one, args=(s, w, lo, hi))
+              for s, w in zip(sessions, workloads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+
+    fan_out(0, 1)                           # warm the vmapped entries
+    t0 = time.perf_counter()
+    fan_out(1, steps)
+    multi_wall = time.perf_counter() - t0
+
+    # bit-identity: the vmapped/coalesced path is an execution strategy,
+    # not a semantics change
+    for svc, sess, tid in zip(seq, sessions, tids):
+        assert int(sess.gen) == int(svc.gen), \
+            f"tenant {tid}: gen {int(sess.gen)} != oracle {int(svc.gen)}"
+        assert np.array_equal(np.asarray(sess.state.ccid),
+                              np.asarray(svc.state.ccid)), \
+            f"tenant {tid}: labelling diverged from single-tenant oracle"
+
+    agg = mts.stats()
+    eng, q = agg["engine"], agg["queue"]
+    assert eng["compile_count"] <= eng["compile_bound"], (
+        f"tenant-entry compile bound violated: {eng['compile_count']} > "
+        f"{eng['compile_bound']}")
+    seq_rate = round(timed_ops / seq_wall, 1)
+    multi_rate = round(timed_ops / multi_wall, 1)
+    speedup = round(seq_wall / multi_wall, 3)
+    assert speedup >= min_speedup, (
+        f"multi-tenant coalescing too weak: {n_tenants} tenants gave "
+        f"only {speedup}x the sequential baseline ({multi_rate} vs "
+        f"{seq_rate} ops/s); floor is {min_speedup}x")
+    rows = [("sequential_x%d" % n_tenants, timed_ops, seq_rate,
+             round(seq_wall, 3), 1.0),
+            ("multi_tenant_x%d" % n_tenants, timed_ops, multi_rate,
+             round(multi_wall, 3), speedup)]
+    per_tenant = []
+    for tid in tids:
+        ts = mts.tenant_stats(tid)
+        per_tenant.append({"tid": tid, "gen": ts["gen"],
+                           "fallback_chunks": ts["fallback_chunks"],
+                           "p50_s": ts["p50_s"], "p95_s": ts["p95_s"]})
+    report = {"tenants": n_tenants, "steps": steps, "chunk": chunk,
+              "ops": timed_ops,
+              "seq_ops_per_s": seq_rate, "multi_ops_per_s": multi_rate,
+              "speedup": speedup, "floor": min_speedup,
+              "compile_count": eng["compile_count"],
+              "compile_bound": eng["compile_bound"],
+              "occupancy": eng["occupancy"],
+              "queue": {k: q[k] for k in
+                        ("depth_max_ops", "waves", "rejects",
+                         "flush_causes", "pool")},
+              "per_tenant": per_tenant}
+    mts.close()
+    return rows, report
+
+
 HEADER = ["mix", "ops", "ops_per_s", "queries", "queries_per_s",
           "combined_per_s", "compiled_shapes", "grows", "compactions",
           "final_capacity", "steady_ops", "repair_skipped_steps",
@@ -562,6 +695,7 @@ REPAIR_HEADER = ["tier", "steps", "tiered_median_ms",
 REPLICA_HEADER = ["mode", "ops", "ops_per_s", "queries", "queries_per_s",
                   "combined_per_s", "replicas", "routed_stale",
                   "gen_waits"]
+TENANCY_HEADER = ["mode", "ops", "ops_per_s", "wall_s", "speedup"]
 
 
 def _dicts(rows, header):
@@ -646,6 +780,8 @@ def main():
                                               edge_capacity=2 ** 14,
                                               steps=36)
         replicas, replicas_rep = run_replicas()
+        tenancy, tenancy_rep = run_tenancy(n_tenants=6, steps=16,
+                                           nv=256, chunk=16)
     elif args.full:
         buckets = (1024, 4096)
         # chunk = 4 x the large bucket: the mixes run K=4 super-chunks
@@ -664,6 +800,8 @@ def main():
                                               steps=60, touched_cycles=4)
         replicas, replicas_rep = run_replicas(counts=(1, 2, 3),
                                               n_ops=1920, nv=2048)
+        tenancy, tenancy_rep = run_tenancy(n_tenants=6, steps=48,
+                                           nv=512, chunk=16)
     else:
         buckets = (128, 512)
         nv_used, cap_used = 4096, 4096
@@ -672,6 +810,8 @@ def main():
         overhead, overhead_frac = run_client_overhead(buckets=buckets)
         repair, repair_rep = run_repair_tiers()
         replicas, replicas_rep = run_replicas(counts=(1, 2, 3))
+        tenancy, tenancy_rep = run_tenancy(n_tenants=6, steps=24,
+                                           nv=512, chunk=16)
     common.emit(rows, HEADER)
     common.emit(overlap, OVERLAP_HEADER)
     common.emit(overhead, OVERHEAD_HEADER)
@@ -681,6 +821,11 @@ def main():
     print(f"replica scaling: {replicas_rep['scaling']}x at "
           f"{replicas_rep['counts'][-1]} vs {replicas_rep['counts'][0]} "
           f"replicas (floor {replicas_rep['floor']}x)")
+    common.emit(tenancy, TENANCY_HEADER)
+    print(f"tenancy speedup: {tenancy_rep['speedup']}x aggregate over "
+          f"{tenancy_rep['tenants']} sequential single-tenant services "
+          f"(floor {tenancy_rep['floor']}x, compile "
+          f"{tenancy_rep['compile_count']}/{tenancy_rep['compile_bound']})")
     if args.json:
         mode = "smoke" if args.smoke else "full" if args.full else "default"
         report = {
@@ -698,6 +843,7 @@ def main():
             },
             "repair_tiers": repair_rep,
             "replicas": replicas_rep,
+            "tenancy": tenancy_rep,
             "kernel_impl": _kernel_impl_info(nv_used, cap_used),
         }
         append_report(args.json, report)

@@ -125,7 +125,7 @@ def cpu_wall_time(overrides, nv=2 ** 14, ec=2 ** 16, batch=2048, iters=3,
     import numpy as np
     import time
     from repro.core import dynamic, graph_state as gs
-    from repro.data import pipeline
+    from repro.launch import workload
 
     deep = topology == "ring"
     cfg = gs.GraphConfig(n_vertices=nv, edge_capacity=ec, max_probes=128,
@@ -146,7 +146,7 @@ def cpu_wall_time(overrides, nv=2 ** 14, ec=2 ** 16, batch=2048, iters=3,
         state = gs.from_arrays(cfg, rng.integers(0, nv, nv * 4),
                                rng.integers(0, nv, nv * 4))
     state = dynamic.recompute(state, cfg)
-    ops = pipeline.op_stream(nv, batch, step=1, add_frac=0.5)
+    ops = workload.op_stream(nv, batch, step=1, add_frac=0.5)
     out = dynamic.apply_batch(state, ops, cfg)   # compile + warm
     jax.block_until_ready(out)
     ts = []

@@ -83,9 +83,10 @@ if bad:
 PYEOF
 
 echo "== api gate: no raw engine call sites outside src/repro/core =="
-# the typed repro.api.GraphClient is the only public surface: raw
-# (kind, u, v) .apply( chunks and string-kind broker submit( calls must
-# not reappear in drivers, examples, or benchmarks
+# the typed repro.api.GraphClient is the only public surface: the old
+# SCCService.apply shim is gone, and raw (kind, u, v) .apply( chunks or
+# string-kind broker submit( calls must not reappear in drivers,
+# examples, or benchmarks (internal layers/tests use _apply_chunk)
 if grep -rnE '\.apply\(' examples benchmarks src/repro/launch --include='*.py'; then
     echo "legacy raw .apply( call site found -- use repro.api.GraphClient" >&2
     exit 1
@@ -130,9 +131,9 @@ fi
 if [[ "${1:-}" != "--fast" ]]; then
     echo "== stream service smoke (grow-and-replay + mixes + gate/scan + overlap + repair tiers) =="
     # appends one labelled run to the perf trajectory (BENCH_LABEL env
-    # var names the point; defaults to the mode)
+    # var names the point; defaults to this PR's label)
     python -m benchmarks.bench_stream --smoke --json BENCH_stream.json \
-        ${BENCH_LABEL:+--label "$BENCH_LABEL"}
+        --label "${BENCH_LABEL:-pr8-multi-tenant}"
     echo "== perf-trajectory gates (BENCH_stream.json, newest run) =="
     python - <<'PYEOF'
 import json
@@ -211,6 +212,24 @@ rs = rep["replicas"]
 assert rs["scaling"] >= 1.5, (
     f"replica scaling regressed: {rs['counts'][-1]} replicas gave only "
     f"{rs['scaling']}x the combined ops/s of {rs['counts'][0]} (floor 1.5x)")
+# multi-tenant gates (PR 8): N tenants through the shared vmapped engine
+# must beat N sequential single-tenant services by >= 2x in the
+# many-small-tenants regime, every tenant must stay inside the asserted
+# compiled-entry registry bound, and the run must carry the admission
+# telemetry (queue depth/rejects/flush causes + per-tenant lines) so
+# trajectory points can be triaged without re-running
+tn = rep["tenancy"]
+assert tn["speedup"] >= 2.0, (
+    f"multi-tenant coalescing regressed: {tn['tenants']} tenants gave "
+    f"only {tn['speedup']}x the sequential baseline (floor 2.0x)")
+assert tn["compile_count"] <= tn["compile_bound"], (
+    f"tenant engine minted {tn['compile_count']} compiled entries, over "
+    f"the {tn['compile_bound']} registry bound")
+assert tn["queue"]["waves"] > 0 and "rejects" in tn["queue"] and \
+    tn["queue"]["flush_causes"], "tenancy run is missing queue telemetry"
+assert len(tn["per_tenant"]) == tn["tenants"] and all(
+    "gen" in row and "fallback_chunks" in row for row in tn["per_tenant"]), (
+    "tenancy run is missing per-tenant telemetry")
 print("perf-trajectory gates OK:",
       f"update-heavy {uh['combined_per_s']} ops/s "
       f"({uh['combined_per_s'] / 154:.1f}x the PR-4 baseline),",
@@ -222,7 +241,9 @@ print("perf-trajectory gates OK:",
       f"overlap {overlap_ratio:.2f}x,",
       f"replica scaling {rs['scaling']}x,",
       f"compact median {compact_med * 1e3:.2f}ms,",
-      f"sparse impl {rep['kernel_impl']['frontier_expand']}")
+      f"sparse impl {rep['kernel_impl']['frontier_expand']},",
+      f"tenancy {tn['speedup']}x @ {tn['tenants']} tenants "
+      f"({tn['compile_count']}/{tn['compile_bound']} compiled entries)")
 PYEOF
     echo "== documented serving entry point (examples/dynamic_scc_serving.py --smoke) =="
     python examples/dynamic_scc_serving.py --smoke

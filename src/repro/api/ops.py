@@ -163,7 +163,7 @@ def updates_from_arrays(kind, u, v) -> List[UpdateOp]:
     """Decode a legacy ``(kind, u, v)`` stream into typed update ops.
 
     The migration bridge for array-native generators
-    (:func:`repro.data.pipeline.op_stream`): NOP lanes are dropped, every
+    (:func:`repro.launch.workload.op_stream`): NOP lanes are dropped, every
     other lane becomes its dataclass.
     """
     kind = np.asarray(kind)

@@ -1,4 +1,7 @@
-"""gemma3-12b [hf:google/gemma-3-12b-pt]: 48L d_model=3840 16H (GQA kv=8)
+"""LEGACY (seed-era LM arch config): unused by the SMSCC serving reproduction;
+kept for the seed's shape tests.  Do not extend.
+
+gemma3-12b [hf:google/gemma-3-12b-pt]: 48L d_model=3840 16H (GQA kv=8)
 head_dim=256 d_ff=15360 vocab=262144, 5:1 local:global attention
 (local window 1024), 128k-class context -- the hybrid pattern makes
 long_500k decode legal (only 8 global layers carry the full-length KV).

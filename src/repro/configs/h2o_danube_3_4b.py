@@ -1,4 +1,7 @@
-"""h2o-danube-3-4b [arXiv:2401.16818]: 24L d_model=3840 32H (GQA kv=8)
+"""LEGACY (seed-era LM arch config): unused by the SMSCC serving reproduction;
+kept for the seed's shape tests.  Do not extend.
+
+h2o-danube-3-4b [arXiv:2401.16818]: 24L d_model=3840 32H (GQA kv=8)
 d_ff=10240 vocab=32000, llama+mistral mix with sliding-window attention
 (window 4096, all layers) -- the bounded KV makes long_500k decode legal.
 """

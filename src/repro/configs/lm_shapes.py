@@ -1,4 +1,7 @@
-"""The four assigned LM input shapes (shared across the 5 LM archs)."""
+"""LEGACY (seed-era LM arch config): unused by the SMSCC serving reproduction;
+kept for the seed's shape tests.  Do not extend.
+
+The four assigned LM input shapes (shared across the 5 LM archs)."""
 
 TRAIN_4K = dict(kind="train", seq=4096, global_batch=256)
 PREFILL_32K = dict(kind="prefill", seq=32768, global_batch=32)

@@ -1,4 +1,7 @@
-"""moonshot-v1-16b-a3b [hf:moonshotai/Moonlight-16B-A3B]:
+"""LEGACY (seed-era LM arch config): unused by the SMSCC serving reproduction;
+kept for the seed's shape tests.  Do not extend.
+
+moonshot-v1-16b-a3b [hf:moonshotai/Moonlight-16B-A3B]:
 48L d_model=2048 16H (GQA kv=16) expert d_ff=1408 vocab=163840,
 MoE 64 experts top-6 (+2 shared experts, Moonlight's DeepSeek-style
 layout; we run all layers MoE for scan homogeneity -- noted DESIGN.md §6).

@@ -1,4 +1,7 @@
-"""qwen3-14b [hf:Qwen/Qwen3-14B]: 40L d_model=5120 40H (GQA kv=8)
+"""LEGACY (seed-era LM arch config): unused by the SMSCC serving reproduction;
+kept for the seed's shape tests.  Do not extend.
+
+qwen3-14b [hf:Qwen/Qwen3-14B]: 40L d_model=5120 40H (GQA kv=8)
 d_ff=17408 vocab=151936, qk-norm, full attention."""
 import jax.numpy as jnp
 

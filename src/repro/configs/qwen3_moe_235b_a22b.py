@@ -1,4 +1,7 @@
-"""qwen3-moe-235b-a22b [hf:Qwen/Qwen3-235B-A22B family]:
+"""LEGACY (seed-era LM arch config): unused by the SMSCC serving reproduction;
+kept for the seed's shape tests.  Do not extend.
+
+qwen3-moe-235b-a22b [hf:Qwen/Qwen3-235B-A22B family]:
 94L d_model=4096 64H (GQA kv=4) expert d_ff=1536 vocab=151936,
 MoE 128 experts top-8, qk-norm (qwen3 family trait).
 """

@@ -285,16 +285,6 @@ class SCCService:
 
     # ---------------------------------------------------------- updates ---
 
-    def apply(self, kind, u, v) -> np.ndarray:
-        """Deprecated raw entry point -- prefer
-        :class:`repro.api.GraphClient` (typed ops, consistency levels).
-
-        Kept as a shim for the internal layer and its tests; the CI gate
-        (``scripts/ci.sh``) rejects ``.apply(`` call sites in examples,
-        benchmarks, and the launch layer.
-        """
-        return self._apply_chunk(kind, u, v)
-
     def _apply_ops(self, kind, u, v):
         """GraphClient entry: apply a chunk and report the commit gen it
         is covered by, atomically w.r.t. concurrent client sessions."""

@@ -193,21 +193,14 @@ def mind_batch(n_items: int, batch: int, seq_len: int, profile_vocab: int,
 def op_stream(n_vertices: int, batch: int, step: int, add_frac: float,
               info: ShardInfo = ShardInfo(), seed: int = 0,
               include_vertex_ops: bool = True):
-    """Paper workload generator: mixed Add/Remove (V+E) batches.
+    """Deprecated alias: moved to :func:`repro.launch.workload.op_stream`.
 
-    add_frac = fraction of insert ops (paper Fig 4: 0.5 / 0.9 / 0.1).
+    The paper workload generator lives with the serving stack now; this
+    stub keeps old imports working bit-for-bit (same (seed, step, shard)
+    stream) and will be removed with the rest of the legacy data package.
     """
-    from repro.core import dynamic
-    b_local = batch // info.n_shards
-    rng = _rng(seed, step, info.shard)
-    is_add = rng.random(b_local) < add_frac
-    is_vertex = (rng.random(b_local) < 0.2) if include_vertex_ops \
-        else np.zeros(b_local, bool)
-    kind = np.where(is_add,
-                    np.where(is_vertex, dynamic.ADD_VERTEX,
-                             dynamic.ADD_EDGE),
-                    np.where(is_vertex, dynamic.REM_VERTEX,
-                             dynamic.REM_EDGE))
-    u = rng.integers(0, n_vertices, b_local)
-    v = rng.integers(0, n_vertices, b_local)
-    return dynamic.make_ops(kind, u, v)
+    from repro.launch import workload
+    return workload.op_stream(
+        n_vertices, batch, step, add_frac,
+        info=workload.ShardInfo(info.shard, info.n_shards), seed=seed,
+        include_vertex_ops=include_vertex_ops)

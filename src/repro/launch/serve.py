@@ -122,6 +122,77 @@ def serve_smscc(mod, steps: int, nv: int = 2048, chunk: int = 256,
         f"{k}={rep[k]}" for k in tele if k in rep))
 
 
+def serve_tenants(mod, steps: int, tenants: int, nv: int = 256,
+                  chunk: int = 64, directory: str | None = None):
+    """Multi-tenant serving: N independent session graphs behind ONE
+    vmapped engine and one admission queue
+    (:class:`repro.tenancy.MultiTenantService`).  Each tenant runs its
+    own typed ``GraphClient`` session on its own thread; concurrent
+    submits coalesce into tenant-batched vmapped dispatches.  With
+    ``directory`` the store is durable per tenant (snapshot + WAL) and
+    idle tenants are evicted/rehydrated transparently."""
+    import threading
+
+    from repro.api import SameSCC
+    from repro.launch import stream
+    from repro.tenancy import MultiTenantService
+
+    cfg = mod.config(n_vertices=nv, edge_capacity=max(256, nv),
+                     max_probes=64, max_outer=64, max_inner=64)
+    mts = MultiTenantService(cfg, buckets=(chunk,),
+                             scan_lengths=mod.SCAN_LENGTHS,
+                             directory=directory,
+                             coalesce_ops=tenants * chunk,
+                             flush_deadline_s=0.005)
+    tids = [mts.create_tenant() for _ in range(tenants)]
+    done = []
+
+    def drive(tid, i):
+        client = mts.client(tid)
+        rng = np.random.default_rng(100 + i)
+        n_ops = 0
+        client.submit_many(stream.typed_op_stream(
+            nv, chunk, step=0, add_frac=1.0, seed=i,
+            include_vertex_ops=True))
+        for step in range(steps):
+            client.submit_many(stream.typed_op_stream(
+                nv, chunk, step=step + 1, add_frac=0.7, seed=i))
+            n_ops += chunk
+            qs = [SameSCC(int(a), int(b)) for a, b in
+                  zip(rng.integers(0, nv, 16), rng.integers(0, nv, 16))]
+            client.submit_many(qs)
+        client.close()
+        done.append(n_ops)
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=drive, args=(tid, i))
+               for i, tid in enumerate(tids)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    total = sum(done)
+    agg = mts.stats()
+    print(f"served {tenants} tenants x {steps} chunks "
+          f"({total} update ops) in {wall:.2f}s "
+          f"({int(total / wall)} ops/s aggregate)")
+    q = agg["queue"]
+    print(f"[queue] waves={q['waves']} causes={q['flush_causes']} "
+          f"depth_max={q['depth_max_ops']} rejects={q['rejects']} "
+          f"pool={q['pool']}")
+    e = agg["engine"]
+    print(f"[engine] compile_count={e['compile_count']} "
+          f"(bound {e['compile_bound']}) solo_replays={e['solo_replays']} "
+          f"occupancy={e['occupancy']['frac']}")
+    for tid in tids[:4]:
+        print(f"[tenant {tid}] " + " | ".join(
+            f"{k}={v}" for k, v in mts.tenant_stats(tid).items()
+            if k in ("gen", "applied_chunks", "fallback_chunks", "grows",
+                     "p50_s", "p95_s")))
+    mts.close()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-12b")
@@ -132,8 +203,12 @@ def main():
     ap.add_argument("--replicas", type=int, default=0,
                     help="smscc only: serve reads from N WAL-tailing "
                          "replicas over a durable writer (needs --dir)")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="smscc only: serve N independent tenant graphs "
+                         "behind one vmapped engine + admission queue")
     ap.add_argument("--dir", dest="directory", default=None,
-                    help="smscc only: durable store root for --replicas")
+                    help="smscc only: durable store root for --replicas "
+                         "/ per-tenant stores for --tenants")
     args = ap.parse_args()
     mod = configs.get(args.arch)
     if mod.FAMILY == "lm":
@@ -141,8 +216,12 @@ def main():
     elif mod.FAMILY == "recsys":
         serve_mind(mod, args.steps)
     elif mod.FAMILY == "smscc":
-        serve_smscc(mod, args.steps, readers=args.readers,
-                    replicas=args.replicas, directory=args.directory)
+        if args.tenants > 0:
+            serve_tenants(mod, args.steps, args.tenants,
+                          directory=args.directory)
+        else:
+            serve_smscc(mod, args.steps, readers=args.readers,
+                        replicas=args.replicas, directory=args.directory)
     else:
         raise SystemExit(f"no serve path for family {mod.FAMILY}")
 

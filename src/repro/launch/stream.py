@@ -123,9 +123,9 @@ def typed_op_stream(nv: int, n: int, *, step: int, add_frac: float,
                     seed: int = 0, include_vertex_ops: bool = True):
     """One deterministic chunk of typed update ops (paper workload mix)."""
     from repro.api import updates_from_arrays
-    from repro.data import pipeline
+    from repro.launch import workload
 
-    ops = pipeline.op_stream(nv, n, step=step, add_frac=add_frac,
+    ops = workload.op_stream(nv, n, step=step, add_frac=add_frac,
                              seed=seed,
                              include_vertex_ops=include_vertex_ops)
     return updates_from_arrays(np.asarray(ops.kind), np.asarray(ops.u),

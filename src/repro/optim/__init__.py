@@ -1,1 +1,6 @@
+"""LEGACY (seed-era training stack): unused by the SMSCC serving paper
+reproduction.  Kept only so seed tests/examples keep importing; do not
+extend -- the live system is repro.core / repro.api / repro.tenancy /
+repro.launch.  See README "Legacy seed code".
+"""
 from repro.optim import compression, optimizer  # noqa: F401

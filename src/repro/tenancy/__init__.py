@@ -1,0 +1,26 @@
+"""Multi-tenant graph serving: many per-tenant graphs behind one vmapped
+engine and one admission queue.
+
+Layers (see ``docs/ARCHITECTURE.md``):
+
+* :mod:`repro.tenancy.engine` -- :class:`TenantEngine`: per-tenant
+  ``GraphState`` lanes stacked per capacity class, the fused 5-phase
+  scan step vmapped over the tenant axis, per-lane overflow isolation
+  with solo grow-and-replay, and the ``(tenant_batch, scan_len,
+  bucket)``-keyed compiled-entry registry with an asserted bound.
+* :mod:`repro.tenancy.queue` -- :class:`WorkQueue` (bounded admission,
+  deadline/size-triggered cross-tenant coalescing, reject-with-
+  retry-after backpressure) and :class:`TransferBufferPool` (pooled
+  host buffers: steady-state submits allocate nothing).
+* :mod:`repro.tenancy.multi_service` -- :class:`MultiTenantService`:
+  per-tenant :class:`repro.api.GraphClient` sessions over the unchanged
+  typed API, per-tenant generation counters / stats / durability (WAL +
+  snapshots per tenant), and idle-tenant eviction with bit-identical
+  WAL rehydration.
+"""
+from repro.tenancy.engine import TenantEngine
+from repro.tenancy.multi_service import MultiTenantService
+from repro.tenancy.queue import QueueFull, TransferBufferPool, WorkQueue
+
+__all__ = ["TenantEngine", "MultiTenantService", "WorkQueue",
+           "TransferBufferPool", "QueueFull"]

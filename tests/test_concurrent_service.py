@@ -35,7 +35,7 @@ def tiny_cfg(edge_capacity=32, max_probes=4, nv=NV):
 
 
 def boot(svc: SCCService, oracle: SeqSCC | None = None, n=NV):
-    ok = svc.apply([dynamic.ADD_VERTEX] * n, list(range(n)), [0] * n)
+    ok = svc._apply_chunk([dynamic.ADD_VERTEX] * n, list(range(n)), [0] * n)
     assert ok.all()
     if oracle is not None:
         for i in range(n):
@@ -70,8 +70,8 @@ def test_pipelined_matches_serial_path(window):
     for step in range(14):
         kind, u, v = mixed_stream(rng, int(rng.integers(1, 24)),
                                   p_vertex=0.1)
-        ok_fast = fast.apply(kind, u, v)
-        ok_serial = serial.apply(kind, u, v)
+        ok_fast = fast._apply_chunk(kind, u, v)
+        ok_serial = serial._apply_chunk(kind, u, v)
         assert ok_fast.tolist() == ok_serial.tolist()
         assert np.asarray(fast.state.ccid).tolist() == \
             np.asarray(serial.state.ccid).tolist()
@@ -94,7 +94,7 @@ def test_donated_pipeline_preserves_committed_snapshot():
         svc = SCCService(tiny_cfg(edge_capacity=128, max_probes=16),
                          buckets=(8, 16), donate=True)
         boot(svc)
-        svc.apply([dynamic.ADD_EDGE] * 3, [0, 1, 2], [1, 2, 0])
+        svc._apply_chunk([dynamic.ADD_EDGE] * 3, [0, 1, 2], [1, 2, 0])
         held = svc.state  # a reader's pinned snapshot
         held_ccid = np.array(held.ccid)
         held_gen = int(held.gen)
@@ -102,7 +102,7 @@ def test_donated_pipeline_preserves_committed_snapshot():
         rng = np.random.default_rng(3)
         for _ in range(5):
             kind, u, v = mixed_stream(rng, 16)
-            svc.apply(kind, u, v)
+            svc._apply_chunk(kind, u, v)
         # the old snapshot's buffers are still alive and unchanged
         assert np.array(held.ccid).tolist() == held_ccid.tolist()
         assert int(held.gen) == held_gen
@@ -121,7 +121,7 @@ def test_serial_and_pipelined_compile_entries_are_tracked():
     for n in (3, 8, 11, 16, 5):
         kind = rng.choice([dynamic.ADD_EDGE] * 2 + [dynamic.REM_EDGE],
                           int(n))
-        svc.apply(kind, rng.integers(0, NV, n), rng.integers(0, NV, n))
+        svc._apply_chunk(kind, rng.integers(0, NV, n), rng.integers(0, NV, n))
     assert svc.fallback_chunks == 0
     assert svc.compile_count <= 2  # == len(buckets), pipelined only
 
@@ -133,7 +133,7 @@ def test_broker_coalesces_into_one_flush():
     svc = SCCService(tiny_cfg(edge_capacity=256, max_probes=16),
                      buckets=(8,))
     boot(svc)
-    svc.apply([dynamic.ADD_EDGE] * 4, [0, 1, 2, 3], [1, 2, 0, 4])
+    svc._apply_chunk([dynamic.ADD_EDGE] * 4, [0, 1, 2, 3], [1, 2, 0, 4])
     broker = QueryBroker(svc, buckets=(4, 16))
     futs = [broker.submit("same_scc", [0, 1, 5], [1, 2, 6]),
             broker.submit("same_scc", [2], [0]),
@@ -165,7 +165,7 @@ def test_broker_dispatcher_survives_flush_errors(monkeypatch):
     svc = SCCService(tiny_cfg(edge_capacity=256, max_probes=16),
                      buckets=(8,))
     boot(svc)
-    svc.apply([dynamic.ADD_EDGE] * 2, [0, 1], [1, 0])
+    svc._apply_chunk([dynamic.ADD_EDGE] * 2, [0, 1], [1, 0])
     real = svc_mod.same_scc_on
     calls = {"n": 0}
 
@@ -197,7 +197,7 @@ def test_broker_generations_monotone_across_commits():
     last = -1
     for _ in range(6):
         kind, u, v = mixed_stream(rng, 8)
-        svc.apply(kind, u, v)
+        svc._apply_chunk(kind, u, v)
         snap = broker.same_scc(rng.integers(0, NV, 4),
                                rng.integers(0, NV, 4))
         assert snap.gen >= last
@@ -287,7 +287,7 @@ def test_concurrent_readers_match_oracle_at_stamped_generation():
     for step in range(12):
         n = int(rng.integers(1, 30))
         kind, u, v = mixed_stream(rng, n)
-        ok = svc.apply(kind, u, v)
+        ok = svc._apply_chunk(kind, u, v)
         want = np.zeros(n, bool)
         for sl, _ in svc._sched.plan(n):
             order = sorted(range(sl.start, sl.stop),

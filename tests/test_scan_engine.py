@@ -238,7 +238,7 @@ def test_service_scan_path_matches_serial_and_oracle():
                      proactive_grow=True)
     oracle = SeqSCC(NV)
     for svc in (scan, serial, pro):
-        assert svc.apply([dynamic.ADD_VERTEX] * NV, list(range(NV)),
+        assert svc._apply_chunk([dynamic.ADD_VERTEX] * NV, list(range(NV)),
                          [0] * NV).all()
     for i in range(NV):
         assert oracle.add_vertex(i)
@@ -254,9 +254,9 @@ def test_service_scan_path_matches_serial_and_oracle():
                                  dynamic.REM_EDGE))
         u = rng.integers(0, NV, n)
         v = rng.integers(0, NV, n)
-        ok = scan.apply(kind, u, v)
-        assert ok.tolist() == serial.apply(kind, u, v).tolist() \
-            == pro.apply(kind, u, v).tolist()
+        ok = scan._apply_chunk(kind, u, v)
+        assert ok.tolist() == serial._apply_chunk(kind, u, v).tolist() \
+            == pro._apply_chunk(kind, u, v).tolist()
         assert ok.tolist() == oracle_replay(oracle, scan._sched,
                                             kind, u, v).tolist()
         assert np.asarray(scan.state.ccid).tolist() == \
@@ -282,7 +282,7 @@ def test_overflow_replays_only_from_offending_super_chunk():
     svc = SCCService(tiny(), buckets=(4,), scan_lengths=(1, 2))
     serial = SCCService(tiny(), buckets=(4,), inflight_window=0)
     for s in (svc, serial):
-        assert s.apply([dynamic.ADD_VERTEX] * NV, list(range(NV)),
+        assert s._apply_chunk([dynamic.ADD_VERTEX] * NV, list(range(NV)),
                        [0] * NV).all()
     # near-fill the 32-slot table (28 edges fit), then send a 16-op chunk:
     # plan [4, 4, 4, 4] -> super-chunks [2, 2].  Its first 8 ops duplicate
@@ -291,9 +291,9 @@ def test_overflow_replays_only_from_offending_super_chunk():
     # super-chunk, so the first one's fast-path work must survive.
     pairs = [(a, b) for a in range(NV) for b in range(NV) if a != b]
     fill = pairs[:28]
-    ok_fill = svc.apply([dynamic.ADD_EDGE] * 28,
+    ok_fill = svc._apply_chunk([dynamic.ADD_EDGE] * 28,
                         [p[0] for p in fill], [p[1] for p in fill])
-    assert ok_fill.tolist() == serial.apply(
+    assert ok_fill.tolist() == serial._apply_chunk(
         [dynamic.ADD_EDGE] * 28, [p[0] for p in fill],
         [p[1] for p in fill]).tolist()
     assert svc.grow_count == 0, "fill phase was not supposed to overflow"
@@ -301,8 +301,8 @@ def test_overflow_replays_only_from_offending_super_chunk():
     u = np.asarray([p[0] for p in pairs[:8] + pairs[100:108]], np.int32)
     v = np.asarray([p[1] for p in pairs[:8] + pairs[100:108]], np.int32)
     before = svc.scanned_chunks
-    ok = svc.apply(kind, u, v)
-    assert ok.tolist() == serial.apply(kind, u, v).tolist()
+    ok = svc._apply_chunk(kind, u, v)
+    assert ok.tolist() == serial._apply_chunk(kind, u, v).tolist()
     assert np.asarray(svc.state.ccid).tolist() == \
         np.asarray(serial.state.ccid).tolist()
     assert svc.edge_set() == serial.edge_set()
@@ -348,8 +348,8 @@ def test_donated_abort_does_not_double_count_telemetry():
              [p[1] for p in fill[:8] + extra]),
         ]
         for kind, uu, vv in streams:
-            assert donated.apply(kind, uu, vv).tolist() == \
-                serial.apply(kind, uu, vv).tolist()
+            assert donated._apply_chunk(kind, uu, vv).tolist() == \
+                serial._apply_chunk(kind, uu, vv).tolist()
         assert donated.fallback_chunks >= 1
         # both services executed the identical step history after the
         # restart, so per-tier step counts must agree exactly -- the
@@ -391,7 +391,7 @@ def test_compile_count_bounded_by_buckets_times_scan_lengths():
     for n in (3, 8, 24, 64, 80, 31, 128, 11):
         kind = rng.choice([dynamic.ADD_EDGE] * 2 + [dynamic.REM_EDGE],
                           int(n))
-        svc.apply(kind, rng.integers(0, NV, n), rng.integers(0, NV, n))
+        svc._apply_chunk(kind, rng.integers(0, NV, n), rng.integers(0, NV, n))
     assert svc.grow_count == 0  # capacity was generous
     bound = 2 * (2 + 1)  # buckets x (scan lengths + serial)
     assert svc.compile_count <= bound
@@ -421,7 +421,7 @@ def test_service_bit_identical_across_sparse_impls():
 
     rng = np.random.default_rng(41)
     for s in (pal, xla):
-        assert s.apply([dynamic.ADD_VERTEX] * NV, list(range(NV)),
+        assert s._apply_chunk([dynamic.ADD_VERTEX] * NV, list(range(NV)),
                        [0] * NV).all()
     for step_no in range(6):
         n = int(rng.integers(4, 17))
@@ -430,8 +430,8 @@ def test_service_bit_identical_across_sparse_impls():
                         dynamic.REM_EDGE).astype(np.int32)
         u = rng.integers(0, NV, n)
         v = rng.integers(0, NV, n)
-        ok_p = pal.apply(kind, u, v)
-        ok_x = xla.apply(kind, u, v)
+        ok_p = pal._apply_chunk(kind, u, v)
+        ok_x = xla._apply_chunk(kind, u, v)
         assert ok_p.tolist() == ok_x.tolist(), step_no
         assert np.asarray(pal.state.ccid).tolist() == \
             np.asarray(xla.state.ccid).tolist(), step_no
@@ -472,7 +472,7 @@ def test_bulk_expiry_sliding_window_matches_oracle_and_gates():
         u = rng.integers(0, NV, 8).astype(np.int32)
         v = rng.integers(0, NV, 8).astype(np.int32)
         kind = np.full(8, dynamic.ADD_EDGE, np.int32)
-        ok = svc.apply(kind, u, v)
+        ok = svc._apply_chunk(kind, u, v)
         assert ok.tolist() == oracle_replay(oracle, svc._sched,
                                             kind, u, v).tolist(), step_no
         window.append((u, v))
@@ -480,7 +480,7 @@ def test_bulk_expiry_sliding_window_matches_oracle_and_gates():
             eu, ev = window.popleft()
             kind = np.full(8, dynamic.REM_EDGE, np.int32)
             before = dict(svc.repair_tier_steps)
-            ok = svc.apply(kind, eu, ev)
+            ok = svc._apply_chunk(kind, eu, ev)
             assert ok.tolist() == oracle_replay(
                 oracle, svc._sched, kind, eu, ev).tolist(), step_no
             expiry_tiers.append(

@@ -30,7 +30,7 @@ def tiny_cfg(edge_capacity=32, max_probes=4, nv=NV):
 
 
 def boot(svc: SCCService, oracle: SeqSCC, n=NV):
-    ok = svc.apply([dynamic.ADD_VERTEX] * n, list(range(n)), [0] * n)
+    ok = svc._apply_chunk([dynamic.ADD_VERTEX] * n, list(range(n)), [0] * n)
     assert ok.all()
     for i in range(n):
         assert oracle.add_vertex(i)
@@ -56,7 +56,7 @@ def oracle_replay(oracle: SeqSCC, sched: BucketedScheduler, kind, u, v):
 
 
 def check_against_oracle(svc, oracle, kind, u, v):
-    ok = svc.apply(kind, u, v)
+    ok = svc._apply_chunk(kind, u, v)
     want = oracle_replay(oracle, svc._sched, kind, u, v)
     assert ok.tolist() == want.tolist()
     assert np.asarray(svc.state.ccid).tolist() == oracle.ccid()
@@ -155,10 +155,10 @@ def test_duplicate_insert_overflow():
     svc = SCCService(cfg, buckets=(8,))
     oracle = SeqSCC(NV)
     boot(svc, oracle)
-    ok = svc.apply([dynamic.ADD_EDGE], [0], [1])
+    ok = svc._apply_chunk([dynamic.ADD_EDGE], [0], [1])
     assert ok.all() and oracle.add_edge(0, 1)
     cu, cv = collide(cfg, 0, 1)
-    ok = svc.apply([dynamic.ADD_EDGE] * 2, [cu, cu], [cv, cv])
+    ok = svc._apply_chunk([dynamic.ADD_EDGE] * 2, [cu, cu], [cv, cv])
     assert oracle.add_edge(cu, cv) and not oracle.add_edge(cu, cv)
     assert ok.tolist() == [True, False]
     assert svc.grow_count >= 1
@@ -174,15 +174,15 @@ def test_remove_then_readd_overflow():
     svc = SCCService(cfg, buckets=(8,))
     oracle = SeqSCC(NV)
     boot(svc, oracle)
-    assert svc.apply([dynamic.ADD_EDGE], [0], [1]).all()
+    assert svc._apply_chunk([dynamic.ADD_EDGE], [0], [1]).all()
     oracle.add_edge(0, 1)
-    assert svc.apply([dynamic.REM_EDGE], [0], [1]).all()
+    assert svc._apply_chunk([dynamic.REM_EDGE], [0], [1]).all()
     oracle.remove_edge(0, 1)
     cu, cv = collide(cfg, 0, 1)
-    assert svc.apply([dynamic.ADD_EDGE], [cu], [cv]).all()  # reuses tomb
+    assert svc._apply_chunk([dynamic.ADD_EDGE], [cu], [cv]).all()  # reuses tomb
     oracle.add_edge(cu, cv)
     assert svc.grow_count == 0  # tombstone reuse: no growth yet
-    ok = svc.apply([dynamic.ADD_EDGE], [0], [1])  # now the slot is taken
+    ok = svc._apply_chunk([dynamic.ADD_EDGE], [0], [1])  # now the slot is taken
     oracle.add_edge(0, 1)
     assert ok.all()
     assert svc.grow_count >= 1 and svc.replayed_ops >= 1
@@ -268,7 +268,7 @@ def test_snapshot_queries_generation_stamped():
     oracle = SeqSCC(NV)
     boot(svc, oracle)
     edges = [(0, 1), (1, 2), (2, 0), (3, 4), (4, 3), (2, 3)]
-    ok = svc.apply([dynamic.ADD_EDGE] * len(edges),
+    ok = svc._apply_chunk([dynamic.ADD_EDGE] * len(edges),
                    [e[0] for e in edges], [e[1] for e in edges])
     assert ok.all()
 
@@ -286,13 +286,13 @@ def test_snapshot_queries_generation_stamped():
     # all three saw the same committed snapshot
     assert same.gen == reach.gen == members.gen == svc.gen
     g0 = svc.gen
-    svc.apply([dynamic.ADD_EDGE], [4], [0])  # merges everything
+    svc._apply_chunk([dynamic.ADD_EDGE], [4], [0])  # merges everything
     same2 = svc.same_scc([0], [4])
     assert same2.value.tolist() == [True]
     assert same2.gen > g0  # new generation observed after commit
 
     # dead-vertex contracts
-    svc.apply([dynamic.REM_VERTEX], [4], [0])
+    svc._apply_chunk([dynamic.REM_VERTEX], [4], [0])
     assert not svc.same_scc([4], [4]).value.item()
     assert not svc.reachable([4], [4]).value.item()
     assert not svc.scc_members(4).value.any()
@@ -319,7 +319,7 @@ def test_apply_rolls_back_on_unrecoverable_overflow():
             v = rng.integers(0, NV, 8)
             edges_before = svc.edge_set()
             gen_before = svc.gen
-            svc.apply(np.full(8, dynamic.ADD_EDGE), u, v)
+            svc._apply_chunk(np.full(8, dynamic.ADD_EDGE), u, v)
         raise AssertionError("stream never overflowed the capped table")
     # the failing chunk left no trace: same snapshot, same cfg
     assert svc.edge_set() == edges_before
@@ -328,7 +328,7 @@ def test_apply_rolls_back_on_unrecoverable_overflow():
     # and the service still works for ops that fit
     if edges_before:
         eu, ev = next(iter(edges_before))
-        ok = svc.apply([dynamic.REM_EDGE], [eu], [ev])
+        ok = svc._apply_chunk([dynamic.REM_EDGE], [eu], [ev])
         assert ok.all()
 
 
@@ -341,9 +341,9 @@ def test_compaction_triggers_on_tombstones():
     pairs = [(int(a), int(b)) for a, b in
              zip(rng.integers(0, NV, 12), rng.integers(0, NV, 12))]
     pairs = sorted(set(pairs))
-    svc.apply([dynamic.ADD_EDGE] * len(pairs),
+    svc._apply_chunk([dynamic.ADD_EDGE] * len(pairs),
               [p[0] for p in pairs], [p[1] for p in pairs])
-    svc.apply([dynamic.REM_EDGE] * len(pairs),
+    svc._apply_chunk([dynamic.REM_EDGE] * len(pairs),
               [p[0] for p in pairs], [p[1] for p in pairs])
     for p in pairs:
         oracle.add_edge(*p)
