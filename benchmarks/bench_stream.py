@@ -40,6 +40,12 @@ throughput must scale >= 1.5x from 1 to 2 replicas (staggered replica
 poll grids hide replication lag -- a latency-bound regime, so the
 scaling is honest on a single core).
 
+The **availability** section (PR-9) prices the failure domain: the same
+closed-loop replica-served query workload in a steady window vs a
+window opened by killing a replica (the supervisor restarts it
+mid-window); the degraded-window throughput ratio is gated >= 0.5x by
+``scripts/ci.sh``.
+
 Finally the **repair-tier** section measures the tiered repair engine on
 the paper's locality-of-repair shape (tiny affected regions inside a
 large table): the identical small-region workload under the tiered and
@@ -683,6 +689,29 @@ def run_tenancy(n_tenants=6, steps=20, nv=256, chunk=16,
     return rows, report
 
 
+def run_availability_section(window_s=0.8, replicas=2, min_ratio=0.5):
+    """Degraded-window serving (PR-9): closed-loop query throughput
+    through a supervised ReplicaSet in a steady window vs a window where
+    one replica is killed and supervisor-restarted
+    (:func:`repro.launch.chaos.run_availability`).  The caller is
+    latency-bound, so transparent failover should keep the ratio near
+    1.0; the gate floor is 0.5x (losing more than half the window to a
+    single replica death means failover or restart is broken)."""
+    from repro.launch.chaos import run_availability
+
+    rep = run_availability(window_s=window_s, replicas=replicas)
+    rep["floor"] = min_ratio
+    rows = [
+        ("steady", rep["steady_per_s"], rep["steady_faults"], 1.0),
+        ("replica_killed", rep["faulted_per_s"], rep["faulted_faults"],
+         rep["ratio"]),
+    ]
+    assert rep["ratio"] >= min_ratio, (
+        f"availability collapsed under a replica kill: degraded-window "
+        f"throughput ratio {rep['ratio']} < {min_ratio} floor")
+    return rows, rep
+
+
 HEADER = ["mix", "ops", "ops_per_s", "queries", "queries_per_s",
           "combined_per_s", "compiled_shapes", "grows", "compactions",
           "final_capacity", "steady_ops", "repair_skipped_steps",
@@ -696,6 +725,7 @@ REPLICA_HEADER = ["mode", "ops", "ops_per_s", "queries", "queries_per_s",
                   "combined_per_s", "replicas", "routed_stale",
                   "gen_waits"]
 TENANCY_HEADER = ["mode", "ops", "ops_per_s", "wall_s", "speedup"]
+AVAIL_HEADER = ["phase", "queries_per_s", "typed_faults", "ratio"]
 
 
 def _dicts(rows, header):
@@ -782,6 +812,7 @@ def main():
         replicas, replicas_rep = run_replicas()
         tenancy, tenancy_rep = run_tenancy(n_tenants=6, steps=16,
                                            nv=256, chunk=16)
+        avail, avail_rep = run_availability_section(window_s=0.6)
     elif args.full:
         buckets = (1024, 4096)
         # chunk = 4 x the large bucket: the mixes run K=4 super-chunks
@@ -802,6 +833,8 @@ def main():
                                               n_ops=1920, nv=2048)
         tenancy, tenancy_rep = run_tenancy(n_tenants=6, steps=48,
                                            nv=512, chunk=16)
+        avail, avail_rep = run_availability_section(window_s=1.5,
+                                                    replicas=3)
     else:
         buckets = (128, 512)
         nv_used, cap_used = 4096, 4096
@@ -812,6 +845,7 @@ def main():
         replicas, replicas_rep = run_replicas(counts=(1, 2, 3))
         tenancy, tenancy_rep = run_tenancy(n_tenants=6, steps=24,
                                            nv=512, chunk=16)
+        avail, avail_rep = run_availability_section()
     common.emit(rows, HEADER)
     common.emit(overlap, OVERLAP_HEADER)
     common.emit(overhead, OVERHEAD_HEADER)
@@ -826,6 +860,10 @@ def main():
           f"{tenancy_rep['tenants']} sequential single-tenant services "
           f"(floor {tenancy_rep['floor']}x, compile "
           f"{tenancy_rep['compile_count']}/{tenancy_rep['compile_bound']})")
+    common.emit(avail, AVAIL_HEADER)
+    print(f"availability under replica kill: {avail_rep['ratio']}x of "
+          f"the steady window ({avail_rep['restarts']} supervisor "
+          f"restart(s), floor {avail_rep['floor']}x)")
     if args.json:
         mode = "smoke" if args.smoke else "full" if args.full else "default"
         report = {
@@ -844,6 +882,7 @@ def main():
             "repair_tiers": repair_rep,
             "replicas": replicas_rep,
             "tenancy": tenancy_rep,
+            "availability": avail_rep,
             "kernel_impl": _kernel_impl_info(nv_used, cap_used),
         }
         append_report(args.json, report)

@@ -1,0 +1,67 @@
+#!/usr/bin/env bash
+# Chaos/crash smoke matrix: the CI gate for the failure-domain story.
+#
+#   scripts/chaos_smoke.sh              # full matrix (CHAOS_SEEDS="0 1 2")
+#   CHAOS_SEEDS="7" scripts/chaos_smoke.sh
+#
+# Three legs, each a different failure domain:
+#
+#   writer-kill   a real SIGKILL of a durable writer process mid-stream,
+#                 once per seed; both recovery paths (latest snapshot +
+#                 WAL tail vs generation-0 scratch replay) must agree
+#                 bit-for-bit
+#   chaos soak    seeded in-process fault plans (repro.launch.chaos):
+#                 WAL write/fsync faults incl. torn records, replica
+#                 kills, broker stalls -- gating zero acked-op loss,
+#                 typed-errors-only, availability > 0 while any replica
+#                 is healthy, and recovery-under-fire, per seed x
+#                 {disk-fault, replica-kill, mixed}
+#   supervised    multi-process serving: parent writer + replica child
+#                 processes, SIGKILL one child, require a supervisor
+#                 restart and every slot to converge to the final gen
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+SEEDS="${CHAOS_SEEDS:-0 1 2}"
+
+echo "== writer-kill smoke: SIGKILL a durable writer mid-stream (seeds: $SEEDS) =="
+for seed in $SEEDS; do
+    CRASH_DIR=$(mktemp -d)
+    python -m repro.launch.replica --writer-child --dir "$CRASH_DIR" \
+        --seed "$seed" --steps 100000 --snapshot-every 16 \
+        > "$CRASH_DIR/writer.log" 2>&1 &
+    WRITER_PID=$!
+    commits=0
+    for _ in $(seq 1 300); do
+        commits=$(grep -c '^gen ' "$CRASH_DIR/writer.log" 2>/dev/null || true)
+        [[ "${commits:-0}" -ge 24 ]] && break
+        kill -0 "$WRITER_PID" 2>/dev/null || {
+            cat "$CRASH_DIR/writer.log" >&2
+            echo "crash-smoke writer (seed $seed) died before being killed" >&2
+            exit 1
+        }
+        sleep 0.1
+    done
+    [[ "${commits:-0}" -ge 24 ]] || {
+        echo "crash-smoke writer (seed $seed) made no progress" >&2; exit 1; }
+    kill -9 "$WRITER_PID" 2>/dev/null
+    wait "$WRITER_PID" 2>/dev/null || true
+    python -m repro.launch.replica --verify-recovery --dir "$CRASH_DIR"
+    rm -rf "$CRASH_DIR"
+done
+
+echo "== chaos soak: seeded fault plans x {disk-fault, replica-kill, mixed} =="
+python -m repro.launch.chaos --smoke --seeds "${SEEDS// /,}" \
+    --profiles disk-fault,replica-kill,mixed
+
+echo "== supervised multi-process serving: SIGKILL a replica child =="
+SUP_DIR=$(mktemp -d)
+python -m repro.launch.replica --dir "$SUP_DIR" --supervised \
+    --replicas 2 --steps 40 --chunk 24 --nv 192 --kill-child-after 3 \
+    | tail -1
+rm -rf "$SUP_DIR"
+
+echo "chaos smoke OK"

@@ -100,32 +100,11 @@ echo "== tier-1 tests (pytest.ini defaults to -m 'not slow') =="
 python -m pytest -x -q tests/
 
 if [[ "${1:-}" != "--fast" ]]; then
-    echo "== durability crash smoke: SIGKILL a durable writer mid-stream =="
-    # a real process crash (not an in-process fault injection): the victim
-    # ingests through the WAL-backed DurableService printing one 'gen <g>'
-    # line per committed chunk; once it has demonstrably committed work we
-    # SIGKILL it and require both recovery paths (latest snapshot + WAL
-    # tail vs generation-0 scratch replay) to agree bit-for-bit
-    CRASH_DIR=$(mktemp -d)
-    python -m repro.launch.replica --writer-child --dir "$CRASH_DIR" \
-        --steps 100000 --snapshot-every 16 > "$CRASH_DIR/writer.log" 2>&1 &
-    WRITER_PID=$!
-    for _ in $(seq 1 300); do
-        commits=$(grep -c '^gen ' "$CRASH_DIR/writer.log" 2>/dev/null || true)
-        [[ "${commits:-0}" -ge 24 ]] && break
-        kill -0 "$WRITER_PID" 2>/dev/null || {
-            cat "$CRASH_DIR/writer.log" >&2
-            echo "crash-smoke writer died before being killed" >&2
-            exit 1
-        }
-        sleep 0.1
-    done
-    [[ "${commits:-0}" -ge 24 ]] || {
-        echo "crash-smoke writer made no progress" >&2; exit 1; }
-    kill -9 "$WRITER_PID" 2>/dev/null
-    wait "$WRITER_PID" 2>/dev/null || true
-    python -m repro.launch.replica --verify-recovery --dir "$CRASH_DIR"
-    rm -rf "$CRASH_DIR"
+    echo "== chaos gate: crash/fault/failover matrix (scripts/chaos_smoke.sh) =="
+    # writer SIGKILL per seed, seeded in-process fault-plan soaks (zero
+    # acked-op loss, typed errors only, availability floor, recovery
+    # under fire), and the supervised multi-process replica restart
+    scripts/chaos_smoke.sh
 fi
 
 if [[ "${1:-}" != "--fast" ]]; then
@@ -133,7 +112,7 @@ if [[ "${1:-}" != "--fast" ]]; then
     # appends one labelled run to the perf trajectory (BENCH_LABEL env
     # var names the point; defaults to this PR's label)
     python -m benchmarks.bench_stream --smoke --json BENCH_stream.json \
-        --label "${BENCH_LABEL:-pr8-multi-tenant}"
+        --label "${BENCH_LABEL:-pr9-fault-hardening}"
     echo "== perf-trajectory gates (BENCH_stream.json, newest run) =="
     python - <<'PYEOF'
 import json
@@ -230,6 +209,17 @@ assert tn["queue"]["waves"] > 0 and "rejects" in tn["queue"] and \
 assert len(tn["per_tenant"]) == tn["tenants"] and all(
     "gen" in row and "fallback_chunks" in row for row in tn["per_tenant"]), (
     "tenancy run is missing per-tenant telemetry")
+# availability gate (PR 9): killing one replica mid-window (with the
+# supervisor restarting it) must keep closed-loop query throughput at
+# >= 0.5x the steady window -- the caller is latency-bound, so failover
+# should cost one resubmit, not half the window
+av = rep["availability"]
+assert av["ratio"] >= 0.5, (
+    f"degraded-window availability collapsed: {av['ratio']}x of the "
+    f"steady window (floor 0.5x)")
+assert av["restarts"] >= 1, (
+    "availability window killed a replica but the supervisor never "
+    "restarted it")
 print("perf-trajectory gates OK:",
       f"update-heavy {uh['combined_per_s']} ops/s "
       f"({uh['combined_per_s'] / 154:.1f}x the PR-4 baseline),",
@@ -243,7 +233,9 @@ print("perf-trajectory gates OK:",
       f"compact median {compact_med * 1e3:.2f}ms,",
       f"sparse impl {rep['kernel_impl']['frontier_expand']},",
       f"tenancy {tn['speedup']}x @ {tn['tenants']} tenants "
-      f"({tn['compile_count']}/{tn['compile_bound']} compiled entries)")
+      f"({tn['compile_count']}/{tn['compile_bound']} compiled entries),",
+      f"availability {av['ratio']}x under replica kill "
+      f"({av['restarts']} restart(s))")
 PYEOF
     echo "== documented serving entry point (examples/dynamic_scc_serving.py --smoke) =="
     python examples/dynamic_scc_serving.py --smoke

@@ -37,6 +37,8 @@ READ_YOUR_WRITES.
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import time
 from concurrent.futures import Future
 from typing import Any, Iterable, Iterator, List, NamedTuple, Sequence, \
     Tuple
@@ -45,8 +47,13 @@ import numpy as np
 
 from repro.api.ops import (CommunityOf, CommunitySizes, Op, QueryOp,
                            SccMembers, UpdateOp, encode_updates)
+from repro.fault import errors as fault_errors
 
 __all__ = ["GraphClient", "Result", "Consistency", "AtLeast"]
+
+# process-unique client session ids: the idempotency namespace for
+# retried update chunks (the service dedups on (session, seq))
+_SESSION_IDS = itertools.count()
 
 
 # -------------------------------------------------------- consistency ----
@@ -147,7 +154,10 @@ class GraphClient:
     """
 
     def __init__(self, service, broker=None,
-                 consistency=Consistency.LATEST):
+                 consistency=Consistency.LATEST, *,
+                 deadline_s: float | None = None, max_retries: int = 8,
+                 backoff_base_s: float = 0.005,
+                 backoff_cap_s: float = 0.25):
         from repro.core.broker import QueryBroker
         self._svc = service
         self._broker = QueryBroker(service) if broker is None else broker
@@ -157,6 +167,23 @@ class GraphClient:
         # with the creation-time committed gen (already committed, so it
         # never blocks) and advanced to each acked update's commit gen.
         self._token = int(service.gen)
+        # failure-domain knobs (docs/SERVICE_API.md §Failure semantics):
+        # retryable FaultErrors (Unavailable/QueueFull) are resubmitted
+        # with bounded exponential backoff -- each wait is
+        # max(backoff, server retry_after) capped at backoff_cap_s --
+        # inside the per-op deadline (deadline_s=None: no time bound,
+        # max_retries still applies).  Updates are idempotent under
+        # retry: every chunk carries (session_id, seq) and the service
+        # dedups re-submits, so a chunk whose ack was lost is never
+        # double-applied through the WAL.
+        self._deadline_s = deadline_s
+        self._max_retries = int(max_retries)
+        self._backoff_base_s = float(backoff_base_s)
+        self._backoff_cap_s = float(backoff_cap_s)
+        self.session_id = f"gc{next(_SESSION_IDS)}"
+        self._seq = 0
+        self.retries = 0
+        self.deadline_failures = 0
         self.updates_submitted = 0
         self.queries_submitted = 0
 
@@ -182,37 +209,50 @@ class GraphClient:
 
     # -------------------------------------------------------- submission --
 
-    def submit(self, op: Op, consistency=None) -> "Future[Result]":
+    def submit(self, op: Op, consistency=None,
+               deadline_s: float | None = None) -> "Future[Result]":
         """Issue one op; resolves to its :class:`Result`.
 
         Updates are acknowledged synchronously (the returned future is
-        already done — the chunk committed).  Queries resolve when the
-        broker flushes: immediately on this thread in inline mode, or
-        asynchronously when a dispatcher is running.
+        already done — the chunk committed, retried under the client's
+        retry policy if the store was transiently unavailable).  Queries
+        resolve when the broker flushes: immediately on this thread in
+        inline mode (with retries + the per-op deadline), or
+        asynchronously when a dispatcher is running (the deadline/retry
+        policy does not chase an async future; a failure arrives as the
+        future's typed exception).
         """
         fut: Future = Future()
         if isinstance(op, UpdateOp):
-            fut.set_result(self._apply_updates([op])[0])
+            fut.set_result(self._apply_updates([op], deadline_s)[0])
             return fut
         if not isinstance(op, QueryOp):
             raise TypeError(f"not an api op: {op!r}")
         min_gen = self._min_gen(consistency)
-        bfut = self._submit_query_run(op.BROKER_KIND, [op], min_gen)
         self.queries_submitted += 1
         if self._broker.dispatching:
+            bfut = self._submit_query_run(op.BROKER_KIND, [op], min_gen)
+
             def _chain(f):
                 try:
                     fut.set_result(self._result_of(op, f.result(), 0))
                 except BaseException as e:  # surfaced via fut.result()
                     fut.set_exception(e)
             bfut.add_done_callback(_chain)
-        else:
-            snap = self._broker.resolve(bfut, min_gen=min_gen)
-            fut.set_result(self._result_of(op, snap, 0))
+            return fut
+
+        def attempt(remaining):
+            bfut = self._submit_query_run(op.BROKER_KIND, [op], min_gen)
+            return self._broker.resolve(bfut, min_gen=min_gen,
+                                        timeout=remaining)
+        snap = self._with_retry(
+            attempt, self._deadline_s if deadline_s is None
+            else deadline_s)
+        fut.set_result(self._result_of(op, snap, 0))
         return fut
 
-    def submit_many(self, ops: Sequence[Op], consistency=None
-                    ) -> List[Result]:
+    def submit_many(self, ops: Sequence[Op], consistency=None,
+                    deadline_s: float | None = None) -> List[Result]:
         """Issue a mixed op sequence; returns one :class:`Result` per op,
         in submission order.
 
@@ -224,14 +264,20 @@ class GraphClient:
         is ``>=`` the session token at its submission.
         """
         results: List[Result] = []
+        eff_deadline = self._deadline_s if deadline_s is None \
+            else deadline_s
         for cat, run in _runs(ops):
             if cat == "update":
-                results.extend(self._apply_updates(run))
+                results.extend(self._apply_updates(run, eff_deadline))
                 continue
             min_gen = self._min_gen(consistency)
-            bfut = self._submit_query_run(cat, run, min_gen)
             self.queries_submitted += len(run)
-            snap = self._broker.resolve(bfut, min_gen=min_gen)
+
+            def attempt(remaining, cat=cat, run=run, min_gen=min_gen):
+                bfut = self._submit_query_run(cat, run, min_gen)
+                return self._broker.resolve(bfut, min_gen=min_gen,
+                                            timeout=remaining)
+            snap = self._with_retry(attempt, eff_deadline)
             # run-level value decode (one C-level conversion per run, not
             # one isinstance chain + numpy index per op)
             gen = int(snap.gen)
@@ -260,9 +306,61 @@ class GraphClient:
             return int(c.gen)
         raise TypeError(f"unknown consistency level: {c!r}")
 
-    def _apply_updates(self, run: List[Op]) -> List[Result]:
+    def _with_retry(self, attempt, deadline_s: float | None):
+        """Run ``attempt(remaining_s)`` under the retry policy: retryable
+        :class:`~repro.fault.errors.FaultError`\\ s are re-attempted with
+        exponential backoff -- each wait is ``max(backoff, retry_after)``
+        capped at ``backoff_cap_s`` -- until ``max_retries`` attempts or
+        the deadline is spent, whichever first.  Deadline exhaustion
+        raises :class:`~repro.fault.errors.DeadlineExceeded` (chaining
+        the last transient error); retry exhaustion re-raises the last
+        typed error itself."""
+        deadline = None if deadline_s is None \
+            else time.monotonic() + deadline_s
+        delay = self._backoff_base_s
+        last: BaseException | None = None
+        for n in range(self._max_retries + 1):
+            remaining = None if deadline is None \
+                else deadline - time.monotonic()
+            if remaining is not None and remaining <= 0:
+                self.deadline_failures += 1
+                raise fault_errors.DeadlineExceeded(
+                    f"op deadline {deadline_s}s spent after {n} "
+                    f"attempts (last: {last})") from last
+            try:
+                return attempt(remaining)
+            except fault_errors.FaultError as e:
+                if not e.retryable or n == self._max_retries:
+                    raise
+                last = e
+                wait = min(max(delay, e.retry_after or 0.0),
+                           self._backoff_cap_s)
+                if deadline is not None and \
+                        time.monotonic() + wait >= deadline:
+                    self.deadline_failures += 1
+                    raise fault_errors.DeadlineExceeded(
+                        f"op deadline {deadline_s}s cannot cover the "
+                        f"next backoff ({wait:.3f}s; last: {e})") from e
+                self.retries += 1
+                time.sleep(wait)
+                delay = min(delay * 2, self._backoff_cap_s)
+        raise AssertionError("unreachable")  # loop always raises/returns
+
+    def _apply_updates(self, run: List[Op],
+                       deadline_s: float | None = None) -> List[Result]:
         kind, u, v = encode_updates(run)
-        ok, gen = self._svc._apply_ops(kind, u, v)
+        # one idempotency key per chunk: a retry re-submits the SAME
+        # (session, seq), so a first attempt that committed but lost its
+        # ack (fault after the WAL append) is deduped, never re-applied
+        self._seq += 1
+        seq = self._seq
+
+        def attempt(_remaining):
+            return self._svc._apply_ops(kind, u, v,
+                                        session=self.session_id, seq=seq)
+        ok, gen = self._with_retry(
+            attempt, self._deadline_s if deadline_s is None
+            else deadline_s)
         self._token = max(self._token, gen)
         self.updates_submitted += len(run)
         return [Result(op, val, gen)
@@ -305,6 +403,8 @@ class GraphClient:
         s.update(self._broker.stats())
         s.update(client_updates=self.updates_submitted,
                  client_queries=self.queries_submitted,
+                 client_retries=self.retries,
+                 client_deadline_failures=self.deadline_failures,
                  ryw_token=self._token)
         return s
 

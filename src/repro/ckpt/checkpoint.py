@@ -25,6 +25,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.fault.inject import fs_fsync, fs_open
+
 _SEP = "|"
 
 
@@ -51,19 +53,19 @@ def save(directory: str, step: int, tree: Any, keep: int = 3) -> str:
     flat = _flatten(tree)
     path = os.path.join(directory, f"ckpt_{step}.npz")
     tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
+    with fs_open(tmp, "wb") as f:
         np.savez(f, **flat)
         f.flush()
-        os.fsync(f.fileno())
+        fs_fsync(f)
     os.rename(tmp, path)
     digest = _digest(path)
     latest = os.path.join(directory, "LATEST")
     ltmp = latest + ".tmp"
-    with open(ltmp, "w") as f:
+    with fs_open(ltmp, "w") as f:
         json.dump({"step": step, "file": os.path.basename(path),
                    "sha256": digest}, f)
         f.flush()
-        os.fsync(f.fileno())
+        fs_fsync(f)
     os.rename(ltmp, latest)
     _gc(directory, keep)
     return path

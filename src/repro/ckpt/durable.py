@@ -34,6 +34,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import threading
+import time
 from typing import Sequence
 
 import numpy as np
@@ -41,9 +42,13 @@ import numpy as np
 from repro.ckpt import checkpoint, oplog
 from repro.core import graph_state as gs
 from repro.core.service import SCCService
+from repro.fault import errors as fault_errors
 
 __all__ = ["DurableService", "decision_kwargs", "scratch_replay",
-           "wal_dir", "snap_dir"]
+           "wal_dir", "snap_dir", "HEALTHY", "DEGRADED"]
+
+HEALTHY = "healthy"
+DEGRADED = "degraded"
 
 
 def wal_dir(directory: str) -> str:
@@ -96,7 +101,8 @@ def scratch_replay(directory: str, from_step: int = 0,
         if rec.gen_before < svc.gen:
             continue
         if rec.gen_before != svc.gen:
-            raise RuntimeError(f"WAL gap at generation {svc.gen}")
+            raise fault_errors.WalGap(
+                f"WAL gap at generation {svc.gen}")
         svc._apply_ops(rec.kind, rec.u, rec.v)
     return svc
 
@@ -115,6 +121,7 @@ class DurableService(SCCService):
                  snapshot_every: int = 256, snapshot_keep: int = 3,
                  trim_on_snapshot: bool = True,
                  boot_snapshot: bool = True, _defer_wal: bool = False,
+                 recover_probe_s: float = 0.05,
                  **service_kwargs):
         super().__init__(cfg, state=state, **service_kwargs)
         self._dir = directory
@@ -132,6 +139,17 @@ class DurableService(SCCService):
         self.snapshot_count = 0
         self.replayed_wal_records = 0
         self._wal: oplog.OpLogWriter | None = None
+        # degraded-mode state machine (see `health`): a WAL disk fault
+        # flips writes off while reads keep serving the committed state;
+        # probes rate-limited by recover_probe_s re-attach when it heals
+        self._degraded = False
+        self._degraded_error: BaseException | None = None
+        self._recover_probe_s = float(recover_probe_s)
+        self._last_probe = 0.0
+        self.degraded_count = 0
+        self.recovered_count = 0
+        self.unavailable_rejects = 0
+        self.snapshot_failures = 0
         if boot_snapshot and \
                 checkpoint.latest_step(self._snap_path) is None:
             self.snapshot_now()
@@ -145,7 +163,7 @@ class DurableService(SCCService):
              state: gs.GraphState | None = None, to_gen: int | None = None,
              sync_every: int = 1, segment_bytes: int = 4 << 20,
              snapshot_every: int = 256, snapshot_keep: int = 3,
-             trim_on_snapshot: bool = True,
+             trim_on_snapshot: bool = True, recover_probe_s: float = 0.05,
              **service_kwargs) -> "DurableService":
         """Recover (or create) the durable store at ``directory``.
 
@@ -166,7 +184,8 @@ class DurableService(SCCService):
                           segment_bytes=segment_bytes,
                           snapshot_every=snapshot_every,
                           snapshot_keep=snapshot_keep,
-                          trim_on_snapshot=trim_on_snapshot)
+                          trim_on_snapshot=trim_on_snapshot,
+                          recover_probe_s=recover_probe_s)
         if st is None:
             if cfg is None:
                 raise FileNotFoundError(
@@ -193,7 +212,7 @@ class DurableService(SCCService):
             if rec.gen_before < self.gen:
                 continue  # already inside the snapshot
             if rec.gen_before != self.gen:
-                raise RuntimeError(
+                raise fault_errors.WalGap(
                     f"WAL gap: record expects generation "
                     f"{rec.gen_before}, store is at {self.gen}")
             self._apply_chunk(rec.kind, rec.u, rec.v)
@@ -208,31 +227,117 @@ class DurableService(SCCService):
     # ----------------------------------------------------------- updates --
 
     def _apply_chunk(self, kind, u, v) -> np.ndarray:
-        if self._wal is None:  # recovery replay / read-only time travel
-            return super()._apply_chunk(kind, u, v)
-        kind = np.asarray(kind, np.int32)
-        u = np.asarray(u, np.int32)
-        v = np.asarray(v, np.int32)
         with self._apply_lock:
+            if self._degraded and not self._try_recover():
+                self.unavailable_rejects += 1
+                raise fault_errors.Unavailable(
+                    f"durable store {self._dir!r} is DEGRADED "
+                    f"({self._degraded_error}); reads keep serving the "
+                    f"committed snapshot, retry the update",
+                    retry_after=self._recover_probe_s)
+            if self._wal is None:  # recovery replay / read-only travel
+                return super()._apply_chunk(kind, u, v)
+            kind = np.asarray(kind, np.int32)
+            u = np.asarray(u, np.int32)
+            v = np.asarray(v, np.int32)
             # write-ahead: the record must be durable before any effect
             # of the chunk can commit; a crash after the append replays
             # an unacknowledged chunk, which converges (never diverges)
-            self._wal.append(self.gen, kind, u, v)
+            try:
+                self._wal.append(self.gen, kind, u, v)
+            except OSError as e:
+                # nothing applied: reject this chunk as retryable and
+                # flip to DEGRADED (reads unaffected)
+                self._enter_degraded(e)
+                raise fault_errors.Unavailable(
+                    f"WAL append failed ({e}); store DEGRADED",
+                    retry_after=self._recover_probe_s) from e
             try:
                 ok = super()._apply_chunk(kind, u, v)
             except Exception:
-                self._wal.rollback_last()
+                try:
+                    self._wal.rollback_last()
+                except OSError as e:  # disk died under the rollback too
+                    self._enter_degraded(e)
                 raise
-            self._wal.maybe_rotate(self.gen)
+            # the chunk is committed and durable past this point: house-
+            # keeping failures (rotation, snapshot kick) must degrade the
+            # store, never un-ack the chunk -- failing here would make a
+            # committed chunk look failed and a client retry double-apply
+            try:
+                self._wal.maybe_rotate(self.gen)
+            except OSError as e:
+                self._enter_degraded(e)
             self._maybe_snapshot()
             return ok
 
     def sync(self):
         """Force-fsync any batched WAL appends (the ``sync_every > 1``
-        durability window closes here)."""
+        durability window closes here).  A failed sync degrades the
+        store and raises :class:`~repro.fault.errors.Unavailable`."""
         if self._wal is not None:
             with self._apply_lock:
-                self._wal.sync()
+                try:
+                    self._wal.sync()
+                except OSError as e:
+                    self._enter_degraded(e)
+                    raise fault_errors.Unavailable(
+                        f"WAL fsync failed ({e}); store DEGRADED",
+                        retry_after=self._recover_probe_s) from e
+
+    # ----------------------------------------------------- degraded mode --
+
+    @property
+    def health(self) -> str:
+        """``"healthy"`` (read-write) or ``"degraded"`` (read-only: the
+        WAL disk is refusing writes; queries keep answering from the
+        committed state, updates raise ``Unavailable(retry_after)``
+        until a probe re-attaches the log)."""
+        return DEGRADED if self._degraded else HEALTHY
+
+    def _enter_degraded(self, e: BaseException):
+        """Flip to read-only after a WAL-side OSError (idempotent).  The
+        current segment's unacknowledged tail bytes are best-effort
+        discarded; ``repair_tail`` at recovery covers the rest."""
+        if self._degraded:
+            return
+        self._degraded = True
+        self._degraded_error = e
+        self.degraded_count += 1
+        self._last_probe = time.monotonic()
+        if self._wal is not None:
+            self._wal.discard_tail()
+
+    def _try_recover(self, force: bool = False) -> bool:
+        """Probe the disk (rate-limited) and re-attach the WAL if it
+        heals: repair the torn tail, open a fresh segment -- whose
+        header write + fsync IS the probe.  Caller holds _apply_lock."""
+        now = time.monotonic()
+        if not force and now - self._last_probe < self._recover_probe_s:
+            return False
+        self._last_probe = now
+        old, self._wal = self._wal, None
+        if old is not None:
+            try:
+                old.close()
+            except OSError:
+                pass
+        try:
+            self._attach_wal()
+        except OSError:
+            return False  # still sick; _wal stays None, _degraded True
+        self._degraded = False
+        self._degraded_error = None
+        self.recovered_count += 1
+        return True
+
+    def probe_recovery(self) -> bool:
+        """Explicitly probe a DEGRADED store (ignores the rate limit);
+        returns True when healthy (recovered or never degraded)."""
+        with self._apply_lock:
+            if not self._degraded:
+                return True
+            return self._try_recover(force=True)
 
     # --------------------------------------------------------- snapshots --
 
@@ -258,6 +363,19 @@ class DurableService(SCCService):
         if self._trim_on_snapshot:
             oplog.trim(self._wal_path, gen)
 
+    def _write_snapshot_bg(self, state: gs.GraphState,
+                           cfg: gs.GraphConfig, gen: int):
+        """Background-thread snapshot wrapper: a failed snapshot is a
+        durability *cadence* miss, never a serving failure -- the WAL
+        still covers every commit.  Count it and let a later commit
+        retry (the snapshot floor is rolled back)."""
+        try:
+            self._write_snapshot(state, cfg, gen)
+        except OSError:
+            self.snapshot_failures += 1
+            if self._last_snap_gen == gen:
+                self._last_snap_gen = -1  # let the next commit re-kick
+
     def _maybe_snapshot(self):
         """Kick an async snapshot of the committed state every
         ``snapshot_every`` generations (0 disables).  The state pytree is
@@ -273,7 +391,7 @@ class DurableService(SCCService):
         state, cfg, gen = self._committed, self._cfg, self.gen
         self._last_snap_gen = gen
         self._snap_thread = threading.Thread(
-            target=self._write_snapshot, args=(state, cfg, gen),
+            target=self._write_snapshot_bg, args=(state, cfg, gen),
             name="scc-snapshotter", daemon=True)
         self._snap_thread.start()
 
@@ -294,7 +412,10 @@ class DurableService(SCCService):
             self._snap_thread.join()
             self._snap_thread = None
         if self._wal is not None:
-            self._wal.close()
+            try:
+                self._wal.close()
+            except OSError as e:  # final fsync on a sick disk
+                self._enter_degraded(e)
             self._wal = None
 
     # -------------------------------------------------------------- misc --
@@ -309,5 +430,10 @@ class DurableService(SCCService):
                    else {"wal_appended": 0})
         out.update(snapshots=self.snapshot_count,
                    last_snapshot_gen=self._last_snap_gen,
-                   replayed_wal_records=self.replayed_wal_records)
+                   replayed_wal_records=self.replayed_wal_records,
+                   health=self.health,
+                   degraded_count=self.degraded_count,
+                   recovered_count=self.recovered_count,
+                   unavailable_rejects=self.unavailable_rejects,
+                   snapshot_failures=self.snapshot_failures)
         return out

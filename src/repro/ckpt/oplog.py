@@ -50,6 +50,9 @@ from typing import Iterator, List, NamedTuple, Tuple
 
 import numpy as np
 
+from repro.fault import errors as fault_errors
+from repro.fault.inject import fs_fsync, fs_open
+
 __all__ = ["OpLogWriter", "LogTailer", "OpRecord", "read_segment",
            "read_log", "list_segments", "repair_tail", "trim",
            "SEG_HEADER_BYTES"]
@@ -195,10 +198,10 @@ def repair_tail(directory: str) -> int:
             os.remove(path)
             dropped += size
             continue
-        with open(path, "r+b") as f:
+        with fs_open(path, "r+b") as f:
             f.truncate(valid_end)
             f.flush()
-            os.fsync(f.fileno())
+            fs_fsync(f)
         return dropped + (size - valid_end)
 
 
@@ -243,10 +246,10 @@ class OpLogWriter:
             self.sync()
             self._f.close()
         self._seq = seq
-        self._f = open(_seg_path(self._dir, seq), "xb")
+        self._f = fs_open(_seg_path(self._dir, seq), "xb")
         self._f.write(_SEG_HDR.pack(_SEG_MAGIC, int(base_gen)))
         self._f.flush()
-        os.fsync(self._f.fileno())
+        fs_fsync(self._f)
         self._pos = SEG_HEADER_BYTES
         self._last_span = None
 
@@ -271,16 +274,31 @@ class OpLogWriter:
         """Truncate the last appended record (the apply of its chunk
         failed -- a failed chunk must not survive into recovery)."""
         if self._last_span is None:
-            raise RuntimeError("no record to roll back in this segment")
+            raise fault_errors.WalGap(
+                "no record to roll back in this segment")
         start, _ = self._last_span
         self._f.flush()
         self._f.truncate(start)
         self._f.seek(start)
-        os.fsync(self._f.fileno())
+        fs_fsync(self._f)
         self._pos = start
         self._last_span = None
         self._unsynced = 0
         self.rollbacks += 1
+
+    def discard_tail(self) -> None:
+        """Best-effort truncate back to the last known-good byte boundary
+        after a *failed* append (the record may be partially on disk).
+        Errors are swallowed: the store is entering its degraded path and
+        ``repair_tail`` at re-attach covers whatever this could not."""
+        try:
+            self._f.flush()
+            self._f.truncate(self._pos)
+            self._f.seek(self._pos)
+        except OSError:
+            pass
+        self._last_span = None
+        self._unsynced = 0
 
     def maybe_rotate(self, gen: int) -> bool:
         """Rotate to a fresh segment (header stamped ``gen``) once the
@@ -295,7 +313,7 @@ class OpLogWriter:
         if self._unsynced == 0:
             return
         self._f.flush()
-        os.fsync(self._f.fileno())
+        fs_fsync(self._f)
         self._unsynced = 0
         self.syncs += 1
 
@@ -318,23 +336,38 @@ class LogTailer:
     Keeps a (segment seq, byte offset) cursor.  A torn record at the
     cursor is *pending*, not corrupt -- the writer may still be flushing
     it -- unless a newer segment already exists, which means the writer
-    moved on and the bytes will never complete: that raises.  Segments
-    removed underneath the cursor (``trim`` racing a slow tailer) raise
-    ``FileNotFoundError``; the owner resyncs from a newer snapshot.
+    moved on and the bytes will never complete: that raises
+    :class:`~repro.fault.errors.WalCorrupt`.  Segments removed underneath
+    the cursor (``trim`` racing a slow tailer) raise
+    :class:`~repro.fault.errors.WalTrimmed` -- a resync *signal*, not a
+    failure: every trimmed record is covered by a newer snapshot (that is
+    the trim precondition), so the owner fast-forwards and keeps going.
+    The constructor absorbs the same race itself (segment listed, then
+    trimmed before its header is read) by re-listing.
     """
 
     def __init__(self, directory: str, from_gen: int = 0):
         self._dir = directory
         self._from_gen = int(from_gen)
-        segs = list_segments(directory)
-        if not segs:
-            raise FileNotFoundError(f"no WAL segments in {directory!r}")
-        # start at the last segment whose base_gen <= from_gen: every
-        # record with gen_before >= from_gen lives at or after it
-        start = 0
-        for i, (_, path) in enumerate(segs):
-            if segment_base_gen(path) <= self._from_gen:
-                start = i
+        for _attempt in range(8):
+            segs = list_segments(directory)
+            if not segs:
+                raise FileNotFoundError(
+                    f"no WAL segments in {directory!r}")
+            # start at the last segment whose base_gen <= from_gen: every
+            # record with gen_before >= from_gen lives at or after it
+            start = 0
+            try:
+                for i, (_, path) in enumerate(segs):
+                    if segment_base_gen(path) <= self._from_gen:
+                        start = i
+            except FileNotFoundError:
+                continue  # trim raced the listing: re-list, never raise
+            break
+        else:
+            raise fault_errors.WalTrimmed(
+                f"segments in {directory!r} kept vanishing while "
+                f"seeking generation {from_gen}")
         self._seq = segs[start][0]
         self._offset = SEG_HEADER_BYTES
         self.polled_records = 0
@@ -348,8 +381,13 @@ class LogTailer:
         out: List[OpRecord] = []
         while max_records is None or len(out) < max_records:
             path = _seg_path(self._dir, self._seq)
-            with open(path, "rb") as f:   # raises if trimmed underneath
-                buf = f.read()
+            try:
+                with open(path, "rb") as f:
+                    buf = f.read()
+            except FileNotFoundError as e:  # trimmed underneath us
+                raise fault_errors.WalTrimmed(
+                    f"WAL segment {path!r} was trimmed under the tail "
+                    f"cursor; resync from the covering snapshot") from e
             for end, rec in _scan_records(buf, self._offset):
                 self._offset = end
                 if rec.gen_before >= self._from_gen:
@@ -362,7 +400,7 @@ class LogTailer:
             if not os.path.exists(nxt):
                 break
             if self._offset < len(buf):
-                raise IOError(
+                raise fault_errors.WalCorrupt(
                     f"WAL segment {path!r} has a torn record at offset "
                     f"{self._offset} but a newer segment exists")
             self._seq += 1

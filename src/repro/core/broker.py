@@ -42,6 +42,7 @@ string-kind submits outside ``src/repro/core``).
 from __future__ import annotations
 
 import threading
+import time
 from concurrent.futures import Future
 from concurrent.futures import TimeoutError as _FutureTimeout
 from typing import Dict, List, NamedTuple, Sequence, Set
@@ -49,6 +50,8 @@ from typing import Dict, List, NamedTuple, Sequence, Set
 import numpy as np
 
 from repro.core import service as svc_mod
+from repro.fault import errors as fault_errors
+from repro.fault.inject import maybe_stall
 
 __all__ = ["QueryBroker"]
 
@@ -109,7 +112,7 @@ class QueryBroker:
         fut: Future = Future()
         with self._cv:
             if self._stopping:
-                raise RuntimeError("QueryBroker is stopped")
+                raise fault_errors.BrokerStopped("QueryBroker is stopped")
             self._pending[kind].append(_Req(u, v, int(min_gen), fut))
             self._cv.notify()
         return fut
@@ -150,7 +153,8 @@ class QueryBroker:
         t = self._thread
         return t is not None and t.is_alive()
 
-    def resolve(self, fut: Future, min_gen: int = 0) -> svc_mod.Snapshot:
+    def resolve(self, fut: Future, min_gen: int = 0,
+                timeout: float | None = None) -> svc_mod.Snapshot:
         """Drive ``fut`` to completion and return its Snapshot.
 
         With a dispatcher running this just waits.  In inline mode some
@@ -159,8 +163,17 @@ class QueryBroker:
         (a concurrent flush may already have taken the request, in which
         case our flush is a cheap no-op and ``result()`` waits for the
         other one).
+
+        ``timeout`` bounds the whole wait; expiry raises
+        :class:`~repro.fault.errors.DeadlineExceeded` (the request stays
+        queued -- it is read-only, so a late answer is simply dropped).
         """
+        deadline = None if timeout is None else time.monotonic() + timeout
         while not fut.done() and not self.dispatching:
+            if deadline is not None and time.monotonic() >= deadline:
+                raise fault_errors.DeadlineExceeded(
+                    f"query unresolved after {timeout:.3f}s "
+                    f"(floor {min_gen}, committed {self._svc.gen})")
             if min_gen:
                 self._svc.wait_for_gen(min_gen, timeout=0.5)
             served = self.flush()
@@ -177,6 +190,14 @@ class QueryBroker:
                     return fut.result(timeout=0.05)
                 except _FutureTimeout:
                     continue
+        if deadline is not None:
+            try:
+                return fut.result(
+                    timeout=max(0.0, deadline - time.monotonic()))
+            except _FutureTimeout:
+                raise fault_errors.DeadlineExceeded(
+                    f"query unresolved after {timeout:.3f}s "
+                    f"(floor {min_gen})") from None
         return fut.result()
 
     # ---------------------------------------------------------- flushing --
@@ -186,6 +207,7 @@ class QueryBroker:
         committed snapshot covers; returns the number of point queries
         served.  Requests still waiting on a commit are re-queued (or
         failed, with ``fail_waiting=True`` -- the stop path)."""
+        maybe_stall("broker_flush")
         with self._cv:
             batch = {k: reqs for k, reqs in self._pending.items() if reqs}
             for k in batch:
@@ -220,7 +242,7 @@ class QueryBroker:
                 for _, r in waiting:
                     self._waited.discard(r.fut)
                     if not r.fut.done():
-                        r.fut.set_exception(RuntimeError(
+                        r.fut.set_exception(fault_errors.BrokerStopped(
                             f"QueryBroker stopped before generation "
                             f"{r.min_gen} committed (at {gen})"))
             else:
@@ -324,7 +346,8 @@ class QueryBroker:
             self._waited.clear()
         for fut in leftovers:
             if not fut.done():
-                fut.set_exception(RuntimeError("QueryBroker stopped"))
+                fut.set_exception(
+                    fault_errors.BrokerStopped("QueryBroker stopped"))
 
     def _run(self):
         while True:

@@ -24,6 +24,21 @@ hides replication lag, which is where the replica-count throughput
 scaling in ``benchmarks/bench_stream.py`` comes from.  A replica that
 finds the log trimmed underneath its cursor (the writer snapshotted and
 dropped old segments) resyncs from the newest snapshot and keeps going.
+
+Failure domains (PR 9 hardening; docs/ARCHITECTURE.md §Failure
+domains): routing only considers *healthy* replicas -- one whose tail
+loop died, was :meth:`Replica.kill`-ed by fault injection, or has
+missed ``health_misses`` consecutive poll deadlines is quarantined.  A
+query in flight on a replica that dies fails over transparently: the
+dead broker releases the future with a typed
+:class:`~repro.fault.errors.BrokerStopped` and the set resubmits it to
+a healthy peer (queries are read-only, so a resubmit is always safe).
+With ``supervise=True`` a supervisor thread restarts dead replicas via
+snapshot fast-forward -- a fresh :class:`Replica` bootstraps from the
+newest snapshot exactly like ``_resync``, so recovery time is one
+snapshot restore, not a full log replay.  With no healthy replica at
+all, ``submit`` raises :class:`~repro.fault.errors.Unavailable` with a
+``retry_after`` of one poll interval.
 """
 from __future__ import annotations
 
@@ -31,12 +46,14 @@ import itertools
 import threading
 import time
 from concurrent.futures import Future
-from typing import Dict, List, Sequence
+from concurrent.futures import TimeoutError as _FutureTimeout
+from typing import Dict, List, Sequence, Tuple
 
 from repro.ckpt import checkpoint, oplog
 from repro.ckpt.durable import decision_kwargs, snap_dir, wal_dir
 from repro.core.broker import QueryBroker
 from repro.core.service import SCCService
+from repro.fault import errors as fault_errors
 
 __all__ = ["Replica", "ReplicaSet"]
 
@@ -53,13 +70,18 @@ class Replica:
                  query_buckets: Sequence[int] = (64, 256, 1024),
                  poll_interval: float = 0.002, poll_offset: float = 0.0,
                  max_records_per_poll: int | None = 64,
-                 auto_tail: bool = True, **service_kwargs):
+                 auto_tail: bool = True, health_misses: int = 25,
+                 stale_floor_s: float = 2.0, **service_kwargs):
         self._dir = directory
         self.replica_id = replica_id
         self._poll_interval = poll_interval
         self._poll_offset = poll_offset
         self._max_records = max_records_per_poll
         self._service_kwargs = service_kwargs
+        self._health_misses = health_misses
+        self._stale_floor_s = stale_floor_s
+        self._killed = False
+        self._last_tick = time.monotonic()
         st, cfg, meta, _ = checkpoint.restore_graph_snapshot(
             snap_dir(directory))
         if st is None:
@@ -99,6 +121,35 @@ class Replica:
     def wait_for_gen(self, gen: int, timeout: float | None = None) -> int:
         return self._svc.wait_for_gen(gen, timeout)
 
+    @property
+    def healthy(self) -> bool:
+        """Routing health: False once the replica was killed, its tail
+        loop died on an error, or (with a tail thread) it has missed
+        ``health_misses`` consecutive poll deadlines -- the quarantine
+        signal.  The miss threshold is floored at ``stale_floor_s`` so a
+        one-off long apply (first-touch compiles) does not flap it."""
+        if self._killed or self.error is not None:
+            return False
+        t = self._thread
+        if t is None:
+            return True  # manual mode: driven explicitly, never stale
+        if not t.is_alive():
+            return False
+        stale = max(self._health_misses * self._poll_interval,
+                    self._stale_floor_s)
+        return (time.monotonic() - self._last_tick) < stale
+
+    def kill(self):
+        """Fault injection: 'crash' this replica abruptly.  The tail
+        loop is told to exit (not joined -- the kill point must not wait
+        on a mid-apply tick), routing health flips False immediately,
+        and the broker releases every parked future with a typed
+        :class:`~repro.fault.errors.BrokerStopped` (the ReplicaSet's
+        failover signal)."""
+        self._killed = True
+        self._stop.set()
+        self.broker.stop()
+
     def next_tick_eta(self) -> float:
         """Seconds until this replica's next scheduled WAL pull
         (``inf`` without a tail thread) -- the routing signal for
@@ -121,9 +172,12 @@ class Replica:
             max_records = self._max_records
         try:
             records = self._tailer.poll(max_records)
-        except (FileNotFoundError, IOError):
+        except (FileNotFoundError, IOError, fault_errors.WalTrimmed,
+                fault_errors.WalCorrupt):
             # segments trimmed underneath the cursor (or writer-side
-            # corruption): jump forward via the newest snapshot
+            # corruption): a resync *signal*, never a failure -- jump
+            # forward via the newest snapshot (it covers everything a
+            # trim dropped; that is the trim precondition)
             self._resync()
             return 0
         n = 0
@@ -186,6 +240,7 @@ class Replica:
             except BaseException as e:  # surfaced via stats/stop
                 self.error = e
                 return
+            self._last_tick = time.monotonic()  # health heartbeat
             now = time.monotonic()
             phase = (now - self._poll_offset) / period
             next_tick = (int(phase) + 1) * period + self._poll_offset
@@ -200,12 +255,23 @@ class Replica:
         if self.error is not None:
             raise self.error
 
+    def shutdown(self) -> BaseException | None:
+        """Quarantine-path stop: like :meth:`stop` but never raises --
+        the supervisor tears down an already-failed replica and needs
+        the error as a value, not a crash of its own loop."""
+        try:
+            self.stop()
+        except BaseException as e:
+            return e
+        return None
+
     def stats(self) -> dict:
         out = {f"replica{self.replica_id}_{k}": val
                for k, val in self.broker.stats().items()}
         out[f"replica{self.replica_id}_gen"] = self.gen
         out[f"replica{self.replica_id}_applied"] = self.applied_records
         out[f"replica{self.replica_id}_resyncs"] = self.resyncs
+        out[f"replica{self.replica_id}_healthy"] = self.healthy
         return out
 
 
@@ -222,61 +288,175 @@ class ReplicaSet:
     def __init__(self, directory: str, n: int = 2, *,
                  query_buckets: Sequence[int] = (64, 256, 1024),
                  poll_interval: float = 0.002,
-                 auto_tail: bool = True, **replica_kwargs):
+                 auto_tail: bool = True, supervise: bool = False,
+                 health_check_s: float | None = None,
+                 max_restarts: int = 8, **replica_kwargs):
         assert n >= 1
+        self._dir = directory
+        self._n = n
+        self._query_buckets = query_buckets
+        self._poll_interval = poll_interval
+        self._auto_tail = auto_tail
+        self._replica_kwargs = replica_kwargs
         self.replicas: List[Replica] = [
-            Replica(directory, i, query_buckets=query_buckets,
-                    poll_interval=poll_interval,
-                    poll_offset=i * poll_interval / n,
-                    auto_tail=auto_tail, **replica_kwargs)
-            for i in range(n)]
+            self._spawn_replica(i) for i in range(n)]
         self._rr = itertools.count()
-        self._owner: Dict[Future, QueryBroker] = {}
+        self._owner: Dict[Future, Tuple[Replica, str, object, object,
+                                        int]] = {}
         self._lock = threading.Lock()
+        self._stopped = False
         self.routed_fresh = 0
         self.routed_stale = 0
+        self.quarantined = 0
+        self.restarts = 0
+        self.failovers = 0
+        self._max_restarts = max_restarts
+        self._health_check_s = health_check_s if health_check_s \
+            is not None else max(4 * poll_interval, 0.02)
+        self._sup_stop = threading.Event()
+        self._sup_thread: threading.Thread | None = None
+        if supervise:
+            self._sup_thread = threading.Thread(
+                target=self._supervise, name="scc-replica-supervisor",
+                daemon=True)
+            self._sup_thread.start()
+
+    def _spawn_replica(self, i: int) -> Replica:
+        return Replica(self._dir, i, query_buckets=self._query_buckets,
+                       poll_interval=self._poll_interval,
+                       poll_offset=i * self._poll_interval / self._n,
+                       auto_tail=self._auto_tail, **self._replica_kwargs)
+
+    # -------------------------------------------------------- supervisor --
+
+    def _supervise(self):
+        """Quarantine dead replicas and restart them via snapshot
+        fast-forward: a replacement :class:`Replica` bootstraps from the
+        newest snapshot (the same forward-only jump as ``_resync``) and
+        tails from there -- recovery cost is one snapshot restore."""
+        while not self._sup_stop.wait(self._health_check_s):
+            for i, rep in enumerate(list(self.replicas)):
+                if rep.healthy or self._stopped:
+                    continue
+                self.quarantined += 1
+                rep.shutdown()  # releases parked waiters, typed
+                if self.restarts >= self._max_restarts:
+                    continue
+                try:
+                    fresh = self._spawn_replica(i)
+                except Exception:
+                    continue  # store unreadable right now; next tick
+                with self._lock:
+                    if self._stopped:  # raced a stop(): tear it down
+                        fresh.shutdown()
+                        continue
+                    self.replicas[i] = fresh
+                self.restarts += 1
+
+    @property
+    def healthy_replicas(self) -> List[Replica]:
+        return [r for r in self.replicas if r.healthy]
 
     # ------------------------------------------------- broker interface ---
 
     def submit(self, kind: str, u, v=None, min_gen: int = 0) -> Future:
-        fresh = [r for r in self.replicas if r.gen >= min_gen]
-        if fresh:
-            rep = fresh[next(self._rr) % len(fresh)]
-            self.routed_fresh += 1
-        else:
-            # nobody fresh yet.  The floor comes from an acked write, so
-            # its WAL record is already durable: EVERY tailing replica
-            # will cover it at its next pull tick -- route to the replica
-            # whose tick lands first (staggered sets: ~period/N away),
-            # not the currently-most-caught-up one (it pulled most
-            # recently, so its next tick is the FURTHEST away).  Without
-            # tail threads (manual tests) etas are inf and the key falls
-            # back to the most caught-up replica.
-            rep = min(self.replicas,
-                      key=lambda r: (r.next_tick_eta(), -r.gen))
-            self.routed_stale += 1
-        fut = rep.broker.submit(kind, u, v, min_gen=min_gen)
-        with self._lock:
-            self._owner[fut] = rep.broker
-        return fut
+        for _attempt in range(self._n + 2):
+            if self._stopped:
+                raise fault_errors.BrokerStopped("ReplicaSet is stopped")
+            healthy = self.healthy_replicas
+            if not healthy:
+                raise fault_errors.Unavailable(
+                    "no healthy replica (all killed/quarantined); "
+                    "supervisor restart pending",
+                    retry_after=max(self._health_check_s,
+                                    self._poll_interval))
+            fresh = [r for r in healthy if r.gen >= min_gen]
+            if fresh:
+                rep = fresh[next(self._rr) % len(fresh)]
+            else:
+                # nobody fresh yet.  The floor comes from an acked
+                # write, so its WAL record is already durable: EVERY
+                # tailing replica will cover it at its next pull tick --
+                # route to the replica whose tick lands first (staggered
+                # sets: ~period/N away), not the currently-most-caught-
+                # up one (it pulled most recently, so its next tick is
+                # the FURTHEST away).  Without tail threads (manual
+                # tests) etas are inf and the key falls back to the most
+                # caught-up replica.
+                rep = min(healthy,
+                          key=lambda r: (r.next_tick_eta(), -r.gen))
+            try:
+                fut = rep.broker.submit(kind, u, v, min_gen=min_gen)
+            except fault_errors.BrokerStopped:
+                continue  # replica died between the health check and
+                # the submit: pick again among the survivors
+            if fresh:
+                self.routed_fresh += 1
+            else:
+                self.routed_stale += 1
+            with self._lock:
+                self._owner[fut] = (rep, kind, u, v, min_gen)
+            return fut
+        raise fault_errors.Unavailable(
+            "replica routing did not converge (replicas dying faster "
+            "than the supervisor restarts them)",
+            retry_after=self._health_check_s)
 
-    def resolve(self, fut: Future, min_gen: int = 0):
-        with self._lock:
-            broker = self._owner.pop(fut, None)
-        if broker is None or broker.dispatching:
-            return fut.result()
-        return broker.resolve(fut, min_gen=min_gen)
+    def resolve(self, fut: Future, min_gen: int = 0,
+                timeout: float | None = None):
+        """Resolve with transparent failover: when the owning replica
+        dies mid-flight (its broker releases the future with a typed
+        ``BrokerStopped``), the query -- read-only, hence always safe to
+        re-issue -- is resubmitted to a healthy peer.  Bounded attempts;
+        ``Unavailable`` surfaces when no peer is left."""
+        deadline = None if timeout is None else \
+            time.monotonic() + timeout
+        for _attempt in range(self._n + 2):
+            with self._lock:
+                owner = self._owner.pop(fut, None)
+            remaining = None if deadline is None else \
+                max(0.0, deadline - time.monotonic())
+            try:
+                if owner is None:
+                    return fut.result(timeout=remaining)
+                rep = owner[0]
+                if rep.broker.dispatching:
+                    return fut.result(timeout=remaining)
+                return rep.broker.resolve(fut, min_gen=min_gen,
+                                          timeout=remaining)
+            except fault_errors.BrokerStopped:
+                if owner is None:
+                    raise  # nothing recorded to replay it from
+                self.failovers += 1
+                _, kind, u, v, mg = owner
+                fut = self.submit(kind, u, v, min_gen=mg)
+            except _FutureTimeout:
+                raise fault_errors.DeadlineExceeded(
+                    f"replica query unresolved after {timeout:.3f}s"
+                ) from None
+        raise fault_errors.Unavailable(
+            "query failover did not converge",
+            retry_after=self._health_check_s)
 
     @property
     def dispatching(self) -> bool:
         return any(r.broker.dispatching for r in self.replicas)
 
     def stop(self):
+        """Stop the supervisor, then every replica.  All parked waiters
+        are released with typed errors by the per-replica broker stops
+        (``BrokerStopped``); replica tail errors surface afterwards --
+        kills injected by a fault plan are expected and not re-raised."""
+        with self._lock:
+            self._stopped = True
+        self._sup_stop.set()
+        if self._sup_thread is not None:
+            self._sup_thread.join()
+            self._sup_thread = None
         errors = []
         for r in self.replicas:
-            try:
-                r.stop()
-            except BaseException as e:
+            e = r.shutdown()
+            if e is not None:
                 errors.append(e)
         if errors:
             raise errors[0]
@@ -291,19 +471,26 @@ class ReplicaSet:
 
     @property
     def min_gen(self) -> int:
-        return min(r.gen for r in self.replicas)
+        reps = self.healthy_replicas or self.replicas
+        return min(r.gen for r in reps)
 
     def wait_all_for_gen(self, gen: int, timeout: float | None = None):
-        """Block until every replica has tailed to ``gen`` (test/bench
-        convergence barrier)."""
+        """Block until every *healthy* replica has tailed to ``gen``
+        (test/bench convergence barrier; dead replicas would never get
+        there and must not hang the caller)."""
         for r in self.replicas:
-            r.wait_for_gen(gen, timeout)
+            if r.healthy:
+                r.wait_for_gen(gen, timeout)
         return self.min_gen
 
     def stats(self) -> dict:
         out = {"replicas": len(self.replicas),
+               "healthy": len(self.healthy_replicas),
                "routed_fresh": self.routed_fresh,
                "routed_stale": self.routed_stale,
+               "quarantined": self.quarantined,
+               "restarts": self.restarts,
+               "failovers": self.failovers,
                "served": sum(r.broker.served for r in self.replicas),
                "flushes": sum(r.broker.flushes for r in self.replicas),
                "gen_waits": sum(r.broker.gen_waits

@@ -71,6 +71,7 @@ import numpy as np
 
 from repro.core import community, dynamic, edge_table as et
 from repro.core import graph_state as gs
+from repro.fault import errors as fault_errors
 
 _MAX_GROW_ROUNDS = 16
 
@@ -232,6 +233,14 @@ class SCCService:
         # one service) + commit notification for consistency-level waits
         self._apply_lock = threading.RLock()
         self._commit_cv = threading.Condition()
+        # idempotent re-submit window: per client session, the last
+        # applied (seq, ok, gen) -- a retried chunk whose first attempt
+        # actually committed (the ack was lost to a fault downstream)
+        # returns the recorded result instead of double-applying
+        self._session_results: collections.OrderedDict = \
+            collections.OrderedDict()
+        self._session_window = 4096
+        self.deduped_resubmits = 0
         # telemetry
         self._compiled: set = set()
         self.grow_count = 0
@@ -285,11 +294,28 @@ class SCCService:
 
     # ---------------------------------------------------------- updates ---
 
-    def _apply_ops(self, kind, u, v):
+    def _apply_ops(self, kind, u, v, *, session=None, seq=None):
         """GraphClient entry: apply a chunk and report the commit gen it
-        is covered by, atomically w.r.t. concurrent client sessions."""
+        is covered by, atomically w.r.t. concurrent client sessions.
+
+        ``(session, seq)`` is the client's idempotency key: a re-submit
+        of the session's last applied sequence number returns the
+        recorded (ok, gen) without re-applying -- the retry safety net
+        when an ack is lost to a downstream fault.  The window is one
+        chunk deep per session, which is exactly what a serial retrying
+        client needs (it never has two chunks in flight)."""
         with self._apply_lock:
+            if session is not None:
+                hit = self._session_results.get(session)
+                if hit is not None and hit[0] == seq:
+                    self.deduped_resubmits += 1
+                    return hit[1], hit[2]
             ok = self._apply_chunk(kind, u, v)
+            if session is not None:
+                self._session_results[session] = (seq, ok, self.gen)
+                self._session_results.move_to_end(session)
+                while len(self._session_results) > self._session_window:
+                    self._session_results.popitem(last=False)
             return ok, self.gen
 
     _STAT_ATTRS = ("grow_count", "proactive_grows", "replayed_ops",
@@ -567,8 +593,9 @@ class SCCService:
     def _apply_padded(self, ops: dynamic.OpBatch, depth: int = 0
                       ) -> np.ndarray:
         if depth > _MAX_GROW_ROUNDS:
-            raise RuntimeError("grow-and-replay did not converge; "
-                               "max_edge_capacity too small for workload?")
+            raise fault_errors.CapacityExhausted(
+                "grow-and-replay did not converge; "
+                "max_edge_capacity too small for workload?")
         self._compiled.add((int(ops.kind.shape[0]), self._cfg))
         self._state, ok_dev, ovf_dev, rstats = dynamic.apply_batch_async(
             self._state, ops, self._cfg)
@@ -641,7 +668,7 @@ class SCCService:
         live_before, _ = et.fill_stats(self._state.edges)
         for _ in range(_MAX_GROW_ROUNDS):
             if self._max_edge_capacity and cap > self._max_edge_capacity:
-                raise RuntimeError(
+                raise fault_errors.CapacityExhausted(
                     f"edge table would exceed max_edge_capacity "
                     f"({cap} > {self._max_edge_capacity})")
             table = _rehash(self._state.edges, cap, self._cfg.max_probes,
@@ -651,8 +678,9 @@ class SCCService:
                 self._live_ub = int(live_after)  # sync already paid
                 return table, cap
             cap *= self._grow_factor
-        raise RuntimeError("table migration kept losing edges; "
-                           "max_probes too small for workload?")
+        raise fault_errors.CapacityExhausted(
+            "table migration kept losing edges; "
+            "max_probes too small for workload?")
 
     def _maybe_compact(self):
         _, tomb = et.fill_stats(self._state.edges)
@@ -751,4 +779,5 @@ class SCCService:
             "repair_skipped_steps": self.repair_tier_steps["skipped"],
             "repair_region_v_max": self.repair_region_v_max,
             "repair_region_e_max": self.repair_region_e_max,
+            "deduped_resubmits": self.deduped_resubmits,
         }

@@ -1,0 +1,18 @@
+"""Fault-injection layer + structured error taxonomy.
+
+:mod:`repro.fault.errors` -- the typed errors every serving layer raises
+(retryability + ``retry_after`` drive ``GraphClient``'s retry loop).
+:mod:`repro.fault.inject` -- seeded :class:`FaultPlan` schedules and the
+filesystem / replica-kill / stall injection shims the chaos driver
+(:mod:`repro.launch.chaos`) arms against a live service.
+"""
+from repro.fault.errors import (BrokerStopped, CapacityExhausted,
+                                DeadlineExceeded, FaultError, Unavailable,
+                                WalCorrupt, WalGap, WalTrimmed)
+from repro.fault.inject import (FaultPlan, FsFault, ReplicaKill, Stall,
+                                active_plan, clear, injected, install)
+
+__all__ = ["FaultError", "Unavailable", "DeadlineExceeded",
+           "BrokerStopped", "CapacityExhausted", "WalGap", "WalTrimmed",
+           "WalCorrupt", "FaultPlan", "FsFault", "ReplicaKill", "Stall",
+           "install", "clear", "injected", "active_plan"]

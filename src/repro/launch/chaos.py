@@ -1,0 +1,366 @@
+"""Chaos soak: recorded op stream under a seeded fault plan.
+
+The durability suite proves recovery from a *single* crash point; this
+driver holds the serving stack's failure-domain contract under a whole
+schedule of faults injected **while serving** (:mod:`repro.fault`):
+WAL write/fsync faults (EIO / ENOSPC / torn records) that flip the
+writer DEGRADED mid-stream, and replica kills that force query failover
+and supervisor restarts.  One soak run asserts, for a seeded
+:class:`~repro.fault.inject.FaultPlan`:
+
+* **no acked op is ever lost** -- the writer's final state is
+  bit-identical to an in-memory oracle replaying exactly the
+  acknowledged chunks, and so is a cold :meth:`DurableService.open` of
+  the store afterwards (a chunk the client saw fail was never applied;
+  a chunk the client saw ack survives every injected fault);
+* **every failure is typed** -- a client only ever observes
+  :class:`~repro.fault.errors.FaultError` subclasses (``Unavailable``,
+  ``DeadlineExceeded``, ...); any bare exception is a violation;
+* **availability never reaches zero while a replica is healthy** -- a
+  per-round query probe through the :class:`ReplicaSet` must keep
+  answering (transparent failover + supervisor restarts) whenever at
+  least one replica is routable;
+* **the store heals under fire** -- the plan's fault windows are
+  finite, so the writer's rate-limited recovery probes must re-attach
+  the WAL and return to HEALTHY *while the plan is still armed*.
+
+Determinism: the fault *schedule* is a pure function of (seed,
+profile) and fires on call/generation counters, not wall clock, so a
+failing seed reproduces (thread interleavings still vary, but every
+assertion above is interleaving-independent).
+
+``--availability`` runs the companion windowed bench
+(:func:`run_availability`): closed-loop query throughput in a steady
+window vs a window where a replica is killed and supervisor-restarted;
+``benchmarks/bench_stream.py`` records the ratio and ``scripts/ci.sh``
+gates it.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import os
+import sys
+import tempfile
+import time
+
+__all__ = ["run_chaos_soak", "run_availability"]
+
+
+def run_chaos_soak(directory: str, *, seed: int = 0,
+                   profile: str = "mixed", n_chunks: int = 40,
+                   chunk: int = 16, nv: int = 192, replicas: int = 2,
+                   poll_interval: float = 0.02, n_queries: int = 8,
+                   deadline_s: float = 8.0) -> dict:
+    """One soak run; returns a report dict whose ``violations`` list is
+    empty iff every contract held (the driver never raises for a fault
+    outcome -- only for harness bugs)."""
+    import jax
+    import numpy as np
+
+    from repro.api import GraphClient, SameSCC
+    from repro.api.ops import encode_updates
+    from repro.ckpt.durable import DurableService, HEALTHY
+    from repro.core import graph_state as gs
+    from repro.core.replicas import ReplicaSet
+    from repro.core.service import SCCService
+    from repro.fault import errors as fault_errors
+    from repro.fault.inject import FaultPlan, fire_kills, injected
+    from repro.launch.replica import _writer_config
+    from repro.launch.stream import typed_op_stream
+
+    cfg = _writer_config(nv, edge_capacity=2048)
+    writer = DurableService(
+        cfg, directory, state=gs.all_singletons(cfg), buckets=(chunk,),
+        proactive_grow=True, sync_every=1, segment_bytes=16 << 10,
+        snapshot_every=8, snapshot_keep=4, recover_probe_s=0.01)
+    rset = ReplicaSet(directory, replicas, query_buckets=(n_queries,),
+                      poll_interval=poll_interval, supervise=True,
+                      health_check_s=0.05)
+    wclient = GraphClient(writer, deadline_s=deadline_s, max_retries=64,
+                          backoff_base_s=0.002, backoff_cap_s=0.05)
+    rclient = GraphClient(writer, broker=rset, deadline_s=deadline_s,
+                          max_retries=16, backoff_base_s=0.002,
+                          backoff_cap_s=0.05)
+    rng = np.random.default_rng(seed + 101)
+
+    acked: list = []  # the ledger the oracle replays
+    failed: list = []
+    violations: list = []
+
+    # warm the compiled update/query paths off the fault clock -- the
+    # warm chunk is acked, so it joins the ledger like any other
+    warm = typed_op_stream(nv, chunk, step=1 << 20, add_frac=0.7,
+                           seed=seed)
+    wclient.submit_many(warm)
+    acked.append(warm)
+    rclient.submit_many([SameSCC(0, 1)] * n_queries)
+
+    plan = FaultPlan.generate(seed, profile, replicas=replicas,
+                              horizon_gens=n_chunks)
+    probe_ok = probe_fail = 0
+    with injected(plan):
+        for step in range(n_chunks):
+            ops = typed_op_stream(nv, chunk, step=step, add_frac=0.7,
+                                  seed=seed)
+            try:
+                wclient.submit_many(ops)
+                acked.append(ops)
+            except fault_errors.FaultError as e:
+                failed.append(type(e).__name__)  # typed reject: fine
+            except Exception as e:  # contract breach: must be typed
+                failed.append(type(e).__name__)
+                violations.append(
+                    f"untyped writer failure at step {step}: "
+                    f"{type(e).__name__}: {e}")
+            fire_kills(plan, rset, writer.gen)
+            qu = rng.integers(0, nv, n_queries)
+            qv = rng.integers(0, nv, n_queries)
+            try:
+                rclient.submit_many([SameSCC(int(a), int(b))
+                                     for a, b in zip(qu, qv)])
+                probe_ok += 1
+            except fault_errors.FaultError:
+                probe_fail += 1
+                if rset.healthy_replicas:
+                    violations.append(
+                        f"query probe failed at step {step} with "
+                        f"{len(rset.healthy_replicas)} healthy replicas")
+            except Exception as e:
+                probe_fail += 1
+                violations.append(
+                    f"untyped reader failure at step {step}: "
+                    f"{type(e).__name__}: {e}")
+        # heal under fire: fault windows are finite counters, so
+        # repeated probes must re-attach the WAL with the plan armed
+        heal_deadline = time.monotonic() + 10.0
+        while writer.health != HEALTHY and \
+                time.monotonic() < heal_deadline:
+            writer.probe_recovery()
+            time.sleep(0.01)
+        if writer.health != HEALTHY:
+            violations.append(
+                "store did not recover after the fault window "
+                f"(stuck on: {writer._degraded_error})")
+
+    final_gen = writer.gen
+    final_state = writer.state
+    writer_stats = writer.stats()
+    try:
+        rset.wait_all_for_gen(final_gen, timeout=10.0)
+        rs_stats = rset.stats()
+        rset.stop()
+    except Exception as e:
+        rs_stats = {"failovers": -1, "restarts": -1}
+        violations.append(
+            f"replica teardown raised: {type(e).__name__}: {e}")
+    writer.close()
+
+    # oracle: replay exactly the acked chunks through a plain in-memory
+    # service with the writer's decision knobs -- acked ops and nothing
+    # else must reproduce the writer bit-for-bit
+    oracle = SCCService(cfg, state=gs.all_singletons(cfg),
+                        buckets=(chunk,), proactive_grow=True)
+    for ops in acked:
+        kind, u, v = encode_updates(ops)
+        oracle._apply_ops(kind, u, v)
+    if oracle.gen != final_gen:
+        violations.append(
+            f"acked-op oracle at gen {oracle.gen}, writer at "
+            f"{final_gen}: an op was lost or double-applied")
+    else:
+        for a, b in zip(jax.tree_util.tree_leaves(final_state),
+                        jax.tree_util.tree_leaves(oracle.state)):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                violations.append(
+                    "writer state diverged from the acked-op oracle")
+                break
+
+    # cold disk recovery must land on the same state (plan disarmed:
+    # this checks what the faults left on disk, not new faults)
+    reopened = DurableService.open(directory, snapshot_every=0)
+    if reopened.gen != oracle.gen:
+        violations.append(
+            f"disk recovery at gen {reopened.gen}, oracle at "
+            f"{oracle.gen}: durability lost an acked op")
+    else:
+        for a, b in zip(jax.tree_util.tree_leaves(reopened.state),
+                        jax.tree_util.tree_leaves(oracle.state)):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                violations.append(
+                    "disk recovery diverged from the acked-op oracle")
+                break
+    reopened.close()
+
+    return {
+        "seed": seed, "profile": profile,
+        "chunks": n_chunks + 1, "acked": len(acked),
+        "failed": failed, "gen": final_gen,
+        "fs_faults_planned": len(plan.fs),
+        "fs_triggered": len(plan.triggered),
+        "kills_planned": len(plan.kills),
+        "kills_fired": len(plan._fired_kills),
+        "probe_ok": probe_ok, "probe_fail": probe_fail,
+        "degraded": writer_stats["degraded_count"],
+        "recovered": writer_stats["recovered_count"],
+        "rejects": writer_stats["unavailable_rejects"],
+        "client_retries": wclient.retries + rclient.retries,
+        "failovers": rs_stats["failovers"],
+        "restarts": rs_stats["restarts"],
+        "violations": violations,
+    }
+
+
+def run_availability(directory: str | None = None, *,
+                     replicas: int = 2, nv: int = 256, chunk: int = 32,
+                     preload_chunks: int = 8, n_queries: int = 32,
+                     window_s: float = 0.8,
+                     poll_interval: float = 0.02,
+                     seed: int = 0) -> dict:
+    """Windowed availability bench: closed-loop query throughput in a
+    steady window vs a window opened by killing a replica (the
+    supervisor restarts it mid-window).  A closed-loop caller is
+    latency-bound, so the ratio should stay near 1.0 -- failover costs
+    one resubmit, not a replica's worth of throughput; ``ci.sh`` gates
+    ``ratio >= 0.5``."""
+    import shutil
+
+    import numpy as np
+
+    from repro.api import GraphClient, SameSCC
+    from repro.ckpt.durable import DurableService
+    from repro.core import graph_state as gs
+    from repro.core.replicas import ReplicaSet
+    from repro.fault import errors as fault_errors
+    from repro.launch.replica import _writer_config
+    from repro.launch.stream import typed_op_stream
+
+    owns_dir = directory is None
+    if owns_dir:
+        directory = tempfile.mkdtemp(prefix="scc-avail-")
+    cfg = _writer_config(nv, edge_capacity=2048)
+    writer = DurableService(
+        cfg, directory, state=gs.all_singletons(cfg), buckets=(chunk,),
+        proactive_grow=True, sync_every=1, snapshot_every=0)
+    wclient = GraphClient(writer)
+    for step in range(preload_chunks):
+        wclient.submit_many(typed_op_stream(nv, chunk, step=step,
+                                            add_frac=0.7, seed=seed))
+    rset = ReplicaSet(directory, replicas, query_buckets=(n_queries,),
+                      poll_interval=poll_interval, supervise=True,
+                      health_check_s=0.05)
+    rclient = GraphClient(writer, broker=rset, deadline_s=4.0,
+                          max_retries=16)
+    rng = np.random.default_rng(seed + 11)
+    batch = [SameSCC(int(a), int(b))
+             for a, b in zip(rng.integers(0, nv, n_queries),
+                             rng.integers(0, nv, n_queries))]
+    rclient.submit_many(batch)  # compile warmup off the clock
+
+    def window(duration: float):
+        served = faults = 0
+        t_end = time.perf_counter() + duration
+        while time.perf_counter() < t_end:
+            try:
+                rclient.submit_many(batch)
+                served += n_queries
+            except fault_errors.FaultError:
+                faults += 1
+        return served, faults
+
+    try:
+        steady_q, steady_faults = window(window_s)
+        rset.replicas[0].kill()
+        faulted_q, faulted_faults = window(window_s)
+        stats = rset.stats()
+    finally:
+        rset.stop()
+        writer.close()
+        if owns_dir:
+            shutil.rmtree(directory, ignore_errors=True)
+    steady = steady_q / window_s
+    faulted = faulted_q / window_s
+    return {
+        "replicas": replicas, "window_s": window_s,
+        "steady_per_s": int(steady), "faulted_per_s": int(faulted),
+        "ratio": round(faulted / max(steady, 1e-9), 4),
+        "steady_faults": steady_faults,
+        "faulted_faults": faulted_faults,
+        "failovers": stats["failovers"], "restarts": stats["restarts"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default=None,
+                    help="keep per-run stores under this root "
+                         "(default: throwaway temp dirs)")
+    ap.add_argument("--seeds", default="0,1,2")
+    ap.add_argument("--profiles", default="mixed",
+                    help="comma list of disk-fault|replica-kill|mixed")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for the CI gate")
+    ap.add_argument("--chunks", type=int, default=None)
+    ap.add_argument("--nv", type=int, default=None)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--availability", action="store_true",
+                    help="run the availability-window bench instead")
+    args = ap.parse_args()
+    if args.availability:
+        rep = run_availability(replicas=args.replicas)
+        print("availability: " + " | ".join(f"{k}={v}"
+                                            for k, v in rep.items()))
+        if rep["ratio"] < 0.5:
+            sys.exit("availability ratio below 0.5")
+        return
+
+    seeds = [int(s) for s in args.seeds.split(",") if s]
+    profiles = [p for p in args.profiles.split(",") if p]
+    nv = args.nv or (160 if args.smoke else 384)
+    n_chunks = args.chunks or (28 if args.smoke else 64)
+    bad = 0
+    fs_trig = kills = 0
+    for seed, profile in itertools.product(seeds, profiles):
+        if args.dir:
+            d = os.path.join(args.dir, f"s{seed}-{profile}")
+            os.makedirs(d, exist_ok=True)
+            rep = run_chaos_soak(d, seed=seed, profile=profile,
+                                 n_chunks=n_chunks, nv=nv,
+                                 replicas=args.replicas)
+        else:
+            with tempfile.TemporaryDirectory(
+                    prefix=f"scc-chaos-s{seed}-") as d:
+                rep = run_chaos_soak(d, seed=seed, profile=profile,
+                                     n_chunks=n_chunks, nv=nv,
+                                     replicas=args.replicas)
+        print(f"seed={seed} profile={profile}: acked={rep['acked']} "
+              f"failed={len(rep['failed'])} gen={rep['gen']} "
+              f"fs_triggered={rep['fs_triggered']} "
+              f"kills={rep['kills_fired']} degraded={rep['degraded']} "
+              f"recovered={rep['recovered']} "
+              f"retries={rep['client_retries']} "
+              f"failovers={rep['failovers']} "
+              f"restarts={rep['restarts']} "
+              f"violations={len(rep['violations'])}", flush=True)
+        for v in rep["violations"]:
+            print(f"  VIOLATION: {v}", flush=True)
+        bad += len(rep["violations"])
+        fs_trig += rep["fs_triggered"]
+        kills += rep["kills_fired"]
+    if any(p in ("disk-fault", "mixed") for p in profiles) \
+            and fs_trig == 0:
+        print("VIOLATION: no filesystem fault ever triggered "
+              "(injection is not biting)")
+        bad += 1
+    if any(p in ("replica-kill", "mixed") for p in profiles) \
+            and kills == 0:
+        print("VIOLATION: no replica kill ever fired")
+        bad += 1
+    n = len(seeds) * len(profiles)
+    print(f"chaos soak: {n} runs, {bad} violations")
+    if bad:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

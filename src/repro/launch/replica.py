@@ -27,16 +27,32 @@ Three entry points:
   (:meth:`DurableService.open` = latest snapshot + WAL tail) and check
   it bit-for-bit against the independent scratch oracle (generation-0
   boot snapshot + full WAL, :func:`repro.ckpt.durable.scratch_replay`).
+
+* ``--supervised`` -- multi-process serving (ROADMAP item 4): the
+  parent runs the durable writer and spawns ``--replicas`` child
+  processes (each a ``--replica-child``: one :class:`Replica` tailing
+  the shared store, reporting its generation until it reaches
+  ``--until-gen``).  The parent is the process-level supervisor: a
+  child that dies (e.g. the ``--kill-child-after`` SIGKILL injection)
+  is restarted and fast-forwards from the newest snapshot -- the
+  cross-process analogue of ``ReplicaSet(supervise=True)``.  The run
+  fails unless every replica slot converges to the writer's final
+  generation, restarts included.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import signal
+import subprocess
+import sys
 import threading
 import time
 
 import numpy as np
 
-__all__ = ["run_replicated_stream", "writer_child", "verify_recovery"]
+__all__ = ["run_replicated_stream", "writer_child", "verify_recovery",
+           "replica_child", "supervised_stream"]
 
 
 def _writer_config(nv: int, edge_capacity: int | None = None):
@@ -206,6 +222,118 @@ def writer_child(directory: str, *, nv: int = 256, steps: int = 10_000,
             time.sleep(pace_s)
 
 
+def replica_child(directory: str, *, replica_id: int = 0,
+                  until_gen: int = 0, duration_s: float = 120.0,
+                  poll_interval: float = 0.05) -> int:
+    """Out-of-process replica: tail the store at ``directory``, report
+    ``replica <id> gen <g>`` lines, exit 0 once ``until_gen`` is
+    reached (3 on the ``duration_s`` safety timeout).  The supervised
+    parent SIGKILLs / restarts these at will."""
+    from repro.core.replicas import Replica
+
+    rep = Replica(directory, replica_id, query_buckets=(8,),
+                  poll_interval=poll_interval)
+    deadline = time.monotonic() + duration_s
+    code = 3
+    try:
+        while time.monotonic() < deadline:
+            print(f"replica {replica_id} gen {rep.gen}", flush=True)
+            if rep.gen >= until_gen:
+                code = 0
+                break
+            time.sleep(poll_interval)
+    finally:
+        rep.stop()
+    return code
+
+
+def supervised_stream(directory: str, *, replicas: int = 2,
+                      steps: int = 48, chunk: int = 24, nv: int = 192,
+                      pace_s: float = 0.08, seed: int = 0,
+                      kill_child_after: float | None = None,
+                      child_wait_s: float = 90.0,
+                      max_restarts_per_slot: int = 3) -> dict:
+    """Supervised multi-process serving: parent writer + N replica
+    child processes, restart-on-death; returns a summary dict, raises
+    AssertionError when a slot fails to converge (restarts exhausted or
+    safety timeout)."""
+    from repro.api import GraphClient
+    from repro.ckpt.durable import DurableService
+    from repro.core import graph_state as gs
+    from repro.launch.stream import typed_op_stream
+
+    cfg = _writer_config(nv, edge_capacity=2048)
+    writer = DurableService(
+        cfg, directory, state=gs.all_singletons(cfg), buckets=(chunk,),
+        proactive_grow=True, sync_every=1, segment_bytes=32 << 10,
+        snapshot_every=16)
+    client = GraphClient(writer)
+    final_gen = steps  # one committed generation per chunk
+
+    def spawn(slot: int) -> subprocess.Popen:
+        return subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.replica",
+             "--replica-child", "--id", str(slot), "--dir", directory,
+             "--until-gen", str(final_gen),
+             "--duration", str(child_wait_s)])
+
+    children = [spawn(i) for i in range(replicas)]
+    restarts = [0] * replicas
+    kill_at = None if kill_child_after is None \
+        else time.monotonic() + kill_child_after
+    killed = False
+
+    def reap():
+        """Restart any child that died without reaching the target (a
+        clean exit 0 means it converged and is done)."""
+        for i, p in enumerate(children):
+            rc = p.poll()
+            if rc is None or rc == 0:
+                continue
+            if restarts[i] >= max_restarts_per_slot:
+                raise AssertionError(
+                    f"replica slot {i} died with rc={rc} and is out of "
+                    f"restarts")
+            restarts[i] += 1
+            children[i] = spawn(i)
+
+    try:
+        for step in range(steps):
+            client.submit_many(typed_op_stream(
+                nv, chunk, step=step, add_frac=0.7, seed=seed))
+            if kill_at is not None and not killed \
+                    and time.monotonic() >= kill_at:
+                os.kill(children[0].pid, signal.SIGKILL)
+                killed = True
+            reap()
+            time.sleep(pace_s)
+        assert writer.gen == final_gen, (writer.gen, final_gen)
+        # children converge on their own once the last record is
+        # durable; keep supervising (a late SIGKILL race is restarted)
+        deadline = time.monotonic() + child_wait_s
+        while time.monotonic() < deadline:
+            reap()
+            if all(p.poll() == 0 for p in children):
+                break
+            time.sleep(0.1)
+        codes = [p.poll() for p in children]
+        if any(c != 0 for c in codes):
+            raise AssertionError(
+                f"replica children did not converge to gen "
+                f"{final_gen}: exit codes {codes}")
+    finally:
+        for p in children:
+            if p.poll() is None:
+                p.kill()
+                p.wait()
+        writer.close()
+    if kill_child_after is not None and sum(restarts) == 0:
+        raise AssertionError(
+            "SIGKILL was injected but no child restart happened")
+    return {"replicas": replicas, "gen": final_gen,
+            "killed": int(killed), "restarts": sum(restarts)}
+
+
 def verify_recovery(directory: str) -> dict:
     """Recover the (possibly crash-torn) store and prove the two
     independent recovery paths agree bit-for-bit; returns a summary
@@ -247,7 +375,35 @@ def main():
     ap.add_argument("--verify-recovery", action="store_true",
                     help="recover the store and check both recovery "
                          "paths agree bit-for-bit")
+    ap.add_argument("--replica-child", action="store_true",
+                    help="run one out-of-process replica (supervised "
+                         "mode spawns these)")
+    ap.add_argument("--id", type=int, default=0,
+                    help="replica-child: replica slot id")
+    ap.add_argument("--until-gen", type=int, default=0,
+                    help="replica-child: exit 0 once this generation "
+                         "is tailed")
+    ap.add_argument("--duration", type=float, default=120.0,
+                    help="replica-child: safety timeout in seconds")
+    ap.add_argument("--supervised", action="store_true",
+                    help="multi-process serving: parent writer + "
+                         "restart-supervised replica children")
+    ap.add_argument("--kill-child-after", type=float, default=None,
+                    help="supervised: SIGKILL replica child 0 after "
+                         "this many seconds (restart injection)")
     args = ap.parse_args()
+    if args.replica_child:
+        sys.exit(replica_child(args.dir, replica_id=args.id,
+                               until_gen=args.until_gen,
+                               duration_s=args.duration))
+    if args.supervised:
+        rep = supervised_stream(args.dir, replicas=args.replicas,
+                                steps=args.steps, chunk=args.chunk,
+                                nv=args.nv, seed=args.seed,
+                                kill_child_after=args.kill_child_after)
+        print("supervised OK: " + " | ".join(f"{k}={v}"
+                                             for k, v in rep.items()))
+        return
     if args.writer_child:
         writer_child(args.dir, nv=args.nv, steps=args.steps,
                      chunk=args.chunk, seed=args.seed,

@@ -70,8 +70,9 @@ class _TenantSession:
         self._mts = service
         self.tid = tid
 
-    def _apply_ops(self, kind, u, v):
-        return self._mts._apply_ops(self.tid, kind, u, v)
+    def _apply_ops(self, kind, u, v, *, session=None, seq=None):
+        return self._mts._apply_ops(self.tid, kind, u, v,
+                                    session=session, seq=seq)
 
     @property
     def cfg(self) -> gs.GraphConfig:
@@ -137,6 +138,8 @@ class MultiTenantService:
         self._tenants: Dict[str, _TenantHandle] = {}
         self._lock = threading.RLock()
         self._next_tid = 0
+        # (tid, session) -> (seq, ok, gen): idempotent-resubmit window.
+        self._session_results: Dict[tuple, tuple] = {}
 
     # ------------------------------------------------------------ tenants
 
@@ -280,15 +283,32 @@ class MultiTenantService:
 
     # ------------------------------------------------------------ updates
 
-    def _apply_ops(self, tid: str, kind, u, v):
+    def _apply_ops(self, tid: str, kind, u, v, *, session=None,
+                   seq=None):
         """The per-tenant ``GraphClient`` update entry: admission-queued,
         flushed as part of a cross-tenant wave, acknowledged with the
-        tenant's post-chunk generation."""
+        tenant's post-chunk generation.  ``(session, seq)`` is the
+        client idempotency key (same contract as
+        :meth:`repro.core.service.SCCService._apply_ops`): a re-submit
+        of a session's last acknowledged chunk returns the recorded ack
+        instead of re-queueing it."""
+        key = None if session is None else (tid, session)
         with self._lock:
             h = self._tenants[tid]
             h.last_used = time.monotonic()
             self._ensure_resident(h)
-        return self._queue.submit(tid, kind, u, v)
+            if key is not None:
+                hit = self._session_results.get(key)
+                if hit is not None and hit[0] == seq:
+                    return hit[1], hit[2]
+        ok, gen = self._queue.submit(tid, kind, u, v)
+        if key is not None:
+            with self._lock:
+                self._session_results[key] = (seq, ok, gen)
+                while len(self._session_results) > 4096:
+                    self._session_results.pop(
+                        next(iter(self._session_results)))
+        return ok, gen
 
     def _flush_wave(self, requests):
         """WorkQueue callback: write-ahead log every tenant's chunk at

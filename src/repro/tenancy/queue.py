@@ -31,17 +31,22 @@ from typing import Callable, Dict, Optional, Sequence
 
 import numpy as np
 
+from repro.fault.errors import DeadlineExceeded, Unavailable
+from repro.fault.inject import maybe_stall
+
 __all__ = ["QueueFull", "TransferBufferPool", "WorkQueue"]
 
 
-class QueueFull(RuntimeError):
+class QueueFull(Unavailable):
     """Backpressure: the queue's op budget is exhausted.  ``retry_after``
     is the seconds the caller should wait before resubmitting (one flush
-    deadline: by then the leader has drained the backlog)."""
+    deadline: by then the leader has drained the backlog).  A member of
+    the :mod:`repro.fault.errors` taxonomy (``Unavailable``), so the
+    ``GraphClient`` retry loop handles it like any transient refusal."""
 
     def __init__(self, retry_after: float):
-        super().__init__(f"work queue full; retry after {retry_after}s")
-        self.retry_after = retry_after
+        super().__init__(f"work queue full; retry after {retry_after}s",
+                         retry_after=retry_after)
 
 
 class _Buffers:
@@ -187,8 +192,9 @@ class WorkQueue:
         if lead:
             self._lead(tk)
         if not tk.event.wait(timeout):
-            raise TimeoutError(f"chunk for tenant {tid!r} not flushed "
-                               f"within {timeout}s")
+            raise DeadlineExceeded(
+                f"chunk for tenant {tid!r} not flushed within {timeout}s"
+                f" (result may still land; do not blind-retry)")
         if tk.error is not None:
             raise tk.error
         return tk.ok, tk.gen
@@ -227,6 +233,7 @@ class WorkQueue:
         """Leader loop: one head-of-line chunk per tenant per wave, until
         the queue is empty; then hand leadership back."""
         self.flush_causes[cause] += 1
+        maybe_stall("queue_wave")
         while True:
             with self._cv:
                 wave = []
