@@ -220,6 +220,11 @@ class DurableService(SCCService):
 
     def _attach_wal(self):
         oplog.repair_tail(self._wal_path)
+        # a failed append whose rollback never reached the sick disk can
+        # leave a valid-but-unapplied record behind; it must not shadow
+        # the next chunk logged at the same generation (an OSError here
+        # fails the recovery probe -- the disk has not healed)
+        oplog.drop_unapplied_tail(self._wal_path, self.gen)
         self._wal = oplog.OpLogWriter(
             self._wal_path, segment_bytes=self._segment_bytes,
             sync_every=self._sync_every, start_gen=self.gen)

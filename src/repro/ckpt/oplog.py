@@ -54,8 +54,8 @@ from repro.fault import errors as fault_errors
 from repro.fault.inject import fs_fsync, fs_open
 
 __all__ = ["OpLogWriter", "LogTailer", "OpRecord", "read_segment",
-           "read_log", "list_segments", "repair_tail", "trim",
-           "SEG_HEADER_BYTES"]
+           "read_log", "list_segments", "repair_tail",
+           "drop_unapplied_tail", "trim", "SEG_HEADER_BYTES"]
 
 _SEG_MAGIC = b"SCCWAL01"
 _REC_MAGIC = 0xA11C0DE5
@@ -205,6 +205,41 @@ def repair_tail(directory: str) -> int:
         return dropped + (size - valid_end)
 
 
+def drop_unapplied_tail(directory: str, gen: int) -> int:
+    """Truncate trailing records of the final segment whose
+    ``gen_before >= gen`` -- valid on disk but never applied by the
+    writer (a failed append whose own best-effort rollback could not
+    reach the disk).  The writer calls this on (re)attach with its
+    committed generation: every chunk it committed advanced the
+    generation past its own ``gen_before``, so a record at or past
+    ``gen`` was never acknowledged and would shadow the *different*
+    chunk the writer logs next at the same generation.  Returns the
+    bytes dropped; raises ``OSError`` when the truncate cannot be made
+    durable (the caller's recovery probe must then fail)."""
+    segs = list_segments(directory)
+    if not segs:
+        return 0
+    _, path = segs[-1]
+    with open(path, "rb") as f:
+        buf = f.read()
+    if len(buf) < SEG_HEADER_BYTES or buf[:len(_SEG_MAGIC)] != _SEG_MAGIC:
+        return 0
+    cut = None
+    prev = SEG_HEADER_BYTES
+    for end, rec in _scan_records(buf, SEG_HEADER_BYTES):
+        if cut is None and rec.gen_before >= gen:
+            cut = prev  # gen_before is strictly increasing: everything
+            #             from here on is unapplied
+        prev = end
+    if cut is None:
+        return 0
+    with fs_open(path, "r+b") as f:
+        f.truncate(cut)
+        f.flush()
+        fs_fsync(f)
+    return len(buf) - cut
+
+
 def trim(directory: str, min_gen: int) -> int:
     """Drop whole segments no longer needed to replay from ``min_gen``:
     segment i may go iff segment i+1 exists and starts at or below
@@ -259,16 +294,28 @@ class OpLogWriter:
 
     def append(self, gen_before: int, kind, u, v) -> None:
         """Durably append one chunk record (write-ahead: call BEFORE
-        applying; fsync per ``sync_every`` appends)."""
+        applying; fsync per ``sync_every`` appends).
+
+        A failed append rolls its own record's bytes back (best-effort)
+        before re-raising: the chunk was never acknowledged, so it must
+        not survive on disk -- recovery and replica tails would replay
+        it ahead of a *different* chunk later logged at the same
+        generation, losing the acked one to the ``gen_before < gen``
+        skip.  Earlier records of the same fsync batch are preserved
+        (they were acknowledged)."""
         rec = _encode_record(gen_before, kind, u, v)
         start = self._pos
-        self._f.write(rec)
-        self._pos += len(rec)
-        self._last_span = (start, self._pos)
+        try:
+            self._f.write(rec)
+            self._pos += len(rec)
+            self._last_span = (start, self._pos)
+            self._unsynced += 1
+            if self._unsynced >= self._sync_every:
+                self.sync()
+        except OSError:
+            self._discard_to(start)
+            raise
         self.appended += 1
-        self._unsynced += 1
-        if self._unsynced >= self._sync_every:
-            self.sync()
 
     def rollback_last(self) -> None:
         """Truncate the last appended record (the apply of its chunk
@@ -286,19 +333,28 @@ class OpLogWriter:
         self._unsynced = 0
         self.rollbacks += 1
 
-    def discard_tail(self) -> None:
-        """Best-effort truncate back to the last known-good byte boundary
-        after a *failed* append (the record may be partially on disk).
-        Errors are swallowed: the store is entering its degraded path and
-        ``repair_tail`` at re-attach covers whatever this could not."""
+    def _discard_to(self, pos: int) -> None:
+        """Best-effort truncate to ``pos``; errors are swallowed (the
+        store is entering its degraded path; ``drop_unapplied_tail`` at
+        re-attach covers whatever could not reach the disk)."""
         try:
             self._f.flush()
-            self._f.truncate(self._pos)
-            self._f.seek(self._pos)
+            self._f.truncate(pos)
+            self._f.seek(pos)
+            fs_fsync(self._f)
         except OSError:
             pass
+        self._pos = pos
         self._last_span = None
         self._unsynced = 0
+
+    def discard_tail(self) -> None:
+        """Best-effort truncate to the last known-good byte boundary --
+        the ``DurableService.sync()`` failure path, where every record
+        up to ``_pos`` was acknowledged (batched appends) and must
+        survive; a failed ``append`` rolls back its own record before
+        this can run."""
+        self._discard_to(self._pos)
 
     def maybe_rotate(self, gen: int) -> bool:
         """Rotate to a fresh segment (header stamped ``gen``) once the

@@ -175,7 +175,12 @@ class QueryBroker:
                     f"query unresolved after {timeout:.3f}s "
                     f"(floor {min_gen}, committed {self._svc.gen})")
             if min_gen:
-                self._svc.wait_for_gen(min_gen, timeout=0.5)
+                # clamp the commit wait to the remaining deadline so a
+                # caller-supplied timeout is honored tightly, not
+                # overshot by up to a full wait slice
+                slice_t = 0.5 if deadline is None else \
+                    min(0.5, max(0.0, deadline - time.monotonic()))
+                self._svc.wait_for_gen(min_gen, timeout=slice_t)
             served = self.flush()
             if fut.done():
                 break
@@ -186,8 +191,10 @@ class QueryBroker:
                 # floor between the pin and this check -- wait briefly,
                 # then loop so the next flush serves the re-queued case
                 # rather than assuming the former (which would hang).
+                slice_t = 0.05 if deadline is None else \
+                    min(0.05, max(0.0, deadline - time.monotonic()))
                 try:
-                    return fut.result(timeout=0.05)
+                    return fut.result(timeout=slice_t)
                 except _FutureTimeout:
                     continue
         if deadline is not None:

@@ -235,6 +235,12 @@ class Replica:
         degenerate into busy-tailing whenever the writer is active)."""
         period = self._poll_interval
         while not self._stop.is_set():
+            # heartbeat stamped at tick START as well as end: a single
+            # long apply (first-touch compile, large batch) must read as
+            # one slow tick, not health_misses missed polls -- otherwise
+            # the supervisor shuts a live replica down mid-apply and the
+            # restart recompiles, looping the quarantine
+            self._last_tick = time.monotonic()
             try:
                 self.tail_once(max_records=None)
             except BaseException as e:  # surfaced via stats/stop
@@ -334,24 +340,32 @@ class ReplicaSet:
         fast-forward: a replacement :class:`Replica` bootstraps from the
         newest snapshot (the same forward-only jump as ``_resync``) and
         tails from there -- recovery cost is one snapshot restore."""
+        seen: set = set()  # replicas already quarantined (strong refs:
+        # an id()-keyed set could alias a collected replica's reuse)
         while not self._sup_stop.wait(self._health_check_s):
             for i, rep in enumerate(list(self.replicas)):
                 if rep.healthy or self._stopped:
                     continue
-                self.quarantined += 1
-                rep.shutdown()  # releases parked waiters, typed
-                if self.restarts >= self._max_restarts:
-                    continue
+                if rep not in seen:  # quarantine + teardown once only
+                    seen.add(rep)
+                    with self._lock:
+                        self.quarantined += 1
+                    rep.shutdown()  # releases parked waiters, typed
+                with self._lock:
+                    exhausted = self.restarts >= self._max_restarts
+                if exhausted:
+                    continue  # stays dead; routing ignores it
                 try:
                     fresh = self._spawn_replica(i)
                 except Exception:
                     continue  # store unreadable right now; next tick
                 with self._lock:
-                    if self._stopped:  # raced a stop(): tear it down
-                        fresh.shutdown()
-                        continue
-                    self.replicas[i] = fresh
-                self.restarts += 1
+                    raced_stop = self._stopped
+                    if not raced_stop:
+                        self.replicas[i] = fresh
+                        self.restarts += 1
+                if raced_stop:  # raced a stop(): tear it down
+                    fresh.shutdown()
 
     @property
     def healthy_replicas(self) -> List[Replica]:
@@ -411,7 +425,8 @@ class ReplicaSet:
         ``Unavailable`` surfaces when no peer is left."""
         deadline = None if timeout is None else \
             time.monotonic() + timeout
-        for _attempt in range(self._n + 2):
+        attempts = self._n + 2
+        for _attempt in range(attempts):
             with self._lock:
                 owner = self._owner.pop(fut, None)
             remaining = None if deadline is None else \
@@ -427,6 +442,9 @@ class ReplicaSet:
             except fault_errors.BrokerStopped:
                 if owner is None:
                     raise  # nothing recorded to replay it from
+                if _attempt + 1 == attempts:
+                    break  # out of attempts: a resubmit here would be
+                    # abandoned (queued forever, its _owner entry leaked)
                 self.failovers += 1
                 _, kind, u, v, mg = owner
                 fut = self.submit(kind, u, v, min_gen=mg)

@@ -151,8 +151,9 @@ def test_fs_injection_eio_enospc_and_torn(tmp_path):
         assert plan.triggered and plan.triggered[0][1] == "enospc"
     w.discard_tail()
 
-    # torn write: a prefix of the record lands, then EIO -- the reader
-    # must see only the valid prefix and repair_tail must truncate it
+    # torn write: a prefix of the record lands, then EIO -- append
+    # rolls its own torn bytes back, so the log is already clean on
+    # disk and repair_tail finds nothing left to drop
     plan = FaultPlan(fs=(FsFault("write", "seg", first=0, count=1,
                                  error="torn", tear_frac=0.5),))
     with injected(plan):
@@ -163,10 +164,8 @@ def test_fs_injection_eio_enospc_and_torn(tmp_path):
     records, clean, _ = oplog.read_segment(
         oplog.list_segments(d)[-1][1])
     assert [r.gen_before for r in records] == [0]  # torn bytes invisible
-    dropped = oplog.repair_tail(d)
-    assert dropped > 0
-    _, clean, _ = oplog.read_segment(oplog.list_segments(d)[-1][1])
-    assert clean
+    assert clean  # append truncated its own torn bytes
+    assert oplog.repair_tail(d) == 0
 
 
 def test_fsync_injection_hits_oplog_sync(tmp_path):
@@ -178,6 +177,36 @@ def test_fsync_injection_hits_oplog_sync(tmp_path):
     with injected(plan):
         with pytest.raises(OSError):
             w.sync()
+
+
+def test_failed_append_rolls_back_its_own_record(tmp_path):
+    # the fsync embedded in append() fails AFTER the record's bytes are
+    # fully written: the never-acknowledged record must not survive on
+    # disk (recovery would replay it ahead of a different chunk later
+    # logged at the same generation)
+    d = str(tmp_path / "seg")
+    w = oplog.OpLogWriter(d, sync_every=1)
+    k, u, v = (np.zeros(2, np.int32),) * 3
+    w.append(0, k, u, v)
+    plan = FaultPlan(fs=(FsFault("fsync", "seg", first=0, count=1),))
+    with injected(plan):
+        with pytest.raises(OSError):
+            w.append(1, k, u, v)
+    w.close()
+    assert [r.gen_before for r in oplog.read_log(d)] == [0]
+
+
+def test_drop_unapplied_tail_removes_unacked_records(tmp_path):
+    d = str(tmp_path / "seg")
+    w = oplog.OpLogWriter(d, sync_every=1)
+    k, u, v = (np.zeros(2, np.int32),) * 3
+    w.append(0, k, u, v)  # applied: the writer advanced to gen 1
+    w.append(1, k, u, v)  # applied: gen 2
+    w.append(2, k, u, v)  # a failed append whose rollback missed disk
+    w.close()
+    assert oplog.drop_unapplied_tail(d, 2) > 0
+    assert [r.gen_before for r in oplog.read_log(d)] == [0, 1]
+    assert oplog.drop_unapplied_tail(d, 2) == 0  # idempotent
 
 
 # ------------------------------------------------------- degraded mode ---
@@ -240,6 +269,63 @@ def test_degraded_window_with_retrying_client_loses_nothing(tmp_path):
     reopened = DurableService.open(str(tmp_path))
     assert reopened.gen == oracle.gen
     assert leaves_equal(reopened.state, oracle.state)
+    reopened.close()
+
+
+def test_abandoned_failed_chunk_never_resurrects(tmp_path):
+    """A chunk whose WAL append fails and which the client then gives
+    up on (no retry) must not shadow a *different* chunk later logged
+    at the same generation -- neither on recovery nor for replicas."""
+    svc = make_writer(tmp_path)
+    rng = np.random.default_rng(7)
+    svc._apply_ops(*chunk(rng))
+    gen0 = svc.gen
+    chunk_a = chunk(rng)  # will fail; the client never retries it
+    plan = FaultPlan(fs=(FsFault("fsync", "wal", first=0, count=1),))
+    with injected(plan):
+        with pytest.raises(fault_errors.Unavailable):
+            svc._apply_ops(*chunk_a)  # fully written, fsync fails
+    assert svc.gen == gen0
+    chunk_b = chunk(rng)  # a DIFFERENT chunk, acked at the same gen
+    ok, gen1 = svc._apply_ops(*chunk_b)
+    assert gen1 > gen0 and svc.health == HEALTHY
+    svc.close()
+    reopened = DurableService.open(str(tmp_path))
+    assert reopened.gen == gen1  # replayed B, never A
+    assert leaves_equal(reopened.state, svc.state)
+    reopened.close()
+
+
+def test_attach_drops_failed_record_when_rollback_missed_disk(
+        tmp_path, monkeypatch):
+    """Belt-and-suspenders: even when append's own rollback cannot
+    reach the sick disk, the re-attach probe truncates the
+    valid-but-unapplied record before reopening the log."""
+    svc = make_writer(tmp_path)
+    rng = np.random.default_rng(8)
+    svc._apply_ops(*chunk(rng))
+    gen0 = svc.gen
+
+    def no_disk(self, pos):  # rollback loses the race with the disk:
+        self._pos = pos      # only the bookkeeping resets
+        self._last_span = None
+        self._unsynced = 0
+
+    monkeypatch.setattr(oplog.OpLogWriter, "_discard_to", no_disk)
+    plan = FaultPlan(fs=(FsFault("fsync", "wal", first=0, count=1),))
+    with injected(plan):
+        with pytest.raises(fault_errors.Unavailable):
+            svc._apply_ops(*chunk(rng))  # record bytes survive on disk
+    monkeypatch.undo()
+    assert svc.gen == gen0
+    recs = oplog.read_log(wal_dir(str(tmp_path)))
+    assert recs and recs[-1].gen_before == gen0  # orphan really there
+    ok, gen1 = svc._apply_ops(*chunk(rng))  # probe re-attaches + drops
+    assert gen1 > gen0 and svc.health == HEALTHY
+    svc.close()
+    reopened = DurableService.open(str(tmp_path))
+    assert reopened.gen == gen1
+    assert leaves_equal(reopened.state, svc.state)
     reopened.close()
 
 
@@ -406,6 +492,19 @@ def test_broker_resolve_timeout_raises_deadline_exceeded():
     broker.stop()
 
 
+def test_broker_inline_resolve_deadline_is_tight():
+    # inline mode (no dispatcher): the internal gen-wait slices must be
+    # clamped to the remaining deadline, not overshoot it by ~0.5s
+    cfg = tiny_cfg()
+    svc = SCCService(cfg, state=gs.all_singletons(cfg), **KNOBS)
+    broker = QueryBroker(svc, buckets=(8,))
+    fut = broker.submit("same_scc", [0], [1], min_gen=svc.gen + 10)
+    t0 = time.monotonic()
+    with pytest.raises(fault_errors.DeadlineExceeded):
+        broker.resolve(fut, min_gen=svc.gen + 10, timeout=0.05)
+    assert time.monotonic() - t0 < 0.3
+
+
 def test_queue_full_and_ticket_timeout_are_typed():
     from repro.tenancy.queue import QueueFull, WorkQueue
 
@@ -530,6 +629,29 @@ def test_supervisor_restarts_killed_replica(tmp_path):
         rset.wait_all_for_gen(svc.gen, timeout=5.0)
         fut = rset.submit("same_scc", [0], [1], min_gen=svc.gen)
         assert rset.resolve(fut, min_gen=svc.gen).gen >= svc.gen
+    finally:
+        rset.stop()
+        svc.close()
+
+
+def test_supervisor_quarantines_dead_replica_once_only(tmp_path):
+    # with the restart budget exhausted, a replica that stays dead must
+    # not be re-shutdown and re-counted on every supervisor sweep
+    svc = make_writer(tmp_path)
+    rng = np.random.default_rng(9)
+    svc._apply_ops(*chunk(rng))
+    rset = ReplicaSet(str(tmp_path), 2, query_buckets=(8,),
+                      poll_interval=0.01, supervise=True,
+                      health_check_s=0.01, max_restarts=0)
+    try:
+        rset.replicas[0].kill()
+        deadline = time.monotonic() + 5.0
+        while rset.quarantined < 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        time.sleep(0.1)  # many sweeps later...
+        assert rset.quarantined == 1  # ...still counted exactly once
+        assert rset.restarts == 0
+        assert len(rset.healthy_replicas) == 1
     finally:
         rset.stop()
         svc.close()
