@@ -40,10 +40,13 @@ throughput must scale >= 1.5x from 1 to 2 replicas (staggered replica
 poll grids hide replication lag -- a latency-bound regime, so the
 scaling is honest on a single core).
 
-The **availability** section (PR-9) prices the failure domain: the same
-closed-loop replica-served query workload in a steady window vs a
-window opened by killing a replica (the supervisor restarts it
-mid-window); the degraded-window throughput ratio is gated >= 0.5x by
+The **availability** section (PR-9/PR-10) prices the failure domain:
+the same closed-loop replica-served query workload in a steady window
+vs a window opened by killing a replica (the supervisor restarts it
+mid-window), then closed-loop writes in a steady window vs a window
+opened by crashing the *leased* writer (a replica is lease-promoted to
+the next WAL epoch mid-window and the client reroutes on ``NotLeader``);
+both degraded-window throughput ratios are gated >= 0.5x by
 ``scripts/ci.sh``.
 
 Finally the **repair-tier** section measures the tiered repair engine on
@@ -689,26 +692,42 @@ def run_tenancy(n_tenants=6, steps=20, nv=256, chunk=16,
     return rows, report
 
 
-def run_availability_section(window_s=0.8, replicas=2, min_ratio=0.5):
-    """Degraded-window serving (PR-9): closed-loop query throughput
-    through a supervised ReplicaSet in a steady window vs a window where
-    one replica is killed and supervisor-restarted
-    (:func:`repro.launch.chaos.run_availability`).  The caller is
-    latency-bound, so transparent failover should keep the ratio near
-    1.0; the gate floor is 0.5x (losing more than half the window to a
-    single replica death means failover or restart is broken)."""
+def run_availability_section(window_s=0.8, replicas=2, min_ratio=0.5,
+                             min_write_ratio=0.5):
+    """Degraded-window serving (PR-9/PR-10): closed-loop query
+    throughput through a supervised ReplicaSet in a steady window vs a
+    window where one replica is killed and supervisor-restarted, then
+    closed-loop *write* throughput in a steady window vs a window where
+    the leased writer is crashed and a replica promoted mid-window
+    (:func:`repro.launch.chaos.run_availability`).  The query caller is
+    latency-bound, so transparent failover should keep the read ratio
+    near 1.0; writes pay one lease TTL plus the takeover, so the write
+    ratio floor is 0.5x over a window that dwarfs the TTL (losing more
+    than half of it means promotion or client reroute is broken)."""
     from repro.launch.chaos import run_availability
 
     rep = run_availability(window_s=window_s, replicas=replicas)
     rep["floor"] = min_ratio
+    rep["write_floor"] = min_write_ratio
     rows = [
         ("steady", rep["steady_per_s"], rep["steady_faults"], 1.0),
         ("replica_killed", rep["faulted_per_s"], rep["faulted_faults"],
          rep["ratio"]),
+        ("write_steady", rep["write_steady_per_s"],
+         rep["write_steady_faults"], 1.0),
+        ("writer_crashed", rep["write_faulted_per_s"],
+         rep["write_faulted_faults"], rep["write_availability"]),
     ]
     assert rep["ratio"] >= min_ratio, (
         f"availability collapsed under a replica kill: degraded-window "
         f"throughput ratio {rep['ratio']} < {min_ratio} floor")
+    assert rep["write_availability"] >= min_write_ratio, (
+        f"write availability collapsed under writer loss: faulted-"
+        f"window ratio {rep['write_availability']} < {min_write_ratio} "
+        f"floor")
+    assert rep["promotions"] >= 1, (
+        "the writer crash never promoted a replica: the write-"
+        "availability window measured a dead store")
     return rows, rep
 
 
@@ -725,7 +744,7 @@ REPLICA_HEADER = ["mode", "ops", "ops_per_s", "queries", "queries_per_s",
                   "combined_per_s", "replicas", "routed_stale",
                   "gen_waits"]
 TENANCY_HEADER = ["mode", "ops", "ops_per_s", "wall_s", "speedup"]
-AVAIL_HEADER = ["phase", "queries_per_s", "typed_faults", "ratio"]
+AVAIL_HEADER = ["phase", "per_s", "typed_faults", "ratio"]
 
 
 def _dicts(rows, header):
@@ -864,6 +883,10 @@ def main():
     print(f"availability under replica kill: {avail_rep['ratio']}x of "
           f"the steady window ({avail_rep['restarts']} supervisor "
           f"restart(s), floor {avail_rep['floor']}x)")
+    print(f"write availability under writer loss: "
+          f"{avail_rep['write_availability']}x of the steady window "
+          f"({avail_rep['promotions']} promotion(s), floor "
+          f"{avail_rep['write_floor']}x)")
     if args.json:
         mode = "smoke" if args.smoke else "full" if args.full else "default"
         report = {

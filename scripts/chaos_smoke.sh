@@ -4,18 +4,29 @@
 #   scripts/chaos_smoke.sh              # full matrix (CHAOS_SEEDS="0 1 2")
 #   CHAOS_SEEDS="7" scripts/chaos_smoke.sh
 #
-# Three legs, each a different failure domain:
+# Five legs, each a different failure domain:
 #
-#   writer-kill   a real SIGKILL of a durable writer process mid-stream,
-#                 once per seed; both recovery paths (latest snapshot +
-#                 WAL tail vs generation-0 scratch replay) must agree
-#                 bit-for-bit
+#   writer-kill   a real SIGKILL of a *leased* durable writer process
+#                 mid-stream, once per seed; then a replica takes over
+#                 the stale lease (epoch bump + WAL fence + tail drain),
+#                 appends as the new epoch, probes that the dead epoch
+#                 is refused with nothing written, and finally both
+#                 recovery paths (latest snapshot + WAL tail vs
+#                 generation-0 scratch replay) must agree bit-for-bit
+#                 across the mixed-epoch log
 #   chaos soak    seeded in-process fault plans (repro.launch.chaos):
 #                 WAL write/fsync faults incl. torn records, replica
 #                 kills, broker stalls -- gating zero acked-op loss,
 #                 typed-errors-only, availability > 0 while any replica
 #                 is healthy, and recovery-under-fire, per seed x
 #                 {disk-fault, replica-kill, mixed}
+#   failover      in-process writer-loss soak per seed: crash the
+#                 leased writer mid-stream; gate promotion, fencing
+#                 (split-brain resurrect probe), client reroute on
+#                 NotLeader, zero acked-op loss across the handoff
+#   tenant soak   disk-fault plans biting the per-tenant WAL dirs of
+#                 the multi-tenant service: typed-errors-only and
+#                 per-tenant zero acked-op loss
 #   supervised    multi-process serving: parent writer + replica child
 #                 processes, SIGKILL one child, require a supervisor
 #                 restart and every slot to converge to the final gen
@@ -27,10 +38,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 SEEDS="${CHAOS_SEEDS:-0 1 2}"
 
-echo "== writer-kill smoke: SIGKILL a durable writer mid-stream (seeds: $SEEDS) =="
+echo "== writer-kill smoke: SIGKILL a leased writer, promote, verify (seeds: $SEEDS) =="
 for seed in $SEEDS; do
     CRASH_DIR=$(mktemp -d)
-    python -m repro.launch.replica --writer-child --dir "$CRASH_DIR" \
+    python -m repro.launch.replica --writer-child --ha --dir "$CRASH_DIR" \
         --seed "$seed" --steps 100000 --snapshot-every 16 \
         > "$CRASH_DIR/writer.log" 2>&1 &
     WRITER_PID=$!
@@ -49,6 +60,8 @@ for seed in $SEEDS; do
         echo "crash-smoke writer (seed $seed) made no progress" >&2; exit 1; }
     kill -9 "$WRITER_PID" 2>/dev/null
     wait "$WRITER_PID" 2>/dev/null || true
+    python -m repro.launch.replica --promote-after-crash --dir "$CRASH_DIR" \
+        --seed "$seed"
     python -m repro.launch.replica --verify-recovery --dir "$CRASH_DIR"
     rm -rf "$CRASH_DIR"
 done
@@ -56,6 +69,12 @@ done
 echo "== chaos soak: seeded fault plans x {disk-fault, replica-kill, mixed} =="
 python -m repro.launch.chaos --smoke --seeds "${SEEDS// /,}" \
     --profiles disk-fault,replica-kill,mixed
+
+echo "== writer failover soak: crash the leased writer, gate promotion + fencing =="
+python -m repro.launch.chaos --failover --smoke --seeds "${SEEDS// /,}"
+
+echo "== tenant soak: disk faults on per-tenant WAL dirs =="
+python -m repro.launch.chaos --tenant-soak --smoke --seeds "${SEEDS// /,}"
 
 echo "== supervised multi-process serving: SIGKILL a replica child =="
 SUP_DIR=$(mktemp -d)

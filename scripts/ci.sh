@@ -112,7 +112,7 @@ if [[ "${1:-}" != "--fast" ]]; then
     # appends one labelled run to the perf trajectory (BENCH_LABEL env
     # var names the point; defaults to this PR's label)
     python -m benchmarks.bench_stream --smoke --json BENCH_stream.json \
-        --label "${BENCH_LABEL:-pr9-fault-hardening}"
+        --label "${BENCH_LABEL:-pr10-writer-failover}"
     echo "== perf-trajectory gates (BENCH_stream.json, newest run) =="
     python - <<'PYEOF'
 import json
@@ -220,6 +220,15 @@ assert av["ratio"] >= 0.5, (
 assert av["restarts"] >= 1, (
     "availability window killed a replica but the supervisor never "
     "restarted it")
+# write-availability gate (PR 10): crashing the leased writer mid-window
+# must cost one lease TTL + takeover, not the window -- a replica is
+# promoted to the next WAL epoch and the client reroutes on NotLeader
+assert av["write_availability"] >= 0.5, (
+    f"write availability collapsed under writer loss: "
+    f"{av['write_availability']}x of the steady window (floor 0.5x)")
+assert av["promotions"] >= 1, (
+    "availability window crashed the leased writer but no replica was "
+    "ever promoted")
 print("perf-trajectory gates OK:",
       f"update-heavy {uh['combined_per_s']} ops/s "
       f"({uh['combined_per_s'] / 154:.1f}x the PR-4 baseline),",
@@ -235,7 +244,9 @@ print("perf-trajectory gates OK:",
       f"tenancy {tn['speedup']}x @ {tn['tenants']} tenants "
       f"({tn['compile_count']}/{tn['compile_bound']} compiled entries),",
       f"availability {av['ratio']}x under replica kill "
-      f"({av['restarts']} restart(s))")
+      f"({av['restarts']} restart(s)),",
+      f"write availability {av['write_availability']}x under writer "
+      f"loss ({av['promotions']} promotion(s))")
 PYEOF
     echo "== documented serving entry point (examples/dynamic_scc_serving.py --smoke) =="
     python examples/dynamic_scc_serving.py --smoke

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import random
 import time
 from concurrent.futures import Future
 from typing import Any, Iterable, Iterator, List, NamedTuple, Sequence, \
@@ -157,7 +158,8 @@ class GraphClient:
                  consistency=Consistency.LATEST, *,
                  deadline_s: float | None = None, max_retries: int = 8,
                  backoff_base_s: float = 0.005,
-                 backoff_cap_s: float = 0.25):
+                 backoff_cap_s: float = 0.25, rng=None,
+                 leader_resolver=None):
         from repro.core.broker import QueryBroker
         self._svc = service
         self._broker = QueryBroker(service) if broker is None else broker
@@ -169,10 +171,15 @@ class GraphClient:
         self._token = int(service.gen)
         # failure-domain knobs (docs/SERVICE_API.md §Failure semantics):
         # retryable FaultErrors (Unavailable/QueueFull) are resubmitted
-        # with bounded exponential backoff -- each wait is
-        # max(backoff, server retry_after) capped at backoff_cap_s --
-        # inside the per-op deadline (deadline_s=None: no time bound,
-        # max_retries still applies).  Updates are idempotent under
+        # with bounded, decorrelated-jittered exponential backoff --
+        # each wait draws uniformly from [base, 3*previous_wait],
+        # floored by the server's retry_after hint and capped at
+        # backoff_cap_s -- inside the per-op deadline (deadline_s=None:
+        # no time bound, max_retries still applies).  The jitter
+        # de-synchronizes sessions that all saw the same fault (a
+        # deterministic schedule retries in lockstep: a thundering herd
+        # on a freshly promoted writer); `rng` injects the source so
+        # tests stay deterministic.  Updates are idempotent under
         # retry: every chunk carries (session_id, seq) and the service
         # dedups re-submits, so a chunk whose ack was lost is never
         # double-applied through the WAL.
@@ -180,9 +187,15 @@ class GraphClient:
         self._max_retries = int(max_retries)
         self._backoff_base_s = float(backoff_base_s)
         self._backoff_cap_s = float(backoff_cap_s)
+        self._rng = random.Random() if rng is None else rng
+        # writer-failover reroute: on NotLeader the client swaps its
+        # update target for whatever the resolver currently names (e.g.
+        # ``lambda: rset.leader or old_writer``) before the next retry
+        self._leader_resolver = leader_resolver
         self.session_id = f"gc{next(_SESSION_IDS)}"
         self._seq = 0
         self.retries = 0
+        self.reroutes = 0
         self.deadline_failures = 0
         self.updates_submitted = 0
         self.queries_submitted = 0
@@ -306,15 +319,34 @@ class GraphClient:
             return int(c.gen)
         raise TypeError(f"unknown consistency level: {c!r}")
 
+    def _reroute(self, e: fault_errors.FaultError):
+        """Swap the update target after a ``NotLeader``: whatever the
+        resolver names right now becomes ``self._svc`` (the update
+        attempt closures read it at call time, so the very next retry
+        lands on the new leader)."""
+        if self._leader_resolver is None:
+            return
+        try:
+            new = self._leader_resolver()
+        except Exception:
+            return  # resolver hiccup: retry against the old target
+        if new is not None and new is not self._svc:
+            self._svc = new
+            self.reroutes += 1
+
     def _with_retry(self, attempt, deadline_s: float | None):
         """Run ``attempt(remaining_s)`` under the retry policy: retryable
         :class:`~repro.fault.errors.FaultError`\\ s are re-attempted with
-        exponential backoff -- each wait is ``max(backoff, retry_after)``
-        capped at ``backoff_cap_s`` -- until ``max_retries`` attempts or
-        the deadline is spent, whichever first.  Deadline exhaustion
-        raises :class:`~repro.fault.errors.DeadlineExceeded` (chaining
-        the last transient error); retry exhaustion re-raises the last
-        typed error itself."""
+        decorrelated-jitter exponential backoff -- each wait draws
+        uniformly from ``[base, 3*prev_wait]``, floored by the server's
+        ``retry_after`` hint and capped at ``backoff_cap_s`` -- until
+        ``max_retries`` attempts or the deadline is spent, whichever
+        first.  A :class:`~repro.fault.errors.NotLeader` additionally
+        reroutes the session to ``leader_resolver()`` before the next
+        attempt.  Deadline exhaustion raises
+        :class:`~repro.fault.errors.DeadlineExceeded` (chaining the last
+        transient error); retry exhaustion re-raises the last typed
+        error itself."""
         deadline = None if deadline_s is None \
             else time.monotonic() + deadline_s
         delay = self._backoff_base_s
@@ -333,6 +365,15 @@ class GraphClient:
                 if not e.retryable or n == self._max_retries:
                     raise
                 last = e
+                if isinstance(e, fault_errors.NotLeader):
+                    self._reroute(e)
+                # decorrelated jitter (AWS-style): spread concurrent
+                # sessions' retries apart instead of marching them in
+                # lockstep into the server that just came back
+                delay = min(self._rng.uniform(self._backoff_base_s,
+                                              max(self._backoff_base_s,
+                                                  delay * 3)),
+                            self._backoff_cap_s)
                 wait = min(max(delay, e.retry_after or 0.0),
                            self._backoff_cap_s)
                 if deadline is not None and \
@@ -343,7 +384,6 @@ class GraphClient:
                         f"next backoff ({wait:.3f}s; last: {e})") from e
                 self.retries += 1
                 time.sleep(wait)
-                delay = min(delay * 2, self._backoff_cap_s)
         raise AssertionError("unreachable")  # loop always raises/returns
 
     def _apply_updates(self, run: List[Op],
@@ -404,6 +444,7 @@ class GraphClient:
         s.update(client_updates=self.updates_submitted,
                  client_queries=self.queries_submitted,
                  client_retries=self.retries,
+                 client_reroutes=self.reroutes,
                  client_deadline_failures=self.deadline_failures,
                  ryw_token=self._token)
         return s

@@ -28,6 +28,17 @@ Protocol per update chunk (all under the service ``_apply_lock``)::
 A fresh service writes a synchronous generation-0 boot snapshot, so
 read replicas (:mod:`repro.core.replicas`) can always bootstrap from a
 snapshot + tail instead of special-casing an empty store.
+
+High availability (PR 10): pass a held :class:`repro.ha.lease.FileLease`
+and the service becomes the *leader* role of the failover story -- its
+WAL segments are stamped with the lease epoch (the fencing token), a
+heartbeat renews the lease off the apply path, and losing it (takeover,
+renewal failure, or an epoch fence hit on append) flips the store into
+a permanently self-fenced state where updates raise a typed
+:class:`~repro.fault.errors.NotLeader` carrying the current leader as a
+hint -- reads keep serving the committed state.  Promotion of a replica
+into a new ``DurableService`` lives in
+:meth:`repro.core.replicas.Replica.promote`.
 """
 from __future__ import annotations
 
@@ -45,10 +56,11 @@ from repro.core.service import SCCService
 from repro.fault import errors as fault_errors
 
 __all__ = ["DurableService", "decision_kwargs", "scratch_replay",
-           "wal_dir", "snap_dir", "HEALTHY", "DEGRADED"]
+           "wal_dir", "snap_dir", "HEALTHY", "DEGRADED", "FENCED"]
 
 HEALTHY = "healthy"
 DEGRADED = "degraded"
+FENCED = "fenced"
 
 
 def wal_dir(directory: str) -> str:
@@ -121,7 +133,7 @@ class DurableService(SCCService):
                  snapshot_every: int = 256, snapshot_keep: int = 3,
                  trim_on_snapshot: bool = True,
                  boot_snapshot: bool = True, _defer_wal: bool = False,
-                 recover_probe_s: float = 0.05,
+                 recover_probe_s: float = 0.05, lease=None,
                  **service_kwargs):
         super().__init__(cfg, state=state, **service_kwargs)
         self._dir = directory
@@ -139,6 +151,19 @@ class DurableService(SCCService):
         self.snapshot_count = 0
         self.replayed_wal_records = 0
         self._wal: oplog.OpLogWriter | None = None
+        # leadership (see module docstring): the lease's epoch is the
+        # WAL fencing token; once fenced/crashed the store never writes
+        # again and updates bounce typed NotLeader with a leader hint
+        self._lease = lease
+        if lease is not None and not lease.valid:
+            raise fault_errors.NotLeader(
+                f"cannot open durable writer for {directory!r}: the "
+                f"lease is not held", leader=self._leader_hint())
+        self._epoch = lease.epoch if lease is not None else 0
+        self._fenced = False
+        self._fenced_error: BaseException | None = None
+        self._crashed = False
+        self.notleader_rejects = 0
         # degraded-mode state machine (see `health`): a WAL disk fault
         # flips writes off while reads keep serving the committed state;
         # probes rate-limited by recover_probe_s re-attach when it heals
@@ -155,6 +180,8 @@ class DurableService(SCCService):
             self.snapshot_now()
         if not _defer_wal:
             self._attach_wal()
+        if lease is not None:
+            lease.start_heartbeat()
 
     # ---------------------------------------------------------- opening ---
 
@@ -164,7 +191,7 @@ class DurableService(SCCService):
              sync_every: int = 1, segment_bytes: int = 4 << 20,
              snapshot_every: int = 256, snapshot_keep: int = 3,
              trim_on_snapshot: bool = True, recover_probe_s: float = 0.05,
-             **service_kwargs) -> "DurableService":
+             lease=None, **service_kwargs) -> "DurableService":
         """Recover (or create) the durable store at ``directory``.
 
         Recovery restores the latest intact snapshot, reconstructs the
@@ -185,7 +212,7 @@ class DurableService(SCCService):
                           snapshot_every=snapshot_every,
                           snapshot_keep=snapshot_keep,
                           trim_on_snapshot=trim_on_snapshot,
-                          recover_probe_s=recover_probe_s)
+                          recover_probe_s=recover_probe_s, lease=lease)
         if st is None:
             if cfg is None:
                 raise FileNotFoundError(
@@ -225,14 +252,51 @@ class DurableService(SCCService):
         # the next chunk logged at the same generation (an OSError here
         # fails the recovery probe -- the disk has not healed)
         oplog.drop_unapplied_tail(self._wal_path, self.gen)
+        # leaderless stores adopt the directory's newest epoch (epoch
+        # continuity across plain restarts); a leased writer stamps its
+        # fencing token explicitly -- a stale lease raises Fenced here
         self._wal = oplog.OpLogWriter(
             self._wal_path, segment_bytes=self._segment_bytes,
-            sync_every=self._sync_every, start_gen=self.gen)
+            sync_every=self._sync_every, start_gen=self.gen,
+            epoch=self._lease.epoch if self._lease is not None else None)
+        self._epoch = self._wal.epoch
 
     # ----------------------------------------------------------- updates --
 
+    def _leader_hint(self) -> str | None:
+        """Current lease owner, when it is someone else (the NotLeader
+        redirect hint clients reroute on)."""
+        if self._lease is None:
+            return None
+        info = self._lease.peek()
+        if info is None or info.owner == self._lease.owner:
+            return None
+        return info.owner
+
+    def _not_leader(self, why: str, cause: BaseException | None = None):
+        self.notleader_rejects += 1
+        raise fault_errors.NotLeader(
+            f"durable store {self._dir!r}: {why}; reroute to the "
+            f"current leader and resubmit (idempotent)",
+            leader=self._leader_hint(),
+            retry_after=self._lease.ttl_s if self._lease is not None
+            else self._recover_probe_s) from cause
+
     def _apply_chunk(self, kind, u, v) -> np.ndarray:
         with self._apply_lock:
+            if self._crashed:
+                self._not_leader("writer crashed (chaos injection)")
+            if self._fenced:
+                self._not_leader("fenced by a higher writer epoch",
+                                 self._fenced_error)
+            if self._lease is not None and not self._lease.valid:
+                # self-fence on lease loss: even though the WAL fence
+                # would stop the append anyway, refusing here keeps the
+                # failure typed as leadership, not as a disk fault
+                self._fenced = True
+                self._fenced_error = self._lease.lost_reason
+                self._not_leader("write lease lost",
+                                 self._lease.lost_reason)
             if self._degraded and not self._try_recover():
                 self.unavailable_rejects += 1
                 raise fault_errors.Unavailable(
@@ -250,6 +314,12 @@ class DurableService(SCCService):
             # an unacknowledged chunk, which converges (never diverges)
             try:
                 self._wal.append(self.gen, kind, u, v)
+            except fault_errors.Fenced as e:
+                # a higher epoch owns the log: nothing was written and
+                # nothing may ever be again -- permanent self-fence
+                self._fenced = True
+                self._fenced_error = e
+                self._not_leader("fenced by a higher writer epoch", e)
             except OSError as e:
                 # nothing applied: reject this chunk as retryable and
                 # flip to DEGRADED (reads unaffected)
@@ -271,7 +341,10 @@ class DurableService(SCCService):
             # committed chunk look failed and a client retry double-apply
             try:
                 self._wal.maybe_rotate(self.gen)
-            except OSError as e:
+            except fault_errors.Fenced as e:  # fence landed mid-commit:
+                self._fenced = True           # this chunk is durable at
+                self._fenced_error = e        # our epoch; the NEXT one
+            except OSError as e:              # bounces NotLeader
                 self._enter_degraded(e)
             self._maybe_snapshot()
             return ok
@@ -294,11 +367,34 @@ class DurableService(SCCService):
 
     @property
     def health(self) -> str:
-        """``"healthy"`` (read-write) or ``"degraded"`` (read-only: the
+        """``"healthy"`` (read-write), ``"degraded"`` (read-only: the
         WAL disk is refusing writes; queries keep answering from the
         committed state, updates raise ``Unavailable(retry_after)``
-        until a probe re-attaches the log)."""
+        until a probe re-attaches the log), or ``"fenced"`` (read-only
+        forever: leadership moved to a higher epoch -- updates raise
+        ``NotLeader`` with the new leader as a hint)."""
+        if self._fenced or self._crashed:
+            return FENCED
         return DEGRADED if self._degraded else HEALTHY
+
+    @property
+    def epoch(self) -> int:
+        """The writer epoch stamped on this store's WAL segments."""
+        return self._epoch
+
+    @property
+    def lease(self):
+        return self._lease
+
+    def crash(self):
+        """Chaos hook: make this writer behave as if SIGKILLed -- the
+        lease heartbeat stops (WITHOUT backdating: failover must wait
+        out the TTL, the realistic path), no clean WAL close happens,
+        and every later update bounces :class:`~repro.fault.errors.
+        NotLeader` the way a connection to a dead process would."""
+        self._crashed = True
+        if self._lease is not None:
+            self._lease.abandon()
 
     def _enter_degraded(self, e: BaseException):
         """Flip to read-only after a WAL-side OSError (idempotent).  The
@@ -317,6 +413,8 @@ class DurableService(SCCService):
         """Probe the disk (rate-limited) and re-attach the WAL if it
         heals: repair the torn tail, open a fresh segment -- whose
         header write + fsync IS the probe.  Caller holds _apply_lock."""
+        if self._fenced:
+            return False  # leadership is gone for good, not a disk blip
         now = time.monotonic()
         if not force and now - self._last_probe < self._recover_probe_s:
             return False
@@ -329,6 +427,10 @@ class DurableService(SCCService):
                 pass
         try:
             self._attach_wal()
+        except fault_errors.Fenced as e:
+            self._fenced = True
+            self._fenced_error = e
+            return False
         except OSError:
             return False  # still sick; _wal stays None, _degraded True
         self._degraded = False
@@ -349,6 +451,7 @@ class DurableService(SCCService):
     def _snapshot_meta(self, cfg: gs.GraphConfig, gen: int) -> dict:
         return {
             "gen": int(gen),
+            "epoch": int(self._epoch),
             "cfg": _cfg_meta(cfg),
             "service": {
                 "buckets": list(self._sched.buckets),
@@ -422,6 +525,9 @@ class DurableService(SCCService):
             except OSError as e:  # final fsync on a sick disk
                 self._enter_degraded(e)
             self._wal = None
+        if self._lease is not None and not self._crashed:
+            self._lease.release()  # graceful handoff: successor takes
+            # over on its next poll instead of waiting out a full TTL
 
     # -------------------------------------------------------------- misc --
 
@@ -437,8 +543,12 @@ class DurableService(SCCService):
                    last_snapshot_gen=self._last_snap_gen,
                    replayed_wal_records=self.replayed_wal_records,
                    health=self.health,
+                   epoch=self._epoch,
                    degraded_count=self.degraded_count,
                    recovered_count=self.recovered_count,
                    unavailable_rejects=self.unavailable_rejects,
+                   notleader_rejects=self.notleader_rejects,
                    snapshot_failures=self.snapshot_failures)
+        if self._lease is not None:
+            out.update(self._lease.stats())
         return out

@@ -10,7 +10,9 @@ committed generation boundary.
 Log layout (``<dir>/wal_<seq>.seg``, monotonically increasing ``seq``)::
 
     segment  := header record*
-    header   := MAGIC("SCCWAL01") u64(base_gen)
+    header   := MAGIC("SCCWAL02") i64(base_gen) i64(epoch)     (v2)
+              | MAGIC("SCCWAL01") i64(base_gen)                (v1, read
+                                                  back-compat, epoch 0)
     record   := u32(REC_MAGIC) u32(len(payload)) u32(crc32(payload)) payload
     payload  := i64(gen_before) u32(n_ops)
                 i32[n_ops](kind) i32[n_ops](u) i32[n_ops](v)
@@ -20,6 +22,25 @@ the chunk was applied on top of; successive records carry strictly
 increasing ``gen_before`` (every chunk bumps the generation at least
 once), which is what lets recovery seek the replay point for any
 snapshot generation by a plain scan.
+
+Writer epochs + fencing (the split-brain guard of the HA story,
+docs/ARCHITECTURE.md §Failover):
+
+* every v2 segment header carries the **writer epoch** that stamped it;
+  epochs are monotone across the segment sequence (v1 segments read as
+  epoch 0, so a pre-epoch log upgrades in place);
+* a **fence marker** (``fence_<epoch>``, empty file created ``O_EXCL``)
+  declares every lower epoch stale.  :func:`write_fence` and every
+  :class:`OpLogWriter` mutation serialize on an advisory ``wal.lock``
+  flock, and the writer re-checks :func:`newest_epoch` under that lock
+  *before* each append/rotation -- so once a promotion has fenced epoch
+  ``e``, a resurrected epoch-``<e`` writer's next append raises a typed
+  :class:`~repro.fault.errors.Fenced` with **nothing written**, and any
+  append that did complete before the fence is durable and visible to
+  the promoter's tail drain (exactly-once across failover);
+* the promotion order is therefore: take the lease (epoch bump) ->
+  ``write_fence`` -> ``repair_tail`` -> drain the tail -> open the new
+  epoch's writer segment.
 
 Crash safety:
 
@@ -42,6 +63,7 @@ Crash safety:
 """
 from __future__ import annotations
 
+import contextlib
 import os
 import re
 import struct
@@ -50,21 +72,52 @@ from typing import Iterator, List, NamedTuple, Tuple
 
 import numpy as np
 
+try:
+    import fcntl
+except ImportError:  # non-POSIX: advisory lock degrades to a no-op
+    fcntl = None
+
 from repro.fault import errors as fault_errors
 from repro.fault.inject import fs_fsync, fs_open
 
-__all__ = ["OpLogWriter", "LogTailer", "OpRecord", "read_segment",
-           "read_log", "list_segments", "repair_tail",
-           "drop_unapplied_tail", "trim", "SEG_HEADER_BYTES"]
+__all__ = ["OpLogWriter", "LogTailer", "OpRecord", "SegmentHeader",
+           "read_segment", "read_log", "list_segments", "repair_tail",
+           "drop_unapplied_tail", "trim", "segment_header",
+           "segment_base_gen", "parse_segment_header", "write_fence",
+           "list_fences", "newest_epoch", "SEG_HEADER_BYTES"]
 
-_SEG_MAGIC = b"SCCWAL01"
+_SEG_MAGIC_V1 = b"SCCWAL01"
+_SEG_MAGIC_V2 = b"SCCWAL02"
 _REC_MAGIC = 0xA11C0DE5
 _REC_HDR = struct.Struct("<III")          # magic, payload len, crc32
 _PAYLOAD_HDR = struct.Struct("<qI")       # gen_before, n_ops
-_SEG_HDR = struct.Struct("<8sq")          # magic, base_gen
-SEG_HEADER_BYTES = _SEG_HDR.size
+_SEG_HDR_V1 = struct.Struct("<8sq")       # magic, base_gen
+_SEG_HDR_V2 = struct.Struct("<8sqq")      # magic, base_gen, epoch
+SEG_HEADER_BYTES = _SEG_HDR_V2.size       # what the writer emits today
 
 _SEG_RE = re.compile(r"wal_(\d{8})\.seg")
+_FENCE_RE = re.compile(r"fence_(\d{8})")
+_LOCK_NAME = "wal.lock"
+
+
+@contextlib.contextmanager
+def _wal_lock(directory: str):
+    """Advisory per-directory mutex (flock) serializing writer mutations
+    against :func:`write_fence`: the fence check and the bytes it guards
+    are atomic with respect to a concurrent promotion.  Deliberately NOT
+    routed through the fault-injection shims -- the lock is coordination,
+    not data, and an injected EIO here would fail appends the durability
+    ledger never sees."""
+    if fcntl is None:
+        yield
+        return
+    fd = os.open(os.path.join(directory, _LOCK_NAME),
+                 os.O_CREAT | os.O_RDWR, 0o644)
+    try:
+        fcntl.flock(fd, fcntl.LOCK_EX)
+        yield
+    finally:
+        os.close(fd)  # close releases the flock
 
 
 class OpRecord(NamedTuple):
@@ -91,13 +144,99 @@ def list_segments(directory: str) -> List[Tuple[int, str]]:
     return sorted(out)
 
 
-def segment_base_gen(path: str) -> int:
+class SegmentHeader(NamedTuple):
+    """Parsed segment header: base generation, writer epoch, and the
+    header's on-disk size (v1 and v2 differ -- every reader must offset
+    records by the *segment's own* header size)."""
+    base_gen: int
+    epoch: int
+    size: int
+
+
+def parse_segment_header(buf: bytes, path: str = "<buf>") -> SegmentHeader:
+    """Decode a segment header (v2, or v1 read as epoch 0); raises a
+    typed :class:`~repro.fault.errors.WalCorrupt` on a bad/short magic
+    so the replica resync path can dispatch on it."""
+    if len(buf) >= _SEG_HDR_V2.size and buf[:8] == _SEG_MAGIC_V2:
+        _, base_gen, epoch = _SEG_HDR_V2.unpack_from(buf, 0)
+        return SegmentHeader(base_gen, epoch, _SEG_HDR_V2.size)
+    if len(buf) >= _SEG_HDR_V1.size and buf[:8] == _SEG_MAGIC_V1:
+        _, base_gen = _SEG_HDR_V1.unpack_from(buf, 0)
+        return SegmentHeader(base_gen, 0, _SEG_HDR_V1.size)
+    raise fault_errors.WalCorrupt(
+        f"bad WAL segment header in {path!r}")
+
+
+def segment_header(path: str) -> SegmentHeader:
     with open(path, "rb") as f:
-        hdr = f.read(SEG_HEADER_BYTES)
-    magic, base_gen = _SEG_HDR.unpack(hdr)
-    if magic != _SEG_MAGIC:
-        raise ValueError(f"bad WAL segment header in {path!r}")
-    return base_gen
+        buf = f.read(_SEG_HDR_V2.size)
+    return parse_segment_header(buf, path)
+
+
+def segment_base_gen(path: str) -> int:
+    return segment_header(path).base_gen
+
+
+def _fence_path(directory: str, epoch: int) -> str:
+    return os.path.join(directory, f"fence_{epoch:08d}")
+
+
+def list_fences(directory: str) -> List[int]:
+    """Sorted epochs with a fence marker in the directory."""
+    out = []
+    if not os.path.isdir(directory):
+        return out
+    for name in os.listdir(directory):
+        m = _FENCE_RE.fullmatch(name)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def newest_epoch(directory: str) -> int:
+    """The directory's current writer epoch: the max over fence markers
+    and the newest readable segment header (0 for an empty or pre-epoch
+    store).  A writer whose epoch is below this value is stale."""
+    top = 0
+    fences = list_fences(directory)
+    if fences:
+        top = fences[-1]
+    for _, path in reversed(list_segments(directory)):
+        try:
+            return max(top, segment_header(path).epoch)
+        except (OSError, fault_errors.WalCorrupt):
+            continue  # torn header (writer died mid-create): look back
+    return top
+
+
+def write_fence(directory: str, epoch: int) -> str:
+    """Durably fence every writer epoch below ``epoch``: create the
+    marker ``O_EXCL`` (idempotent if it already exists) under the WAL
+    lock, so no stale append can interleave with the fence becoming
+    visible -- after this returns, an epoch-``<epoch`` writer's next
+    append raises :class:`~repro.fault.errors.Fenced` having written
+    nothing, and every append that completed before it is durable on
+    disk for the promoter's tail drain."""
+    os.makedirs(directory, exist_ok=True)
+    path = _fence_path(directory, epoch)
+    with _wal_lock(directory):
+        try:
+            fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            return path
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+        try:  # make the marker's directory entry itself durable
+            dfd = os.open(directory, os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
+        except OSError:
+            pass
+    return path
 
 
 def _encode_record(gen_before: int, kind, u, v) -> bytes:
@@ -146,12 +285,13 @@ def read_segment(path: str) -> Tuple[List[OpRecord], bool, int]:
     (what a tail repair would truncate to)."""
     with open(path, "rb") as f:
         buf = f.read()
-    if len(buf) < SEG_HEADER_BYTES or \
-            buf[:len(_SEG_MAGIC)] != _SEG_MAGIC:
+    try:
+        hdr = parse_segment_header(buf, path)
+    except fault_errors.WalCorrupt:
         return [], False, 0
     records = []
-    end = SEG_HEADER_BYTES
-    for end, rec in _scan_records(buf, SEG_HEADER_BYTES):
+    end = hdr.size
+    for end, rec in _scan_records(buf, hdr.size):
         records.append(rec)
     return records, end == len(buf), end
 
@@ -191,7 +331,7 @@ def repair_tail(directory: str) -> int:
         if clean:
             return dropped
         size = os.path.getsize(path)
-        if valid_end < SEG_HEADER_BYTES:
+        if valid_end <= 0:
             # not even a valid header survived: the segment holds no
             # acknowledged data -- a 0-byte stub would still read as
             # torn and orphan any segment a new writer opens after it
@@ -222,11 +362,13 @@ def drop_unapplied_tail(directory: str, gen: int) -> int:
     _, path = segs[-1]
     with open(path, "rb") as f:
         buf = f.read()
-    if len(buf) < SEG_HEADER_BYTES or buf[:len(_SEG_MAGIC)] != _SEG_MAGIC:
+    try:
+        hdr = parse_segment_header(buf, path)
+    except fault_errors.WalCorrupt:
         return 0
     cut = None
-    prev = SEG_HEADER_BYTES
-    for end, rec in _scan_records(buf, SEG_HEADER_BYTES):
+    prev = hdr.size
+    for end, rec in _scan_records(buf, hdr.size):
         if cut is None and rec.gen_before >= gen:
             cut = prev  # gen_before is strictly increasing: everything
             #             from here on is unapplied
@@ -257,16 +399,31 @@ def trim(directory: str, min_gen: int) -> int:
 
 
 class OpLogWriter:
-    """Appender with fsync batching, rotation, and tail rollback."""
+    """Appender with fsync batching, rotation, tail rollback -- and epoch
+    fencing: every segment is stamped with this writer's ``epoch``, and
+    every append/rotation re-checks (under the WAL lock) that no higher
+    epoch has fenced the directory.  ``epoch=None`` adopts the store's
+    current epoch (:func:`newest_epoch`) -- the single-writer default;
+    an HA writer passes its lease's fencing token explicitly so a
+    resurrected stale leader can never adopt its way past a fence."""
 
     def __init__(self, directory: str, *, segment_bytes: int = 4 << 20,
-                 sync_every: int = 1, start_gen: int = 0):
+                 sync_every: int = 1, start_gen: int = 0,
+                 epoch: int | None = None):
         os.makedirs(directory, exist_ok=True)
         self._dir = directory
         self._segment_bytes = int(segment_bytes)
         self._sync_every = max(1, int(sync_every))
         self._unsynced = 0
         self._last_span: Tuple[int, int] | None = None  # (start, end)
+        top = newest_epoch(directory)
+        if epoch is None:
+            epoch = top
+        elif epoch < top:
+            raise fault_errors.Fenced(
+                f"writer epoch {epoch} is stale: {directory!r} is fenced "
+                f"at epoch {top}; nothing was written")
+        self.epoch = int(epoch)
         segs = list_segments(directory)
         self._seq = segs[-1][0] if segs else 0
         self._f = None
@@ -276,16 +433,51 @@ class OpLogWriter:
         self.rotations = 0
         self.rollbacks = 0
 
+    def _assert_unfenced(self, horizon_seq: int):
+        """Raise :class:`~repro.fault.errors.Fenced` if a fence marker or
+        a foreign segment at/after ``horizon_seq`` carries a higher epoch.
+        Caller holds the WAL lock, so the verdict cannot race a
+        concurrent :func:`write_fence`."""
+        top = -1
+        for name in os.listdir(self._dir):
+            m = _FENCE_RE.fullmatch(name)
+            if m:
+                top = max(top, int(m.group(1)))
+                continue
+            m = _SEG_RE.fullmatch(name)
+            if m and int(m.group(1)) >= horizon_seq:
+                try:
+                    top = max(top, segment_header(
+                        os.path.join(self._dir, name)).epoch)
+                except (OSError, fault_errors.WalCorrupt):
+                    pass
+        if top > self.epoch:
+            raise fault_errors.Fenced(
+                f"writer epoch {self.epoch} fenced by epoch {top} in "
+                f"{self._dir!r}; nothing was written")
+
     def _open_segment(self, seq: int, base_gen: int):
         if self._f is not None:
             self.sync()
             self._f.close()
-        self._seq = seq
-        self._f = fs_open(_seg_path(self._dir, seq), "xb")
-        self._f.write(_SEG_HDR.pack(_SEG_MAGIC, int(base_gen)))
-        self._f.flush()
-        fs_fsync(self._f)
-        self._pos = SEG_HEADER_BYTES
+            self._f = None
+        with _wal_lock(self._dir):
+            self._assert_unfenced(seq)
+            try:
+                self._f = fs_open(_seg_path(self._dir, seq), "xb")
+            except FileExistsError as e:
+                # another writer created it first: by protocol it fenced
+                # us before doing so, or it is a misconfigured twin --
+                # either way this writer must not touch the log again
+                raise fault_errors.Fenced(
+                    f"segment {seq} already exists in {self._dir!r}: "
+                    f"another writer owns this log") from e
+            self._seq = seq
+            self._f.write(_SEG_HDR_V2.pack(_SEG_MAGIC_V2, int(base_gen),
+                                           self.epoch))
+            self._f.flush()
+            fs_fsync(self._f)
+        self._pos = _SEG_HDR_V2.size
         self._last_span = None
 
     @property
@@ -302,19 +494,27 @@ class OpLogWriter:
         it ahead of a *different* chunk later logged at the same
         generation, losing the acked one to the ``gen_before < gen``
         skip.  Earlier records of the same fsync batch are preserved
-        (they were acknowledged)."""
+        (they were acknowledged).
+
+        Raises :class:`~repro.fault.errors.Fenced` -- with nothing
+        written -- when a higher epoch owns the directory; the check and
+        the write are atomic under the WAL lock, so an append can only
+        land entirely before a fence (durable, drained by the promoter)
+        or fail entirely after it."""
         rec = _encode_record(gen_before, kind, u, v)
         start = self._pos
-        try:
-            self._f.write(rec)
-            self._pos += len(rec)
-            self._last_span = (start, self._pos)
-            self._unsynced += 1
-            if self._unsynced >= self._sync_every:
-                self.sync()
-        except OSError:
-            self._discard_to(start)
-            raise
+        with _wal_lock(self._dir):
+            self._assert_unfenced(self._seq + 1)
+            try:
+                self._f.write(rec)
+                self._pos += len(rec)
+                self._last_span = (start, self._pos)
+                self._unsynced += 1
+                if self._unsynced >= self._sync_every:
+                    self.sync()
+            except OSError:
+                self._discard_to(start)
+                raise
         self.appended += 1
 
     def rollback_last(self) -> None:
@@ -383,7 +583,8 @@ class OpLogWriter:
         return {"wal_appended": self.appended, "wal_syncs": self.syncs,
                 "wal_rotations": self.rotations,
                 "wal_rollbacks": self.rollbacks,
-                "wal_segment": self._seq, "wal_bytes": self._pos}
+                "wal_segment": self._seq, "wal_bytes": self._pos,
+                "wal_epoch": self.epoch}
 
 
 class LogTailer:
@@ -415,8 +616,13 @@ class LogTailer:
             start = 0
             try:
                 for i, (_, path) in enumerate(segs):
-                    if segment_base_gen(path) <= self._from_gen:
-                        start = i
+                    try:
+                        if segment_base_gen(path) <= self._from_gen:
+                            start = i
+                    except fault_errors.WalCorrupt:
+                        break  # header still being written (or torn):
+                        # seek no further; poll() adjudicates pending
+                        # vs. corrupt once a cursor sits on it
             except FileNotFoundError:
                 continue  # trim raced the listing: re-list, never raise
             break
@@ -425,7 +631,7 @@ class LogTailer:
                 f"segments in {directory!r} kept vanishing while "
                 f"seeking generation {from_gen}")
         self._seq = segs[start][0]
-        self._offset = SEG_HEADER_BYTES
+        self._offset = 0  # 0 = at segment start, header not yet consumed
         self.polled_records = 0
 
     @property
@@ -444,6 +650,19 @@ class LogTailer:
                 raise fault_errors.WalTrimmed(
                     f"WAL segment {path!r} was trimmed under the tail "
                     f"cursor; resync from the covering snapshot") from e
+            if self._offset == 0:
+                # first look at this segment: consume its own header (v1
+                # and v2 sizes differ).  A short/bad header is *pending*
+                # while this is the newest segment (the writer may be
+                # mid-create), corrupt once a newer one exists.
+                try:
+                    self._offset = parse_segment_header(buf, path).size
+                except fault_errors.WalCorrupt:
+                    if os.path.exists(_seg_path(self._dir, self._seq + 1)):
+                        raise fault_errors.WalCorrupt(
+                            f"unreadable WAL segment header in {path!r} "
+                            f"but a newer segment exists")
+                    break
             for end, rec in _scan_records(buf, self._offset):
                 self._offset = end
                 if rec.gen_before >= self._from_gen:
@@ -460,6 +679,6 @@ class LogTailer:
                     f"WAL segment {path!r} has a torn record at offset "
                     f"{self._offset} but a newer segment exists")
             self._seq += 1
-            self._offset = SEG_HEADER_BYTES
+            self._offset = 0
         self.polled_records += len(out)
         return out

@@ -49,8 +49,11 @@ from concurrent.futures import Future
 from concurrent.futures import TimeoutError as _FutureTimeout
 from typing import Dict, List, Sequence, Tuple
 
+import os
+
 from repro.ckpt import checkpoint, oplog
-from repro.ckpt.durable import decision_kwargs, snap_dir, wal_dir
+from repro.ckpt.durable import (DurableService, decision_kwargs, snap_dir,
+                                wal_dir)
 from repro.core.broker import QueryBroker
 from repro.core.service import SCCService
 from repro.fault import errors as fault_errors
@@ -90,8 +93,9 @@ class Replica:
                 f"bootstrap from the writer's boot snapshot")
         # the WRITER's decision knobs: replaying records through the same
         # bucketed update path reproduces its exact gen trajectory
+        self._decision_kwargs = decision_kwargs(meta)
         self._svc = SCCService(cfg, state=st,
-                               **decision_kwargs(meta), **service_kwargs)
+                               **self._decision_kwargs, **service_kwargs)
         self._tailer = oplog.LogTailer(wal_dir(directory),
                                        from_gen=self._svc.gen)
         self.broker = QueryBroker(self._svc, buckets=query_buckets)
@@ -223,6 +227,66 @@ class Replica:
                                        from_gen=self._svc.gen)
         self.resyncs += 1
 
+    # -------------------------------------------------------- promotion ---
+
+    def promote(self, lease, **durable_kwargs) -> DurableService:
+        """Become the durable writer: the failover half of the HA story.
+
+        ``lease`` must be acquirable (fresh, stale, or already held by
+        this caller) -- its post-acquire epoch is the new fencing token.
+        The order is what makes the handoff exactly-once:
+
+        1. **take the lease** (epoch bump E = old + 1);
+        2. **fence the WAL at E** -- from this instant the old writer's
+           next append raises ``Fenced`` with nothing written, while any
+           append that completed before it is durable on disk;
+        3. **repair + drain the tail to the fenced end** -- every acked
+           op (and any durable-but-unacked record, the standard recovery
+           convention) is applied to this replica's state;
+        4. **open the epoch-E writer** over that state -- a
+           :class:`~repro.ckpt.durable.DurableService` sharing this
+           replica's committed pytree, appending epoch-E segments.
+
+        The replica keeps serving reads (its broker never stops) and
+        resumes tailing afterwards, now following its own writer's log.
+        Raises :class:`~repro.fault.errors.Unavailable` when the lease
+        cannot be taken (holder still alive / lost the takeover race).
+        """
+        if not lease.try_acquire():
+            raise fault_errors.Unavailable(
+                f"replica {self.replica_id} could not take the write "
+                f"lease (holder alive or takeover race lost)",
+                retry_after=lease.ttl_s)
+        # pause tailing so the drain below owns the tailer exclusively
+        resume = self._thread is not None
+        if resume:
+            self._stop.set()
+            self._thread.join()
+            self._thread = None
+        oplog.write_fence(wal_dir(self._dir), lease.epoch)
+        oplog.repair_tail(wal_dir(self._dir))
+        for _ in range(100_000):
+            before = self._svc.gen
+            if self.tail_once(max_records=None) == 0 \
+                    and self._svc.gen == before:
+                break
+        else:
+            raise fault_errors.WalGap(
+                f"replica {self.replica_id} could not drain the WAL "
+                f"tail to the fenced end (no progress)")
+        leader = DurableService(
+            self._svc._cfg, self._dir, state=self._svc._committed,
+            boot_snapshot=False, _defer_wal=True, lease=lease,
+            **self._decision_kwargs, **durable_kwargs)
+        leader._attach_wal()  # opens the first epoch-E segment
+        if resume:
+            self._stop = threading.Event()
+            self._thread = threading.Thread(
+                target=self._run, name=f"scc-replica-{self.replica_id}",
+                daemon=True)
+            self._thread.start()
+        return leader
+
     def _run(self):
         """Pull loop on a wall-clock-aligned grid: ticks land at
         ``k * poll_interval + poll_offset``, so a ReplicaSet can stagger
@@ -296,7 +360,10 @@ class ReplicaSet:
                  poll_interval: float = 0.002,
                  auto_tail: bool = True, supervise: bool = False,
                  health_check_s: float | None = None,
-                 max_restarts: int = 8, **replica_kwargs):
+                 max_restarts: int = 8,
+                 promote_on_writer_loss: bool = False,
+                 lease_ttl_s: float = 0.5,
+                 writer_kwargs: dict | None = None, **replica_kwargs):
         assert n >= 1
         self._dir = directory
         self._n = n
@@ -319,9 +386,19 @@ class ReplicaSet:
         self._max_restarts = max_restarts
         self._health_check_s = health_check_s if health_check_s \
             is not None else max(4 * poll_interval, 0.02)
+        # writer failover: when the store's write lease goes stale (the
+        # leader's heartbeat died), the supervisor promotes the most
+        # caught-up healthy replica into a new DurableService leader
+        self._promote = bool(promote_on_writer_loss)
+        self._lease_ttl_s = float(lease_ttl_s)
+        self._writer_kwargs = dict(writer_kwargs or {})
+        self._leader: DurableService | None = None
+        self.promotions = 0
+        self.promote_failures = 0
+        self.last_promote_error: BaseException | None = None
         self._sup_stop = threading.Event()
         self._sup_thread: threading.Thread | None = None
-        if supervise:
+        if supervise or self._promote:
             self._sup_thread = threading.Thread(
                 target=self._supervise, name="scc-replica-supervisor",
                 daemon=True)
@@ -343,6 +420,9 @@ class ReplicaSet:
         seen: set = set()  # replicas already quarantined (strong refs:
         # an id()-keyed set could alias a collected replica's reuse)
         while not self._sup_stop.wait(self._health_check_s):
+            if self._promote and self._leader is None \
+                    and not self._stopped:
+                self._maybe_promote()
             for i, rep in enumerate(list(self.replicas)):
                 if rep.healthy or self._stopped:
                     continue
@@ -366,6 +446,42 @@ class ReplicaSet:
                         self.restarts += 1
                 if raced_stop:  # raced a stop(): tear it down
                     fresh.shutdown()
+
+    def _maybe_promote(self):
+        """Writer-failover check: a lease file that exists but has gone
+        stale means the leader's heartbeat died -- promote the most
+        caught-up healthy replica.  No lease file means the deployment
+        never elected a writer; promoting would CREATE a split brain
+        instead of healing one, so the supervisor stands down."""
+        from repro.ha.lease import FileLease
+        lease = FileLease(
+            self._dir, owner=f"replicaset-{os.getpid()}",
+            ttl_s=self._lease_ttl_s)
+        info = lease.peek()
+        if info is None or info.age_s < self._lease_ttl_s:
+            return  # no HA deployment here, or the writer is alive
+        cands = self.healthy_replicas
+        if not cands:
+            return
+        rep = max(cands, key=lambda r: r.gen)
+        try:
+            leader = rep.promote(lease, **self._writer_kwargs)
+        except fault_errors.Unavailable:
+            return  # takeover race lost / writer revived: not a failure
+        except Exception as e:
+            self.promote_failures += 1
+            self.last_promote_error = e
+            return
+        with self._lock:
+            self._leader = leader
+            self.promotions += 1
+
+    @property
+    def leader(self) -> DurableService | None:
+        """The writer this set promoted after a failover (None until a
+        promotion happened).  Clients pass ``lambda: rset.leader`` as
+        their ``leader_resolver`` to reroute updates on ``NotLeader``."""
+        return self._leader
 
     @property
     def healthy_replicas(self) -> List[Replica]:
@@ -476,6 +592,11 @@ class ReplicaSet:
             e = r.shutdown()
             if e is not None:
                 errors.append(e)
+        if self._leader is not None:
+            try:  # the set promoted it, the set closes it (graceful
+                self._leader.close()  # handoff: lease mtime backdated)
+            except Exception as e:
+                errors.append(e)
         if errors:
             raise errors[0]
 
@@ -509,6 +630,8 @@ class ReplicaSet:
                "quarantined": self.quarantined,
                "restarts": self.restarts,
                "failovers": self.failovers,
+               "promotions": self.promotions,
+               "promote_failures": self.promote_failures,
                "served": sum(r.broker.served for r in self.replicas),
                "flushes": sum(r.broker.flushes for r in self.replicas),
                "gen_waits": sum(r.broker.gen_waits

@@ -15,10 +15,17 @@ table)::
     │   │                             retry_after (seconds hint)
     │   └── QueueFull                 admission queue rejected the chunk
     │       (repro.tenancy.queue)
+    ├── NotLeader                     this node lost write leadership;
+    │                                 retryable=True, carries a leader
+    │                                 hint -- clients reroute + resubmit
     ├── DeadlineExceeded              the caller's time budget ran out
     ├── BrokerStopped                 query path shut down under the op
     ├── CapacityExhausted             config limit hit (max_edge_capacity,
     │                                 non-converging growth) -- durable
+    ├── Fenced                        a higher writer epoch owns the WAL;
+    │                                 the stale writer wrote NOTHING
+    ├── LeaseLost                     lease renewal found the lease taken
+    │                                 over (internal leadership signal)
     ├── WalGap                        log/store continuity violated
     ├── WalTrimmed                    tailer cursor trimmed underneath
     │                                 (internal resync signal)
@@ -30,9 +37,9 @@ and the chaos driver means the *exact* type, never a taxonomy member.
 """
 from __future__ import annotations
 
-__all__ = ["FaultError", "Unavailable", "DeadlineExceeded",
-           "BrokerStopped", "CapacityExhausted", "WalGap", "WalTrimmed",
-           "WalCorrupt"]
+__all__ = ["FaultError", "Unavailable", "NotLeader", "DeadlineExceeded",
+           "BrokerStopped", "CapacityExhausted", "Fenced", "LeaseLost",
+           "WalGap", "WalTrimmed", "WalCorrupt"]
 
 
 class FaultError(RuntimeError):
@@ -63,6 +70,25 @@ class Unavailable(FaultError):
     retryable = True
 
 
+class NotLeader(FaultError):
+    """This node is not (or no longer) the durable writer.
+
+    Raised by a :class:`~repro.ckpt.durable.DurableService` that lost or
+    abandoned its lease, got fenced by a higher-epoch writer, or was
+    crash-injected out of leadership.  Retryable: the op was NOT applied
+    here, and a client that reroutes to the current leader (``leader``
+    hint when known, else its ``leader_resolver``) may resubmit the SAME
+    ``(session, seq)`` chunk -- the idempotent dedup window makes the
+    handoff exactly-once for acked ops."""
+
+    retryable = True
+
+    def __init__(self, *args, leader: str | None = None,
+                 retry_after: float | None = None):
+        super().__init__(*args, retry_after=retry_after)
+        self.leader = leader
+
+
 class DeadlineExceeded(FaultError):
     """The caller's per-op time budget elapsed (possibly across retries).
 
@@ -83,6 +109,23 @@ class CapacityExhausted(FaultError):
     """A configured hard limit was hit (``max_edge_capacity``, growth or
     migration that cannot converge).  Deterministic for the same state +
     chunk, hence never retryable."""
+
+
+class Fenced(FaultError):
+    """A higher writer epoch owns this WAL directory.
+
+    Raised by :class:`~repro.ckpt.oplog.OpLogWriter` *before any byte is
+    written* when a fence marker or segment with a newer epoch exists:
+    the raising writer is stale (a resurrected pre-failover leader) and
+    must never append again.  Not retryable on this node -- the durable
+    store translates it into :class:`NotLeader` for clients."""
+
+
+class LeaseLost(FaultError):
+    """Lease renewal discovered the lease was taken over (or the lease
+    file vanished).  Internal leadership signal: the holder must stop
+    acting as the writer; its WAL epoch is already fenced by the
+    takeover, so even a race here cannot split the log."""
 
 
 class WalGap(FaultError):

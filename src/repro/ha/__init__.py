@@ -1,0 +1,11 @@
+"""High-availability primitives for the durable write path.
+
+:mod:`repro.ha.lease` is the leadership protocol: a file-based lease
+whose monotonically bumped epoch IS the WAL fencing token
+(:mod:`repro.ckpt.oplog`), so write leadership and log authority cannot
+diverge.  :class:`repro.ckpt.durable.DurableService` holds the lease;
+:meth:`repro.core.replicas.Replica.promote` takes it over.
+"""
+from repro.ha.lease import FileLease, LeaseInfo
+
+__all__ = ["FileLease", "LeaseInfo"]

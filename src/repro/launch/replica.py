@@ -28,6 +28,15 @@ Three entry points:
   it bit-for-bit against the independent scratch oracle (generation-0
   boot snapshot + full WAL, :func:`repro.ckpt.durable.scratch_replay`).
 
+* ``--promote-after-crash`` -- the failover half of the crash smoke:
+  after the harness SIGKILLs an ``--ha`` writer child (one that held a
+  :class:`~repro.ha.lease.FileLease`), wait out the lease TTL, take it
+  over from a fresh :class:`Replica` (epoch bump + WAL fence + tail
+  drain), append more chunks as the new epoch's leader, and prove a
+  resurrected writer at the dead epoch is refused with nothing
+  written.  ``--verify-recovery`` afterwards replays the resulting
+  *mixed-epoch* WAL through both recovery paths.
+
 * ``--supervised`` -- multi-process serving (ROADMAP item 4): the
   parent runs the durable writer and spawns ``--replicas`` child
   processes (each a ``--replica-child``: one :class:`Replica` tailing
@@ -52,7 +61,7 @@ import time
 import numpy as np
 
 __all__ = ["run_replicated_stream", "writer_child", "verify_recovery",
-           "replica_child", "supervised_stream"]
+           "replica_child", "supervised_stream", "promote_after_crash"]
 
 
 def _writer_config(nv: int, edge_capacity: int | None = None):
@@ -196,22 +205,33 @@ def run_replicated_stream(directory: str, *, replicas: int = 2,
 
 def writer_child(directory: str, *, nv: int = 256, steps: int = 10_000,
                  chunk: int = 64, seed: int = 0, pace_s: float = 0.0,
-                 snapshot_every: int = 0):
+                 snapshot_every: int = 0, ha: bool = False,
+                 lease_ttl_s: float = 0.5):
     """Crash-smoke victim: durable ingest loop, one 'gen <g>' line per
     committed chunk on stdout (the harness watches for progress, then
-    SIGKILLs this process mid-stream)."""
+    SIGKILLs this process mid-stream).  ``ha=True`` makes it a *leased*
+    writer: SIGKILL leaves a stale lease behind for
+    :func:`promote_after_crash` to take over."""
     from repro.api import GraphClient
     from repro.ckpt.durable import DurableService
     from repro.core import graph_state as gs
     from repro.launch.stream import typed_op_stream
 
+    lease = None
+    if ha:
+        from repro.ha.lease import FileLease
+        lease = FileLease(directory, owner=f"writer-{os.getpid()}",
+                          ttl_s=lease_ttl_s)
+        assert lease.try_acquire(), \
+            "writer child could not take the lease (store not fresh?)"
     cfg = _writer_config(nv)
     svc = DurableService(
         cfg, directory, state=gs.all_singletons(cfg), buckets=(chunk,),
         proactive_grow=True, sync_every=1, segment_bytes=16 << 10,
         snapshot_every=snapshot_every, snapshot_keep=1_000_000,
-        trim_on_snapshot=False)  # keep the full WAL: the verifier's
-    #                              scratch oracle replays from gen 0
+        trim_on_snapshot=False, lease=lease)  # keep the full WAL: the
+    #                              verifier's scratch oracle replays
+    #                              from gen 0
     client = GraphClient(svc)
     for step in range(steps):
         ops = typed_op_stream(nv, chunk, step=step, add_frac=0.7,
@@ -359,6 +379,78 @@ def verify_recovery(directory: str) -> dict:
     return summary
 
 
+def promote_after_crash(directory: str, *, owner: str = "promoter",
+                        lease_ttl_s: float = 0.5, wait_s: float = 30.0,
+                        extra_chunks: int = 4, chunk: int = 64,
+                        nv: int = 256, seed: int = 0) -> dict:
+    """Process-level failover: take over a SIGKILLed ``--ha`` writer's
+    store.  Waits out the dead writer's lease TTL, promotes a fresh
+    :class:`Replica` (epoch bump + fence + tail drain), appends
+    ``extra_chunks`` more chunks as the epoch-``E+1`` leader, and
+    proves a resurrected writer at the dead epoch is refused with
+    nothing written.  Raises on timeout or a split-brain breach; the
+    store is left with a *mixed-epoch* WAL for ``--verify-recovery``."""
+    from repro.api import GraphClient
+    from repro.ckpt import oplog
+    from repro.ckpt.durable import wal_dir
+    from repro.core.replicas import Replica
+    from repro.fault import errors as fault_errors
+    from repro.ha.lease import FileLease
+    from repro.launch.stream import typed_op_stream
+
+    lease = FileLease(directory, owner=owner, ttl_s=lease_ttl_s)
+    info = lease.peek()
+    old_epoch = info.epoch if info is not None \
+        else oplog.newest_epoch(wal_dir(directory))
+    rep = Replica(directory, 0, query_buckets=(8,), poll_interval=0.05)
+    leader = None
+    deadline = time.monotonic() + wait_s
+    try:
+        while leader is None:
+            try:
+                # no snapshots: --verify-recovery's scratch oracle
+                # replays the full mixed-epoch WAL from gen 0
+                leader = rep.promote(lease, sync_every=1,
+                                     segment_bytes=16 << 10,
+                                     snapshot_every=0)
+            except fault_errors.Unavailable:
+                if time.monotonic() >= deadline:
+                    raise AssertionError(
+                        f"dead writer's lease never went stale within "
+                        f"{wait_s}s (ttl={lease_ttl_s}s)")
+                time.sleep(lease_ttl_s / 4)
+        gen_at_takeover = leader.gen
+        client = GraphClient(leader)
+        for i in range(extra_chunks):
+            client.submit_many(typed_op_stream(
+                nv, chunk, step=(1 << 19) + i, add_frac=0.7, seed=seed))
+        # split-brain probe: the dead writer's epoch must be refused
+        # with nothing written
+        wdir = wal_dir(directory)
+        before = sorted((f, os.path.getsize(os.path.join(wdir, f)))
+                        for f in os.listdir(wdir))
+        try:
+            zombie = oplog.OpLogWriter(wdir, start_gen=leader.gen,
+                                       epoch=old_epoch)
+            zombie.close()
+            raise AssertionError(
+                "resurrected old-epoch writer was NOT fenced")
+        except fault_errors.Fenced:
+            pass
+        after = sorted((f, os.path.getsize(os.path.join(wdir, f)))
+                       for f in os.listdir(wdir))
+        if after != before:
+            raise AssertionError(
+                "the fenced resurrect probe left bytes in the WAL dir")
+        return {"gen_at_takeover": gen_at_takeover, "gen": leader.gen,
+                "old_epoch": old_epoch, "new_epoch": leader.epoch,
+                "extra_chunks": extra_chunks}
+    finally:
+        if leader is not None:
+            leader.close()
+        rep.stop()
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dir", required=True, help="durable store root")
@@ -372,6 +464,15 @@ def main():
                     help="run the crash-smoke victim writer")
     ap.add_argument("--snapshot-every", type=int, default=0,
                     help="writer-child: async snapshot period in gens")
+    ap.add_argument("--ha", action="store_true",
+                    help="writer-child: hold a write lease (SIGKILL "
+                         "leaves it stale for --promote-after-crash)")
+    ap.add_argument("--lease-ttl", type=float, default=0.5,
+                    help="lease TTL in seconds for --ha / promotion")
+    ap.add_argument("--promote-after-crash", action="store_true",
+                    help="take over a SIGKILLed --ha writer's store: "
+                         "promote a replica, append as the new epoch, "
+                         "probe the fence")
     ap.add_argument("--verify-recovery", action="store_true",
                     help="recover the store and check both recovery "
                          "paths agree bit-for-bit")
@@ -407,7 +508,15 @@ def main():
     if args.writer_child:
         writer_child(args.dir, nv=args.nv, steps=args.steps,
                      chunk=args.chunk, seed=args.seed,
-                     snapshot_every=args.snapshot_every)
+                     snapshot_every=args.snapshot_every, ha=args.ha,
+                     lease_ttl_s=args.lease_ttl)
+        return
+    if args.promote_after_crash:
+        summary = promote_after_crash(args.dir, chunk=args.chunk,
+                                      nv=args.nv, seed=args.seed,
+                                      lease_ttl_s=args.lease_ttl)
+        print("promote OK: " + " | ".join(f"{k}={v}"
+                                          for k, v in summary.items()))
         return
     if args.verify_recovery:
         summary = verify_recovery(args.dir)

@@ -38,6 +38,7 @@ import numpy as np
 from repro.ckpt import checkpoint, oplog
 from repro.ckpt.durable import DurableService, _cfg_meta, snap_dir, wal_dir
 from repro.core import graph_state as gs
+from repro.fault import errors as fault_errors
 from repro.tenancy.engine import TenantEngine
 from repro.tenancy.queue import TransferBufferPool, WorkQueue
 
@@ -46,7 +47,8 @@ __all__ = ["MultiTenantService", "_TenantSession"]
 
 class _TenantHandle:
     __slots__ = ("tid", "resident", "directory", "wal", "last_used",
-                 "evictions", "rehydrations", "parked_gen", "parked_cfg")
+                 "evictions", "rehydrations", "wal_faults",
+                 "parked_gen", "parked_cfg")
 
     def __init__(self, tid: str, directory: Optional[str]):
         self.tid = tid
@@ -56,6 +58,7 @@ class _TenantHandle:
         self.last_used = time.monotonic()
         self.evictions = 0
         self.rehydrations = 0
+        self.wal_faults = 0
         self.parked_gen: Optional[int] = None     # while evicted
         self.parked_cfg: Optional[gs.GraphConfig] = None
 
@@ -313,21 +316,47 @@ class MultiTenantService:
     def _flush_wave(self, requests):
         """WorkQueue callback: write-ahead log every tenant's chunk at
         its pre-chunk generation, apply the wave through the vmapped
-        engine, roll back the WAL record of any lane that failed."""
+        engine, roll back the WAL record of any lane that failed.
+
+        Faults are a per-lane matter: a tenant whose WAL append fails
+        (injected disk fault, full volume, fenced log) is dropped from
+        the wave -- its chunk is neither applied nor acknowledged, and
+        its submitter gets a typed retryable
+        :class:`~repro.fault.errors.Unavailable` chained to the cause.
+        The other tenants' lanes flush normally; one tenant's bad disk
+        never fails a neighbour's write."""
         appended = []
+        live = []
+        errors: Dict[str, Exception] = {}
         with self._lock:
             for tid, kind, u, v in requests:
                 h = self._tenants[tid]
                 self._ensure_resident(h)    # evicted with a queued chunk
                 h.last_used = time.monotonic()
                 if h.wal is not None:
-                    h.wal.append(self._engine.tenant_gen(tid), kind, u, v)
+                    try:
+                        h.wal.append(self._engine.tenant_gen(tid),
+                                     kind, u, v)
+                    except (OSError, fault_errors.Fenced) as e:
+                        # append rolled itself back: nothing durable,
+                        # so nothing may apply -- reject just this lane
+                        h.wal_faults += 1
+                        err = fault_errors.Unavailable(
+                            f"tenant {tid!r} WAL append failed; chunk "
+                            f"not applied",
+                            retry_after=self._queue._flush_deadline_s
+                            or 1e-3)
+                        err.__cause__ = e
+                        errors[tid] = err
+                        continue
                     appended.append(h)
-        results = self._engine.apply_chunks(requests)
+                live.append((tid, kind, u, v))
+        results = self._engine.apply_chunks(live) if live else {}
         with self._lock:
             for h in appended:
                 if isinstance(results.get(h.tid), Exception):
                     h.wal.rollback_last()
+        results.update(errors)
         return results
 
     def flush(self):
@@ -378,6 +407,7 @@ class MultiTenantService:
             tel["resident"] = h.resident
             tel["evictions"] = h.evictions
             tel["rehydrations"] = h.rehydrations
+            tel["wal_faults"] = h.wal_faults
             if h.wal is not None:
                 tel["wal"] = h.wal.stats()
             return tel
